@@ -1,0 +1,33 @@
+"""Fig. 7 + §IV-B: portability — on-demand BeeGFS over 8 local NVMe disks on
+Ault (1 mgmt, 2 metadata, 5 storage; client co-located). Peaks: 13.70 GB/s
+write / 20.36 GB/s read file-per-process (C9).
+"""
+
+from __future__ import annotations
+
+import tempfile
+
+from repro.core import EphemeralFS, Workload, ault_cluster, ault_efs, predict_read, predict_write
+
+from .common import MiB, functional_io_us
+
+SIZES_MB = (4, 32, 128, 512)
+
+
+def rows():
+    node = ault_cluster().storage_nodes[0]
+    fs = EphemeralFS((node,), tempfile.mkdtemp(prefix="bench-ault-"),
+                     md_disks_per_node=2, storage_disks_per_node=5)
+    us = functional_io_us(fs, n_procs=4)
+    assert len(fs.storage_services) == 5 and len(fs.md_services) == 2
+    fs.teardown()
+    d = ault_efs()
+    out = []
+    for sp in SIZES_MB:
+        for pattern in ("shared", "fpp"):
+            w = Workload(n_procs=22, size_per_proc=sp * MiB, pattern=pattern)
+            out.append((f"ault/write/{pattern}/{sp}MB", us,
+                        f"{predict_write(w, d).bandwidth/1e9:.2f}GBps"))
+            out.append((f"ault/read/{pattern}/{sp}MB", us,
+                        f"{predict_read(w, d).bandwidth/1e9:.2f}GBps"))
+    return out

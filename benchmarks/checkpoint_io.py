@@ -1,0 +1,52 @@
+"""Beyond-paper: checkpoint burst-buffer economics.
+
+Derived metric: modeled checkpoint stall (write train state to the
+provisioned EphemeralFS, file-per-shard) vs writing straight to Lustre, for
+paper-hardware deployments and a range of model-state sizes. This is the
+§III-B use-case the paper motivates but never measures.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.core import Workload, dom_efs, dom_lustre, predict_write
+
+from .common import mk_efs, time_us
+
+GB = 1e9
+# (name, state_bytes): 1B dense fp32+opt ~ 16 GB; 30B bf16+sharded-opt ~ 480GB
+STATES = (("1b-fp32-opt", 16 * GB), ("7b", 112 * GB), ("30b", 480 * GB))
+SHARDS = 256  # one file per host-shard (C3: FPP is the fast path)
+
+
+def rows():
+    # functional: real sharded save/restore through EphemeralFS
+    efs = mk_efs(2)
+    mgr = CheckpointManager(efs)
+    tree = {"p": {f"l{i}": jnp.ones((64, 64)) for i in range(8)}}
+
+    step_holder = [0]
+
+    def save():
+        step_holder[0] += 1
+        mgr.save(step_holder[0], tree)
+
+    us = time_us(save, repeat=2)
+    restored, _ = mgr.restore(tree)
+    assert jax.tree.all(jax.tree.map(lambda a, b: bool((a == b).all()), restored, tree))
+    efs.teardown()
+
+    out = []
+    for name, nbytes in STATES:
+        w = Workload(n_procs=SHARDS, size_per_proc=nbytes / SHARDS, pattern="fpp")
+        for fs_name, dep, nodes in (
+            ("burst2dw", dom_efs(2), 2),
+            ("burst4dw", dom_efs(4), 4),
+            ("lustre", dom_lustre(), 2),
+        ):
+            t = predict_write(w, dep).elapsed_s
+            out.append((f"ckpt_stall/{fs_name}/{name}", us, f"{t:.1f}s"))
+    return out

@@ -1,0 +1,49 @@
+"""Shared benchmark plumbing.
+
+Every benchmark module exposes ``rows() -> list[(name, us_per_call, derived)]``
+where ``us_per_call`` is a measured in-container wall time for the functional
+path (real bytes through EphemeralFS/GlobalFS at reduced scale) and
+``derived`` is the paper-scale modeled metric (GB/s, ops/s, seconds).
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+from typing import Callable
+
+from repro.core import EphemeralFS, GlobalFS, dom_cluster
+
+MiB = 1 << 20
+
+
+def time_us(fn: Callable, *, repeat: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def mk_efs(n_nodes: int = 2, **kw) -> EphemeralFS:
+    nodes = dom_cluster().storage_nodes[:n_nodes]
+    return EphemeralFS(nodes, tempfile.mkdtemp(prefix="bench-efs-"), **kw)
+
+
+def mk_lustre(**kw) -> GlobalFS:
+    return GlobalFS(tempfile.mkdtemp(prefix="bench-lfs-"), **kw)
+
+
+def functional_io_us(fs, n_procs: int = 4, size: int = 256 * 1024) -> float:
+    """Timed miniature of the paper's IOR run: n_procs ranks write then read
+    a shared file through the real chunk/metadata path."""
+    fs.create("/bench-shared")
+
+    def run():
+        for rank in range(n_procs):
+            fs.write("/bench-shared", rank * size, b"x" * size)
+        for rank in range(n_procs):
+            fs.read("/bench-shared", rank * size, size)
+
+    return time_us(run, repeat=2)

@@ -1,0 +1,47 @@
+"""§IV-A1 / §IV-B1: deployment time of the containerized on-demand FS.
+
+5.37 s over 2 DataWarp nodes (Shifter); 4.6 s fresh / 1.2 s warm over the
+8 Ault disks (local docker) — C8. Functional deploy wallclock measured too.
+"""
+
+from __future__ import annotations
+
+import tempfile
+
+from repro.core import (
+    JobRequest,
+    Provisioner,
+    Scheduler,
+    StorageRequest,
+    dom_cluster,
+    predict_deploy_time,
+)
+
+from .common import time_us
+
+
+def rows():
+    cluster = dom_cluster()
+    sched = Scheduler(cluster)
+    alloc = sched.submit(JobRequest("bench", 1, storage=StorageRequest(nodes=2)))
+    prov = Provisioner(cluster)
+    plan = prov.plan_for(alloc)
+    base = tempfile.mkdtemp(prefix="bench-deploy-")
+
+    deps = []
+
+    def deploy():
+        deps.append(prov.deploy(plan, base))
+
+    us = time_us(deploy, repeat=2)
+    for d in deps:
+        d.teardown()
+    sched.release(alloc)
+    return [
+        ("deploy/dom-2dw-shifter", us,
+         f"{predict_deploy_time(3, runtime='shifter'):.2f}s"),
+        ("deploy/ault-8disk-fresh", us,
+         f"{predict_deploy_time(8, runtime='docker'):.2f}s"),
+        ("deploy/ault-8disk-warm", us,
+         f"{predict_deploy_time(8, runtime='docker', fresh=False):.2f}s"),
+    ]

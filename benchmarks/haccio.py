@@ -1,0 +1,47 @@
+"""Fig. 6: HACC-IO (38-byte AoS particles, single shared file, 288 procs).
+
+BeeGFS peaks 5.3 GB/s write / 9.1 GB/s read up to 42 GB files; Lustre
+collapses below 1 / 0.4 GB/s on the unaligned record stream (C7).
+"""
+
+from __future__ import annotations
+
+from repro.core import dom_efs, dom_lustre, hacc_workload, predict_read, predict_write
+from repro.core.perfmodel import HACC_PARTICLE_BYTES
+
+from .common import mk_efs, time_us
+
+PARTICLES = (100_000, 500_000, 1_000_000, 2_000_000, 4_000_000)
+
+
+def _functional_aos_us(fs, particles: int = 2000, n_procs: int = 4) -> float:
+    """Real AoS writes: per-proc contiguous particle blocks, 38 B records."""
+    fs.create("/hacc")
+    rec = b"p" * HACC_PARTICLE_BYTES
+
+    def run():
+        for rank in range(n_procs):
+            fs.write("/hacc", rank * particles * HACC_PARTICLE_BYTES,
+                     rec * particles)
+        for rank in range(n_procs):
+            fs.read("/hacc", rank * particles * HACC_PARTICLE_BYTES,
+                    particles * HACC_PARTICLE_BYTES)
+
+    return time_us(run, repeat=2)
+
+
+def rows():
+    out = []
+    efs = mk_efs(2)
+    us = _functional_aos_us(efs)
+    efs.teardown()
+    d_efs, d_lus = dom_efs(2), dom_lustre()
+    for np_ in PARTICLES:
+        w = hacc_workload(288, np_)
+        gb = w.total_bytes / 1e9
+        for fs_name, d in (("beegfs2dw", d_efs), ("lustre", d_lus)):
+            out.append((f"haccio/write/{fs_name}/{gb:.0f}GB", us,
+                        f"{predict_write(w, d).bandwidth/1e9:.2f}GBps"))
+            out.append((f"haccio/read/{fs_name}/{gb:.0f}GB", us,
+                        f"{predict_read(w, d).bandwidth/1e9:.2f}GBps"))
+    return out

@@ -1,0 +1,31 @@
+"""Fig. 3: IOR file-per-process bandwidth vs size-per-process.
+
+Peak write 11.96 GB/s = 93% of the 12.8 GB/s raw aggregate (C3);
+~1.7x the shared-file peak (C4).
+"""
+
+from __future__ import annotations
+
+from repro.core import Workload, dom_efs, dom_lustre, predict_read, predict_write
+
+from .common import MiB, functional_io_us, mk_efs
+
+SIZES_MB = (4, 16, 32, 64, 128, 256, 512, 1024)
+
+
+def rows():
+    out = []
+    efs = mk_efs(2)
+    us = functional_io_us(efs)
+    efs.teardown()
+    d_efs, d_lus = dom_efs(2), dom_lustre()
+    for sp in SIZES_MB:
+        w = Workload(n_procs=288, size_per_proc=sp * MiB, pattern="fpp")
+        for fs_name, d in (("beegfs2dw", d_efs), ("lustre", d_lus)):
+            wr = predict_write(w, d)
+            rd = predict_read(w, d)
+            out.append((f"ior_fpp/write/{fs_name}/{sp}MB", us,
+                        f"{wr.bandwidth/1e9:.2f}GBps"))
+            out.append((f"ior_fpp/read/{fs_name}/{sp}MB", us,
+                        f"{rd.bandwidth/1e9:.2f}GBps"))
+    return out

@@ -1,0 +1,66 @@
+"""Kernel microbenchmarks: Pallas (interpret mode on CPU — correctness
+harness, not TPU timing) vs the jnp reference, plus algorithmic intensity
+derived for the TPU target.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from .common import time_us
+
+
+def rows():
+    out = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 512, 8, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 512, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 512, 2, 64), jnp.float32)
+
+    f_ref = jax.jit(lambda: ref.flash_attention_ref(q, k, v))
+    f_ker = jax.jit(lambda: ops.flash_attention(q, k, v))
+    f_ref()  # compile
+    f_ker()
+    flops = 4 * 512 * 512 * 8 * 64  # qk + pv
+    ai = flops / (3 * q.size * 4 + q.size * 4)
+    out.append(("kernel/flash_attn/ref-jnp",
+                time_us(lambda: jax.block_until_ready(f_ref())),
+                f"AI={ai:.0f}flops/B"))
+    out.append(("kernel/flash_attn/pallas-interpret",
+                time_us(lambda: jax.block_until_ready(f_ker())),
+                f"AI={ai:.0f}flops/B"))
+
+    qd = jax.random.normal(ks[0], (4, 1, 8, 64), jnp.float32)
+    d_ref = jax.jit(lambda: ref.decode_attention_ref(qd, k.repeat(4, 0), v.repeat(4, 0), kv_len=500))
+    d_ker = jax.jit(lambda: ops.decode_attention(qd, k.repeat(4, 0), v.repeat(4, 0), kv_len=500))
+    d_ref(); d_ker()
+    out.append(("kernel/decode_attn/ref-jnp",
+                time_us(lambda: jax.block_until_ready(d_ref())), "membound"))
+    out.append(("kernel/decode_attn/pallas-interpret",
+                time_us(lambda: jax.block_until_ready(d_ker())), "membound"))
+
+    la = -jnp.abs(jax.random.normal(ks[0], (1, 4, 128, 8))) * 0.1
+    C = jax.random.normal(ks[1], (1, 4, 128, 64))
+    Bm = jax.random.normal(ks[2], (1, 4, 128, 64))
+    x = jax.random.normal(ks[0], (1, 4, 128, 8, 64))
+    s_ref = jax.jit(lambda: ref.ssd_intra_chunk_ref(la, C, Bm, x))
+    s_ker = jax.jit(lambda: ops.ssd_intra_chunk(la, C, Bm, x))
+    s_ref(); s_ker()
+    out.append(("kernel/ssd_chunk/ref-jnp",
+                time_us(lambda: jax.block_until_ready(s_ref())), "mxu"))
+    out.append(("kernel/ssd_chunk/pallas-interpret",
+                time_us(lambda: jax.block_until_ready(s_ker())), "mxu"))
+
+    xx = jax.random.normal(ks[0], (256, 2048), jnp.float32)
+    sc = jnp.ones((2048,))
+    r_ref = jax.jit(lambda: ref.rmsnorm_ref(xx, sc))
+    r_ker = jax.jit(lambda: ops.rmsnorm(xx, sc))
+    r_ref(); r_ker()
+    out.append(("kernel/rmsnorm/ref-jnp",
+                time_us(lambda: jax.block_until_ready(r_ref())), "membound"))
+    out.append(("kernel/rmsnorm/pallas-interpret",
+                time_us(lambda: jax.block_until_ready(r_ker())), "membound"))
+    return out

@@ -1,0 +1,39 @@
+"""Tables I & II: mdtest metadata op rates — modeled rates from the
+calibrated tables; the functional path counts real metadata ops through the
+sharded metadata services.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import ault_efs, dom_efs, dom_lustre, predict_mdtest
+
+from .common import mk_efs
+
+
+def _functional_md_us(fs, n: int = 200) -> float:
+    t0 = time.perf_counter()
+    fs.mkdir("/md")
+    for i in range(n):
+        fs.create(f"/md/f{i}")
+    for i in range(n):
+        fs.stat(f"/md/f{i}")
+    for i in range(n):
+        fs.unlink(f"/md/f{i}")
+    return (time.perf_counter() - t0) * 1e6 / (3 * n)
+
+
+def rows():
+    out = []
+    efs = mk_efs(2)
+    us = _functional_md_us(efs)
+    ops_total = sum(sum(s.ops.values()) for s in efs.md_services)
+    assert ops_total > 0
+    efs.teardown()
+    for dep_name, dep in (("beegfs2dw", dom_efs(2)),
+                          ("lustre", dom_lustre()),
+                          ("beegfs-ault", ault_efs())):
+        for (target, op), rate in predict_mdtest(dep).items():
+            out.append((f"mdtest/{dep_name}/{target}-{op}", us, f"{rate:.0f}ops"))
+    return out

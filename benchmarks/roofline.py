@@ -1,0 +1,88 @@
+"""§Roofline reader: aggregates dry-run artifacts into the roofline table.
+
+Run the dry-runs first (``python -m repro.launch.dryrun --arch all [--multi-pod]``);
+this module only reads artifacts/dryrun/*.json.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_records(mesh: str | None = None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r["mesh"] != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def rows():
+    out = []
+    for r in load_records():
+        if r["variant"] != "baseline":
+            continue
+        t = r["terms"]
+        dom = r["dominant"].replace("_s", "")
+        frac = r.get("roofline_fraction")
+        out.append((
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            t["compute_s"] * 1e6,
+            f"dom={dom};frac={frac:.3f};coll={t['collective_s']*1e3:.1f}ms",
+        ))
+    return out
+
+
+def table(mesh="16x16"):
+    hdr = (f"{'arch':24s} {'shape':12s} {'comp_ms':>9s} {'mem_ms':>9s} "
+           f"{'coll_ms':>10s} {'dominant':>11s} {'MFLOPratio':>10s} {'fit16G':>6s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in load_records(mesh):
+        if r["variant"] != "baseline":
+            continue
+        t = r["terms"]
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {t['compute_s']*1e3:9.2f} "
+            f"{t['memory_s']*1e3:9.2f} {t['collective_s']*1e3:10.2f} "
+            f"{r['dominant'].replace('_s',''):>11s} "
+            f"{(r['useful_flops_ratio'] or 0):10.3f} "
+            f"{str(r['memory']['peak_ok_16GiB']):>6s}"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(table())
+
+
+def variants_table():
+    """§Perf companion: baseline vs optimized-variant cells side by side."""
+    base = {}
+    opt = []
+    for r in load_records("16x16"):
+        key = (r["arch"], r["shape"])
+        if r["variant"] == "baseline":
+            base[key] = r
+        else:
+            opt.append(r)
+    lines = [f"{'cell':38s} {'variant':28s} {'coll_ms base':>12s} {'coll_ms opt':>12s} {'delta':>7s}"]
+    lines.append("-" * len(lines[0]))
+    for r in sorted(opt, key=lambda x: (x["arch"], x["shape"], x["variant"])):
+        b = base.get((r["arch"], r["shape"]))
+        if not b:
+            continue
+        cb = b["terms"]["collective_s"] * 1e3
+        co = r["terms"]["collective_s"] * 1e3
+        delta = (co - cb) / cb * 100 if cb else 0.0
+        lines.append(
+            f"{r['arch'] + '/' + r['shape']:38s} {r['variant']:28s} "
+            f"{cb:12.2f} {co:12.2f} {delta:+6.1f}%"
+        )
+    return "\n".join(lines)

@@ -1,0 +1,54 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call = functional in-container
+timing at reduced scale; derived = paper-scale modeled metric).
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (
+        ault,
+        checkpoint_io,
+        deployment,
+        haccio,
+        ior_fpp,
+        ior_shared,
+        kernels_bench,
+        mdtest,
+        roofline,
+        scalability,
+    )
+
+    modules = [
+        ("ior_shared", ior_shared),        # Fig. 2
+        ("ior_fpp", ior_fpp),              # Fig. 3
+        ("scalability", scalability),      # Fig. 4
+        ("mdtest", mdtest),                # Tables I, II
+        ("haccio", haccio),                # Fig. 6
+        ("ault", ault),                    # Fig. 7
+        ("deployment", deployment),        # §IV-A1/B1
+        ("checkpoint_io", checkpoint_io),  # beyond-paper (§III-B use-case)
+        ("kernels", kernels_bench),
+        ("roofline", roofline),            # §Roofline (reads dry-run artifacts)
+    ]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in modules:
+        try:
+            for row_name, us, derived in mod.rows():
+                print(f"{row_name},{us:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append((name, repr(e)))
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

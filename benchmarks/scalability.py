@@ -1,0 +1,26 @@
+"""Fig. 4: bandwidth scaling of the on-demand BeeGFS from 1 to 4 DataWarp
+nodes (metadata:storage disk ratio fixed at 1:2). Shared-file write scales
+logarithmically (~3x from 1->2, +30% from 2->4 — C5); FPP scales linearly.
+"""
+
+from __future__ import annotations
+
+from repro.core import Workload, dom_efs, predict_read, predict_write
+
+from .common import MiB, functional_io_us, mk_efs
+
+
+def rows():
+    out = []
+    for n in (1, 2, 4):
+        efs = mk_efs(n)
+        us = functional_io_us(efs)
+        efs.teardown()
+        d = dom_efs(n)
+        for pattern in ("shared", "fpp"):
+            w = Workload(n_procs=288, size_per_proc=256 * MiB, pattern=pattern)
+            out.append((f"scalability/write/{pattern}/{n}nodes", us,
+                        f"{predict_write(w, d).peak_bandwidth/1e9:.2f}GBps"))
+            out.append((f"scalability/read/{pattern}/{n}nodes", us,
+                        f"{predict_read(w, d).peak_bandwidth/1e9:.2f}GBps"))
+    return out

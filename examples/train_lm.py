@@ -1,0 +1,27 @@
+"""End-to-end training driver on dynamically provisioned storage.
+
+Wraps ``repro.launch.train``: allocate + provision, stage the corpus in,
+train an LM with burst-tier checkpoints drained to the global FS, then
+demonstrate crash-restart (--resume restores the newest committed step).
+
+Any assigned architecture works via --arch (reduced config by default so it
+runs on CPU; --full selects the published config for real clusters).
+
+Run:  PYTHONPATH=src python examples/train_lm.py -- --steps 40
+      PYTHONPATH=src python examples/train_lm.py -- --arch qwen3-14b --steps 20
+"""
+
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    if args and args[0] == "--":
+        args = args[1:]
+    if not args:
+        args = ["--arch", "granite-moe-1b-a400m", "--steps", "30",
+                "--batch", "8", "--seq", "128", "--ckpt-every", "10"]
+    result = main(args)
+    print(f"final: held-batch loss {result['eval_before']:.3f} -> "
+          f"{result['eval_after']:.3f}; committed checkpoint steps {result['steps']}")

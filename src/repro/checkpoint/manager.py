@@ -1,0 +1,175 @@
+"""Checkpointing on dynamically provisioned storage — the paper's motivating
+use-case (§III-B mentions the Burst-Buffer plugin exists for check-pointing)
+built as a first-class subsystem.
+
+Design informed by the paper's measurements:
+  * **file-per-shard layout** (C3/C4: file-per-process reaches ~93% of raw
+    disk bandwidth vs ~55% for a single shared file) — each pytree leaf
+    (or leaf slab) is its own object;
+  * **burst then drain**: save() lands on the provisioned EphemeralFS at
+    burst-tier speed; drain_to() copies a committed checkpoint to the global
+    FS in the background of training (the paper's stage-out);
+  * **two-phase commit**: data files + manifest first, then a COMMIT marker;
+    restore() only considers committed steps, so a mid-save crash is
+    harmless (tested).
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from ..core.client import FSClient
+from ..core.datamanager import DataManager, FSError
+from ..core.staging import stage
+
+
+def _flatten_with_paths(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+class CheckpointManager:
+    def __init__(
+        self,
+        burst: DataManager,
+        root: str = "/ckpt",
+        *,
+        global_fs: Optional[DataManager] = None,
+        global_root: str = "/persist/ckpt",
+        keep: int = 3,
+    ):
+        self.burst = burst
+        self.client = FSClient(burst, "ckpt")
+        self.root = root.rstrip("/")
+        self.global_fs = global_fs
+        self.global_root = global_root.rstrip("/")
+        self.keep = keep
+        self._drains: list = []
+        self.client.makedirs(self.root)
+
+    # -- save -----------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return f"{self.root}/step-{step:08d}"
+
+    def save(self, step: int, tree: Any, *, extra: dict | None = None) -> dict:
+        """Write a sharded checkpoint; returns manifest dict."""
+        d = self._step_dir(step)
+        self.client.makedirs(d)
+        leaves = _flatten_with_paths(tree)
+        manifest = {"step": step, "leaves": [], "extra": extra or {}}
+        total = 0
+        for key, leaf in leaves:
+            arr = np.asarray(leaf)
+            fname = key.replace("/", ".") + ".npy"
+            buf = io.BytesIO()
+            np.save(buf, arr, allow_pickle=False)
+            data = buf.getvalue()
+            self.client.write_file(f"{d}/{fname}", data)
+            manifest["leaves"].append(
+                {"key": key, "file": fname, "shape": list(arr.shape),
+                 "dtype": str(arr.dtype), "bytes": len(data)}
+            )
+            total += len(data)
+        manifest["total_bytes"] = total
+        self.client.write_file(f"{d}/manifest.json", json.dumps(manifest).encode())
+        # two-phase commit marker
+        self.client.write_file(f"{d}/COMMIT", b"ok")
+        self._gc()
+        return manifest
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[: -self.keep]:
+            self._rm_tree(self._step_dir(s))
+
+    def _rm_tree(self, d: str) -> None:
+        try:
+            names = self.client.readdir(d)
+        except FSError:
+            return
+        for n in names:
+            p = f"{d}/{n}"
+            if self.client.stat(p).is_dir:
+                self._rm_tree(p)
+            else:
+                self.client.unlink(p)
+        self.client.rmdir(d)
+
+    # -- restore ----------------------------------------------------------
+    def steps(self) -> list[int]:
+        """Committed steps, ascending."""
+        out = []
+        for name in self.client.readdir(self.root):
+            if not name.startswith("step-"):
+                continue
+            d = f"{self.root}/{name}"
+            if self.client.exists(f"{d}/COMMIT"):
+                out.append(int(name.split("-")[1]))
+        return sorted(out)
+
+    def restore(self, tree_like: Any, step: Optional[int] = None) -> tuple[Any, int]:
+        steps = self.steps()
+        if not steps:
+            raise FSError("no committed checkpoints")
+        step = steps[-1] if step is None else step
+        if step not in steps:
+            raise FSError(f"step {step} not committed (have {steps})")
+        d = self._step_dir(step)
+        manifest = json.loads(self.client.read_file(f"{d}/manifest.json"))
+        by_key = {m["key"]: m for m in manifest["leaves"]}
+        leaves = _flatten_with_paths(tree_like)
+        out = []
+        for key, like in leaves:
+            m = by_key[key]
+            raw = self.client.read_file(f"{d}/{m['file']}")
+            arr = np.load(io.BytesIO(raw), allow_pickle=False)
+            out.append(jax.numpy.asarray(arr))
+        restored = jax.tree.unflatten(jax.tree.structure(tree_like), out)
+        return restored, step
+
+    # -- drain (stage-out to the global FS) -------------------------------
+    def drain_async(self, step: int) -> threading.Thread:
+        """Start the drain off the training path; join() the returned thread
+        (or call wait_drains) before tearing the burst tier down."""
+        t = threading.Thread(target=self.drain_to_global, args=(step,),
+                             name=f"ckpt-drain-{step}", daemon=True)
+        self._drains.append(t)
+        t.start()
+        return t
+
+    def wait_drains(self) -> None:
+        for t in self._drains:
+            t.join()
+        self._drains.clear()
+
+    def drain_to_global(self, step: int) -> dict:
+        if self.global_fs is None:
+            raise FSError("no global FS configured")
+        d = self._step_dir(step)
+        names = self.client.readdir(d)
+        dst = f"{self.global_root}/step-{step:08d}"
+        pairs = [(f"{d}/{n}", f"{dst}/{n}") for n in names if n != "COMMIT"]
+        rep = stage(self.burst, self.global_fs, pairs, direction="out")
+        FSClient(self.global_fs, "ckpt-drain").write_file(f"{dst}/COMMIT", b"ok")
+        return {"files": rep.files, "bytes": rep.bytes,
+                "modeled_time_s": rep.modeled_time_s}

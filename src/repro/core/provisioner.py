@@ -1,0 +1,164 @@
+"""Provisioner: turns a storage allocation into a running data manager
+(paper §III-C: container started with Shifter on each storage node; an
+entry-point script renders per-service config files and starts daemons).
+
+The functional deployment instantiates :class:`EphemeralFS`; the deployment
+*time* is modeled (C8: 5.37 s over 2 DataWarp nodes on Dom; 4.6 s fresh /
+1.2 s warm over 8 local disks on Ault).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+import time
+from typing import Literal, Optional
+
+from .client import FSClient
+from .datamanager import FSError
+from .ephemeralfs import EphemeralFS
+from .perfmodel import FSDeployment, predict_deploy_time
+from .resources import ClusterSpec, StorageNode
+from .scheduler import Allocation, SizingPolicy
+from .striping import DEFAULT_STRIPE
+
+
+@dataclasses.dataclass(frozen=True)
+class DeploymentPlan:
+    """Rendered 'container + entrypoint config' for one job's storage."""
+
+    storage_nodes: tuple[StorageNode, ...]
+    md_disks_per_node: int = 1
+    storage_disks_per_node: int = 2
+    stripe_size: int = DEFAULT_STRIPE
+    mirror: bool = False
+    runtime: Literal["shifter", "docker"] = "shifter"
+    image: str = "cscs/beegfs-ondemand:7.1"
+
+    @property
+    def targets_per_node(self) -> int:
+        return self.md_disks_per_node + self.storage_disks_per_node
+
+    @property
+    def n_storage_targets(self) -> int:
+        return self.storage_disks_per_node * len(self.storage_nodes)
+
+    def render_service_config(self) -> dict:
+        """The paper's entrypoint python script writes beegfs-{mgmtd,meta,
+        storage,mon}.conf per node; we render the equivalent dict."""
+        mgmt_node = self.storage_nodes[0].node_id
+        cfg: dict = {
+            "mgmtd": {"node": mgmt_node, "port": 8008},
+            "mon": {"node": mgmt_node, "port": 8009},
+            "meta": [],
+            "storage": [],
+        }
+        for node in self.storage_nodes:
+            for d in range(self.md_disks_per_node):
+                cfg["meta"].append(
+                    {
+                        "node": node.node_id,
+                        "store": f"/mnt/nvme{d}n1/meta",
+                        "mgmtd": mgmt_node,
+                        "xattr": True,
+                    }
+                )
+            for d in range(self.md_disks_per_node, self.targets_per_node):
+                cfg["storage"].append(
+                    {
+                        "node": node.node_id,
+                        "store": f"/mnt/nvme{d}n1/storage",
+                        "mgmtd": mgmt_node,
+                    }
+                )
+        return cfg
+
+
+@dataclasses.dataclass
+class Deployment:
+    """A live, job-scoped data manager."""
+
+    plan: DeploymentPlan
+    fs: EphemeralFS
+    model: FSDeployment              # analytic view for the perfmodel
+    deploy_time_s: float             # modeled (C8)
+    wallclock_deploy_s: float        # actual in-container time (functional)
+    base_dir: str
+
+    def mount(self, client_id: str = "client0") -> FSClient:
+        return FSClient(self.fs, client_id)
+
+    def teardown(self) -> None:
+        self.fs.teardown()
+
+
+class Provisioner:
+    """Deploys a data manager on the storage nodes of an allocation."""
+
+    def __init__(self, cluster: ClusterSpec, policy: SizingPolicy | None = None):
+        self.cluster = cluster
+        self.policy = policy or SizingPolicy()
+        # warm-tree cache: base dirs we have deployed into before (paper
+        # §IV-B1: re-deploying over an existing tree takes 1.2 s vs 4.6 s).
+        self._seen_trees: set[str] = set()
+
+    def plan_for(
+        self,
+        alloc: Allocation,
+        *,
+        mirror: bool = False,
+        stripe_size: int = DEFAULT_STRIPE,
+        md_disks_per_node: Optional[int] = None,
+        storage_disks_per_node: Optional[int] = None,
+        runtime: Literal["shifter", "docker"] = "shifter",
+    ) -> DeploymentPlan:
+        if not alloc.storage_nodes:
+            raise FSError("allocation has no storage nodes")
+        return DeploymentPlan(
+            storage_nodes=alloc.storage_nodes,
+            md_disks_per_node=md_disks_per_node or self.policy.metadata_disks_per_node,
+            storage_disks_per_node=storage_disks_per_node
+            or self.policy.storage_disks_per_node,
+            stripe_size=stripe_size,
+            mirror=mirror,
+            runtime=runtime,
+        )
+
+    def deploy(self, plan: DeploymentPlan, base_dir: Optional[str] = None) -> Deployment:
+        base_dir = base_dir or tempfile.mkdtemp(prefix="efs-")
+        fresh = base_dir not in self._seen_trees or not os.path.isdir(base_dir)
+        t0 = time.perf_counter()
+        plan.render_service_config()      # the entrypoint work
+        fs = EphemeralFS(
+            plan.storage_nodes,
+            base_dir,
+            md_disks_per_node=plan.md_disks_per_node,
+            storage_disks_per_node=plan.storage_disks_per_node,
+            stripe_size=plan.stripe_size,
+            mirror=plan.mirror,
+        )
+        wall = time.perf_counter() - t0
+        self._seen_trees.add(base_dir)
+        node0 = plan.storage_nodes[0]
+        model = FSDeployment(
+            kind="ephemeral",
+            n_nodes=len(plan.storage_nodes),
+            storage_targets=plan.n_storage_targets,
+            md_targets=plan.md_disks_per_node * len(plan.storage_nodes),
+            disk=node0.disks[plan.md_disks_per_node].spec,
+            node_dram=node0.dram_bytes,
+            net=self.cluster.interconnect,
+            local_client=self.cluster.name == "ault",
+        )
+        t_model = predict_deploy_time(
+            plan.targets_per_node, runtime=plan.runtime, fresh=fresh
+        )
+        return Deployment(
+            plan=plan,
+            fs=fs,
+            model=model,
+            deploy_time_s=t_model,
+            wallclock_deploy_s=wall,
+            base_dir=base_dir,
+        )

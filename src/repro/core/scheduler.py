@@ -1,0 +1,169 @@
+"""Batch scheduler with storage as an allocatable resource (paper §III-A/B).
+
+The paper's key move: instead of the rigid SLURM Burst-Buffer plugin, the
+re-purposed DataWarp nodes are exposed through a plain SLURM *constraint*
+(``--constraint=storage``), so a job requests two allocations -- compute nodes
+and storage nodes -- through the ordinary scheduler path.
+
+This module reproduces that model and adds the paper's §V sizing trade-off as
+a first-class request: a job may ask for storage by **node count**, by
+**capacity** (bytes), or by **capability** (bandwidth); the scheduler resolves
+capacity/capability to a node count using the deployment policy (how many
+disks per node take the storage role).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Optional
+
+from .resources import ClusterSpec, ComputeNode, StorageNode
+
+
+class AllocationError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class StorageRequest:
+    """Exactly one of ``nodes`` / ``capacity_bytes`` / ``capability_bw`` must
+    be set (the paper's §V: users target either quantity of bytes or speed)."""
+
+    nodes: Optional[int] = None
+    capacity_bytes: Optional[float] = None
+    capability_bw: Optional[float] = None      # aggregate write B/s target
+
+    def __post_init__(self) -> None:
+        n_set = sum(x is not None for x in (self.nodes, self.capacity_bytes, self.capability_bw))
+        if n_set != 1:
+            raise ValueError("set exactly one of nodes/capacity_bytes/capability_bw")
+
+
+@dataclasses.dataclass(frozen=True)
+class JobRequest:
+    job_name: str
+    n_compute: int
+    storage: Optional[StorageRequest] = None
+    constraint: str = "storage"
+
+
+@dataclasses.dataclass(frozen=True)
+class Allocation:
+    job_id: int
+    job_name: str
+    compute_nodes: tuple[ComputeNode, ...]
+    storage_nodes: tuple[StorageNode, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class SizingPolicy:
+    """How storage requests map to nodes. The paper's default layout is one
+    metadata disk + two storage disks per DataWarp node (§IV-A)."""
+
+    storage_disks_per_node: int = 2
+    metadata_disks_per_node: int = 1
+
+    def nodes_for_capacity(self, node: StorageNode, capacity: float) -> int:
+        per_node = sum(
+            d.spec.capacity_bytes for d in node.disks[: self.storage_disks_per_node]
+        )
+        return max(1, math.ceil(capacity / per_node))
+
+    def nodes_for_capability(self, node: StorageNode, bw: float) -> int:
+        per_node = sum(
+            d.spec.write_bw for d in node.disks[: self.storage_disks_per_node]
+        )
+        return max(1, math.ceil(bw / per_node))
+
+
+class Scheduler:
+    """FIFO allocator over a static cluster inventory.
+
+    Invariants (property-tested):
+      * a node is never in two live allocations;
+      * ``release`` returns every node of the allocation to the free pool;
+      * storage nodes are only granted to requests carrying the storage
+        constraint (the paper's access-control mechanism).
+    """
+
+    def __init__(self, cluster: ClusterSpec, policy: SizingPolicy | None = None):
+        self.cluster = cluster
+        self.policy = policy or SizingPolicy()
+        self._free_compute = {n.node_id: n for n in cluster.compute_nodes}
+        self._free_storage = {n.node_id: n for n in cluster.storage_nodes}
+        self._live: dict[int, Allocation] = {}
+        self._next_id = itertools.count(1)
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def live_allocations(self) -> tuple[Allocation, ...]:
+        return tuple(self._live.values())
+
+    def free_counts(self) -> tuple[int, int]:
+        return len(self._free_compute), len(self._free_storage)
+
+    # -- sizing (paper §V trade-off) ----------------------------------------
+    def resolve_storage_nodes(self, req: StorageRequest) -> int:
+        if not self.cluster.storage_nodes:
+            raise AllocationError("cluster has no storage nodes")
+        proto = self.cluster.storage_nodes[0]
+        if req.nodes is not None:
+            return req.nodes
+        if req.capacity_bytes is not None:
+            return self.policy.nodes_for_capacity(proto, req.capacity_bytes)
+        assert req.capability_bw is not None
+        return self.policy.nodes_for_capability(proto, req.capability_bw)
+
+    # -- allocation ----------------------------------------------------------
+    def submit(self, req: JobRequest) -> Allocation:
+        if req.n_compute > len(self._free_compute):
+            raise AllocationError(
+                f"{req.job_name}: wants {req.n_compute} compute nodes, "
+                f"{len(self._free_compute)} free"
+            )
+        n_storage = 0
+        if req.storage is not None:
+            if req.constraint != "storage":
+                raise AllocationError(
+                    f"{req.job_name}: storage request without storage constraint"
+                )
+            n_storage = self.resolve_storage_nodes(req.storage)
+            if n_storage > len(self._free_storage):
+                raise AllocationError(
+                    f"{req.job_name}: wants {n_storage} storage nodes, "
+                    f"{len(self._free_storage)} free"
+                )
+
+        compute = [self._free_compute.pop(k) for k in sorted(self._free_compute)[: req.n_compute]]
+        storage = [self._free_storage.pop(k) for k in sorted(self._free_storage)[:n_storage]]
+        alloc = Allocation(next(self._next_id), req.job_name, tuple(compute), tuple(storage))
+        self._live[alloc.job_id] = alloc
+        return alloc
+
+    def release(self, alloc: Allocation) -> None:
+        if alloc.job_id not in self._live:
+            raise AllocationError(f"allocation {alloc.job_id} is not live")
+        del self._live[alloc.job_id]
+        for n in alloc.compute_nodes:
+            self._free_compute[n.node_id] = n
+        for n in alloc.storage_nodes:
+            self._free_storage[n.node_id] = n
+
+
+def size_for_checkpoint(
+    state_bytes: float,
+    stall_budget_s: float,
+    cluster: ClusterSpec,
+    policy: SizingPolicy | None = None,
+) -> StorageRequest:
+    """Beyond-paper helper: derive a capability request from a training job's
+    checkpoint size and the stall the job will tolerate per checkpoint.
+
+    ``bw >= state_bytes / stall_budget`` -- the scheduler then converts the
+    bandwidth target into a storage-node count via the sizing policy.
+    """
+    if stall_budget_s <= 0:
+        raise ValueError("stall budget must be positive")
+    return StorageRequest(capability_bw=state_bytes / stall_budget_s)

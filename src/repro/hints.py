@@ -1,0 +1,94 @@
+"""Mesh hints: lets model code place sharding constraints on activations
+without depending on the runtime layer (no-op when no mesh hint is set).
+
+Why: under GSPMD, projections whose flattened output dim is model-sharded
+(e.g. wk: (d, K*hd) with K*hd % tp == 0 but K % tp != 0) propagate a sharding
+that SPLITS THE HEAD DIMENSION after the (B,S,K,hd) reshape — every
+subsequent attention contraction then needs a per-block all-reduce (observed:
+100 MB x 4096 all-reduces in one train step). Constraining q/k/v to a
+head-aligned layout (heads sharded when divisible, replicated otherwise)
+keeps attention local at the cost of one well-placed resharding collective.
+"""
+
+from __future__ import annotations
+
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
+    "repro_mesh_hint", default=None
+)
+_FLAGS: contextvars.ContextVar[frozenset] = contextvars.ContextVar(
+    "repro_flags", default=frozenset()
+)
+
+
+def set_mesh_hint(mesh: Optional[Mesh]):
+    return _MESH.set(mesh)
+
+
+def get_mesh_hint() -> Optional[Mesh]:
+    return _MESH.get()
+
+
+def flag(name: str) -> bool:
+    """Trace-time feature flags (perf-variant switches, see dryrun --variant)."""
+    return name in _FLAGS.get()
+
+
+class mesh_hint:
+    def __init__(self, mesh: Optional[Mesh], flags: tuple = ()):
+        self.mesh = mesh
+        self.flags = frozenset(flags)
+
+    def __enter__(self):
+        self._tok = _MESH.set(self.mesh)
+        self._ftok = _FLAGS.set(self.flags)
+        return self.mesh
+
+    def __exit__(self, *exc):
+        _MESH.reset(self._tok)
+        _FLAGS.reset(self._ftok)
+        return False
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape.get(a, 1)
+    return size
+
+
+def constrain(x, *logical):
+    """Apply a sharding constraint. ``logical`` entries: None, "dp", "model".
+    Axes that don't exist in the mesh or don't divide the dim are dropped.
+    No-op without a mesh hint."""
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    spec = []
+    for dim, ax in zip(x.shape, logical):
+        if ax is None:
+            spec.append(None)
+            continue
+        if ax == "dp":
+            cand = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        else:
+            cand = (ax,) if ax in mesh.axis_names else ()
+        if not cand:
+            spec.append(None)
+            continue
+        # largest dividing prefix
+        chosen = None
+        for end in range(len(cand), 0, -1):
+            sub = cand[:end]
+            if dim % _axis_size(mesh, sub) == 0:
+                chosen = sub if len(sub) > 1 else sub[0]
+                break
+        spec.append(chosen)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+The paper (storage provisioning) has no kernel-level contribution; these
+kernels serve the training/serving stack built around it. See DESIGN.md §2.
+"""

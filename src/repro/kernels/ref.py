@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the source of truth in tests)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -2.0e38
+
+
+def flash_attention_ref(
+    q, k, v, *, causal: bool = True, window: Optional[int] = None
+) -> jnp.ndarray:
+    """q: (B,S,H,hd); k/v: (B,T,K,hd) GQA full-softmax reference."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * (hd ** -0.5)
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(T)[None, :]
+    ok = cols <= rows if causal else jnp.ones((S, T), bool)
+    if window is not None:
+        ok = ok & (cols > rows - window)
+    s = jnp.where(ok, s, _NEG)
+    w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgst,btkd->bskgd", w, v).reshape(B, S, H, hd)
+
+
+def decode_attention_ref(q, k, v, *, kv_len, window: Optional[int] = None):
+    """q: (B,1,H,hd); k/v: (B,T,K,hd); attend to [0, kv_len)."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * (hd ** -0.5)
+    cols = jnp.arange(T)[None, :]
+    ok = cols < kv_len
+    if window is not None:
+        ok = ok & (cols > kv_len - 1 - window)
+    s = jnp.where(ok[None, None, None], s, _NEG)
+    w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgst,btkd->bskgd", w, v).reshape(B, S, H, hd)
+
+
+def ssd_intra_chunk_ref(la, C, B_in, x):
+    """la: (B,nc,Q,H); C/B_in: (B,nc,Q,N); x: (B,nc,Q,H,P).
+    Returns (y_intra, states (B,nc,H,P,N), tot (B,nc,H))."""
+    f32 = jnp.float32
+    la, C, B_in, x = (t.astype(f32) for t in (la, C, B_in, x))
+    Q = la.shape[2]
+    L = jnp.cumsum(la, axis=2)
+    CB = jnp.einsum("bcqn,bcsn->bcqs", C, B_in)
+    seg = L[:, :, :, None, :] - L[:, :, None, :, :]          # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    M = jnp.where(tri, jnp.exp(seg), 0.0) * CB[..., None]
+    y = jnp.einsum("bcqsh,bcshp->bcqhp", M, x)
+    tot = L[:, :, -1, :]
+    w_end = jnp.exp(tot[:, :, None, :] - L)
+    st = jnp.einsum("bcqh,bcqhp,bcqn->bchpn", w_end, x, B_in)
+    return y, st, tot
+
+
+def rmsnorm_ref(x, scale, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)

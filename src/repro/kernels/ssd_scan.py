@@ -1,0 +1,96 @@
+"""Mamba2 SSD intra-chunk kernel (Pallas TPU).
+
+The chunked SSD algorithm splits into (a) per-chunk quadratic work --
+build the decay-masked (Q x Q) score matrix, apply it to the inputs, and
+reduce the chunk's contribution to the running state -- and (b) a cheap
+inter-chunk linear scan. (a) is the MXU-heavy part and lives here; (b)
+stays a ``lax.scan`` on the host graph (see ``models/mamba2.ssd_chunked``).
+
+Grid: (B * nc, H). Per step the kernel holds the chunk's C/B (Q, N),
+x (Q, P) and log-decay (Q,) tiles in VMEM; emits y_intra (Q, P), the chunk
+state contribution (P, N) and the chunk's total decay (scalar).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(la_ref, c_ref, b_ref, x_ref, y_ref, st_ref, tot_ref, *, Q: int):
+    la = la_ref[0, 0, 0].astype(jnp.float32)         # (Q,)
+    C = c_ref[0].astype(jnp.float32)                 # (Q, N)
+    Bm = b_ref[0].astype(jnp.float32)                # (Q, N)
+    x = x_ref[0, 0, 0].astype(jnp.float32)           # (Q, P)
+
+    L = jnp.cumsum(la)                               # (Q,)
+    # intra-chunk: M[t,s] = exp(L_t - L_s) * (C_t . B_s)  for s <= t
+    CB = jax.lax.dot_general(
+        C, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                # (Q, Q)
+    seg = L[:, None] - L[None, :]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    M = jnp.where(cols <= rows, jnp.exp(seg) * CB, 0.0)
+    y_ref[0, 0, 0] = jax.lax.dot_general(
+        M, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(y_ref.dtype)
+
+    # chunk state contribution: sum_s exp(L_end - L_s) x_s ⊗ B_s -> (P, N)
+    w_end = jnp.exp(L[-1] - L)                       # (Q,)
+    xw = x * w_end[:, None]                          # (Q, P)
+    st_ref[0, 0, 0] = jax.lax.dot_general(
+        xw, Bm, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(st_ref.dtype)
+    tot_ref[0, 0] = L[-1]
+
+
+def ssd_intra_chunk(la, C, B_in, x, *, interpret: bool = True):
+    """la: (B, nc, Q, H) log-decay; C/B_in: (B, nc, Q, N); x: (B, nc, Q, H, P).
+
+    Returns (y_intra (B,nc,Q,H,P) f32, states (B,nc,H,P,N) f32,
+    tot (B,nc,H) f32 total log-decay per chunk).
+    """
+    Bs, nc, Q, H = la.shape
+    N = C.shape[-1]
+    P = x.shape[-1]
+
+    la_r = la.transpose(0, 1, 3, 2).reshape(Bs * nc, 1, H, Q)
+    c_r = C.reshape(Bs * nc, Q, N)
+    b_r = B_in.reshape(Bs * nc, Q, N)
+    x_r = x.transpose(0, 1, 3, 2, 4).reshape(Bs * nc, 1, H, Q, P)
+
+    kernel = functools.partial(_kernel, Q=Q)
+    y, st, tot = pl.pallas_call(
+        kernel,
+        grid=(Bs * nc, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Q), lambda i, h: (i, 0, h, 0)),
+            pl.BlockSpec((1, Q, N), lambda i, h: (i, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda i, h: (i, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q, P), lambda i, h: (i, 0, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda i, h: (i, 0, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, P, N), lambda i, h: (i, 0, h, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, h: (i, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bs * nc, 1, H, Q, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bs * nc, 1, H, P, N), jnp.float32),
+            jax.ShapeDtypeStruct((Bs * nc, H), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(la_r, c_r, b_r, x_r)
+
+    y = y.reshape(Bs, nc, H, Q, P).transpose(0, 1, 3, 2, 4)
+    st = st.reshape(Bs, nc, H, P, N)
+    tot = tot.reshape(Bs, nc, H)
+    return y, st, tot

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state. The dry-run entrypoint sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; real launches get devices from the TPU runtime.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = 1
+    for s in shape:
+        need *= s
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devices)} "
+            "(dry-runs must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax)"
+        )
+    return jax.make_mesh(shape, axes, devices=devices[:need])
+
+
+def make_smoke_mesh(data: int = 2, model: int = 2):
+    """Small mesh for CPU multi-device tests (subprocess-scoped XLA_FLAGS)."""
+    need = data * model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[:need])

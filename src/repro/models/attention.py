@@ -1,0 +1,270 @@
+"""GQA attention with causal/sliding-window masks and a decode KV cache.
+
+The compute-heavy paths dispatch to Pallas kernels (``repro.kernels.ops``)
+when ``use_kernels`` is on; the pure-jnp path here is the oracle and the
+CPU/dry-run path.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import apply_rope, dense, dense_init, head_rmsnorm, rope_tables
+
+_NEG = -2.0e38
+
+
+class KVCache(NamedTuple):
+    """Per-layer decode cache. k/v: (B, S_max, K, hd); pos: scalar int32."""
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+
+def attn_init(rng, cfg: ModelConfig, *, dtype=jnp.float32):
+    rq, rk, rv, ro, rn = jax.random.split(rng, 5)
+    d, hd = cfg.d_model, cfg.hd
+    p = {
+        "wq": dense_init(rq, d, cfg.n_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": dense_init(rk, d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": dense_init(rv, d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": dense_init(ro, cfg.n_heads * hd, d, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype=dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype=dtype)
+    return p
+
+
+def _mask(
+    S_q: int,
+    S_k: int,
+    *,
+    causal: bool,
+    window: Optional[int],
+    q_offset,
+    kv_len=None,
+    kv_positions=None,
+):
+    """(S_q, S_k) additive mask. ``q_offset``: absolute position of query row 0
+    (static int or traced scalar). ``kv_len``: valid prefix of the key axis.
+    ``kv_positions``: (S_k,) absolute positions of the keys (ring caches);
+    negative entries mean 'empty slot'."""
+    rows = jnp.arange(S_q)[:, None] + q_offset
+    if kv_positions is not None:
+        cols = kv_positions[None, :]
+        ok = cols >= 0
+    else:
+        cols = jnp.arange(S_k)[None, :]
+        ok = jnp.ones((S_q, S_k), dtype=bool)
+    if causal:
+        ok &= cols <= rows
+    if window is not None:
+        ok &= cols > rows - window
+    if kv_len is not None:
+        ok &= jnp.arange(S_k)[None, :] < kv_len
+    return jnp.where(ok, 0.0, _NEG)
+
+
+def sdpa(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset=0,
+    kv_len=None,
+    kv_positions=None,
+) -> jnp.ndarray:
+    """Reference GQA attention. q: (B,S,H,hd); k/v: (B,T,K,hd); H % K == 0."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * scale
+    logits = logits + _mask(
+        S, T, causal=causal, window=window, q_offset=q_offset,
+        kv_len=kv_len, kv_positions=kv_positions,
+    )
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(B, S, H, hd)
+
+
+# blockwise path kicks in at this many KV positions (memory: never
+# materialize (S, T) score matrices at 4k+; the Pallas kernel is the TPU
+# equivalent, this is the XLA-lowerable one used by dry-runs and grads)
+BLOCKWISE_THRESHOLD = 2048
+
+
+def blockwise_sdpa(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset=0,
+    q_chunk: int = 512,
+    k_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Flash-style online-softmax attention in pure JAX (lax.scan over KV
+    blocks, outer scan over Q blocks). O(S*hd) memory instead of O(S*T)."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qc = min(q_chunk, S)
+    kc = min(k_chunk, T)
+    if S % qc or T % kc:
+        return sdpa(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    nq, nk = S // qc, T // kc
+    scale = hd ** -0.5
+    f32 = jnp.float32
+
+    kb = k.reshape(B, nk, kc, K, hd)
+    vb = v.reshape(B, nk, kc, K, hd)
+
+    def one_q_block(carry, inp):
+        qi, qblk = inp                        # scalar, (B, qc, H, hd)
+        qg = qblk.reshape(B, qc, K, G, hd)
+        rows = q_offset + qi * qc + jnp.arange(qc)[:, None]
+
+        def kv_body(st, kin):
+            ki, kcur, vcur = kin
+            m, l, acc = st
+            s = jnp.einsum("bskgd,btkd->bkgst", qg, kcur).astype(f32) * scale
+            cols = ki * kc + jnp.arange(kc)[None, :]
+            ok = jnp.ones((qc, kc), bool)
+            if causal:
+                ok &= cols <= rows
+            if window is not None:
+                ok &= cols > rows - window
+            s = jnp.where(ok, s, _NEG)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = alpha * l + p.sum(-1)
+            acc = alpha[..., None] * acc + jnp.einsum(
+                "bkgst,btkd->bkgsd", p, vcur.astype(f32)
+            )
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, K, G, qc), -jnp.inf, f32)
+        l0 = jnp.zeros((B, K, G, qc), f32)
+        a0 = jnp.zeros((B, K, G, qc, hd), f32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0),
+            (jnp.arange(nk), kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4)),
+        )
+        out = acc / jnp.where(l == 0.0, 1.0, l)[..., None]
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, qc, H, hd)
+        return carry, out.astype(q.dtype)
+
+    qb = q.reshape(B, nq, qc, H, hd).transpose(1, 0, 2, 3, 4)
+    _, outs = jax.lax.scan(one_q_block, (), (jnp.arange(nq), qb))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+def attention(
+    p,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    positions: jnp.ndarray,
+    theta: float,
+    causal: bool = True,
+    window: Optional[int] = None,
+    cache: Optional[KVCache] = None,
+    cache_pos=None,
+    cache_write_pos=None,
+    kv_positions=None,
+    kv_override: Optional[tuple] = None,
+    use_kernels: bool = False,
+):
+    """Full attention sub-layer: qkv proj -> rope -> sdpa -> out proj.
+
+    Modes:
+      * train/prefill: ``cache is None`` -> attends within x; returns
+        (out, KVCache(k, v)) so prefill can keep the cache.
+      * decode: ``cache`` given, x is (B, 1, d); keys/values are inserted at
+        ``cache_pos`` and attention runs over the cache prefix.
+      * cross-attention: ``kv_override=(k, v)`` skips rope/cache.
+    """
+    from ..hints import constrain
+
+    B, S, d = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    # head-aligned layout: shard heads over "model" when divisible, else
+    # replicate — never let GSPMD split hd (see hints.py docstring)
+    q = constrain(dense(p["wq"], x).reshape(B, S, H, hd), "dp", None, "model", None)
+    if kv_override is None:
+        k = constrain(dense(p["wk"], x).reshape(B, S, K, hd), "dp", None, "model", None)
+        v = constrain(dense(p["wv"], x).reshape(B, S, K, hd), "dp", None, "model", None)
+    else:
+        k, v = kv_override
+
+    if cfg.qk_norm:
+        q = head_rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        if kv_override is None:
+            k = head_rmsnorm(p["k_norm"], k, cfg.norm_eps)
+
+    if kv_override is None and theta > 0:
+        cos, sin = rope_tables(positions, hd, theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    if kv_override is not None:
+        out = sdpa(q, k, v, causal=False)
+        new_cache = None
+    elif cache is None:
+        if use_kernels:
+            from ..kernels import ops as kops
+            out = kops.flash_attention(q, k, v, causal=causal, window=window)
+        elif S >= BLOCKWISE_THRESHOLD:
+            out = blockwise_sdpa(q, k, v, causal=causal, window=window)
+        else:
+            out = sdpa(q, k, v, causal=causal, window=window)
+        new_cache = KVCache(k, v)
+    else:
+        # decode: write k/v at cache_write_pos (ring caches pass pos % W),
+        # attend over the valid region.
+        wp = cache_pos if cache_write_pos is None else cache_write_pos
+        ck = jax.lax.dynamic_update_slice(cache.k, k, (0, wp, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache.v, v, (0, wp, 0, 0))
+        if kv_positions is not None:
+            # ring cache: validity comes from the positions array
+            out = sdpa(
+                q, ck, cv,
+                causal=True,
+                window=window,
+                q_offset=cache_pos,
+                kv_positions=kv_positions,
+            )
+        elif use_kernels:
+            from ..kernels import ops as kops
+            out = kops.decode_attention(
+                q, ck, cv, kv_len=cache_pos + S, window=window
+            )
+        else:
+            out = sdpa(
+                q, ck, cv,
+                causal=True,
+                window=window,
+                q_offset=cache_pos,
+                kv_len=cache_pos + S,
+            )
+        new_cache = KVCache(ck, cv)
+
+    y = dense(p["wo"], out.reshape(B, S, H * hd))
+    return y, new_cache
+
+
+def empty_cache(cfg: ModelConfig, B: int, S_max: int, dtype) -> KVCache:
+    shape = (B, S_max, cfg.n_kv_heads, cfg.hd)
+    return KVCache(jnp.zeros(shape, dtype=dtype), jnp.zeros(shape, dtype=dtype))

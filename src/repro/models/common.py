@@ -1,0 +1,55 @@
+"""Shared assembly utilities: stacked-layer init, remat policies, loss."""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeSpec
+
+
+def stack_init(rng, n: int, fn: Callable):
+    """vmap ``fn(rng) -> params`` over ``n`` fresh rngs -> stacked params."""
+    return jax.vmap(fn)(jax.random.split(rng, n))
+
+
+def remat_wrap(fn: Callable, policy: Optional[str]):
+    if policy is None or policy == "none":
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn, policy=None)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    raise ValueError(f"unknown remat policy {policy!r}")
+
+
+class Model(NamedTuple):
+    """Uniform per-family API (closures over a ModelConfig)."""
+
+    cfg: ModelConfig
+    init: Callable                    # (rng) -> params
+    loss: Callable                    # (params, batch) -> (loss, metrics)
+    prefill: Callable                 # (params, batch, S_max) -> (logits, cache)
+    decode_step: Callable             # (params, cache, batch) -> (logits, cache)
+    init_cache: Callable              # (B, S_max) -> cache pytree
+    input_specs: Callable             # (ShapeSpec) -> dict of ShapeDtypeStruct
+
+
+def token_specs(shape: ShapeSpec, extra: dict | None = None) -> dict:
+    """Input ShapeDtypeStructs for LM-style batches (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        d = {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+    elif shape.kind == "prefill":
+        d = {"tokens": sds((B, S), i32)}
+    else:  # decode: one new token against an S-long cache
+        d = {"token": sds((B,), i32)}
+    if extra:
+        d.update(extra)
+    return d

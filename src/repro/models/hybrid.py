@@ -1,0 +1,279 @@
+"""Zamba2-style hybrid: Mamba2 backbone with a single weight-shared
+attention+MLP block applied after every ``shared_attn_every`` mamba layers.
+
+Simplification vs. the released Zamba2 (noted in DESIGN.md): the shared block
+consumes the residual stream directly (no concat with the original embedding,
+no per-invocation LoRA). Structure (mamba backbone + periodically-invoked
+tied attention with its own KV cache per invocation site) is preserved.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeSpec
+from .attention import KVCache, attention, attn_init
+from .common import Model, remat_wrap, stack_init, token_specs
+from .layers import (
+    cross_entropy_loss,
+    dtype_of,
+    embed,
+    embed_init,
+    rmsnorm,
+    rmsnorm_init,
+    swiglu,
+    swiglu_init,
+    unembed,
+)
+from .mamba2 import MambaCache, empty_mamba_cache, mamba_forward, mamba_init
+
+
+def _groups(cfg: ModelConfig) -> tuple[int, int, int]:
+    gs = cfg.shared_attn_every
+    ng = cfg.n_layers // gs
+    tail = cfg.n_layers - ng * gs
+    return ng, gs, tail
+
+
+def _mamba_layer_init(rng, cfg, dtype):
+    return {
+        "norm": rmsnorm_init(cfg.d_model, dtype),
+        "mamba": mamba_init(rng, cfg, dtype=dtype),
+    }
+
+
+def _mamba_layer(lp, x, cfg, cache=None, use_kernels=False):
+    h, new_cache = mamba_forward(
+        lp["mamba"], rmsnorm(lp["norm"], x, cfg.norm_eps), cfg, cache=cache,
+        use_kernels=use_kernels,
+    )
+    return x + h, new_cache
+
+
+def _shared_apply(sp, x, cfg, *, positions, cache=None, cache_pos=None):
+    h, kv = attention(
+        sp["attn"], rmsnorm(sp["ln1"], x, cfg.norm_eps), cfg,
+        positions=positions, theta=cfg.rope_theta,
+        cache=cache, cache_pos=cache_pos,
+    )
+    x = x + h
+    x = x + swiglu(sp["mlp"], rmsnorm(sp["ln2"], x, cfg.norm_eps))
+    return x, kv
+
+
+def init(rng, cfg: ModelConfig):
+    dtype = dtype_of(cfg)
+    ng, gs, tail = _groups(cfg)
+    r_emb, r_m, r_t, r_s, r_un = jax.random.split(rng, 5)
+    layer_fn = functools.partial(_mamba_layer_init, cfg=cfg, dtype=dtype)
+    grouped = stack_init(r_m, ng * gs, layer_fn)
+    params = {
+        "embed": embed_init(r_emb, cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        "mamba_groups": jax.tree.map(
+            lambda a: a.reshape(ng, gs, *a.shape[1:]), grouped
+        ),
+        "shared": {
+            "attn": attn_init(r_s, cfg, dtype=dtype),
+            "mlp": swiglu_init(jax.random.fold_in(r_s, 1), cfg.d_model, cfg.d_ff, dtype=dtype),
+            "ln1": rmsnorm_init(cfg.d_model, dtype),
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+        },
+    }
+    if tail:
+        params["mamba_tail"] = stack_init(r_t, tail, layer_fn)
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(r_un, cfg.padded_vocab, cfg.d_model, dtype)
+    return params
+
+
+def _forward(params, cfg, x, positions, *, want_cache: bool, remat=None,
+             use_kernels=False):
+    shared = params["shared"]
+    m_layer = remat_wrap(
+        functools.partial(_mamba_layer, cfg=cfg, use_kernels=use_kernels), remat
+    )
+
+    def group(x, gp):
+        def inner(xc, lp):
+            xc, _ = m_layer(lp, xc)
+            return xc, None
+
+        x, _ = jax.lax.scan(inner, x, gp)
+        x, kv = _shared_apply(shared, x, cfg, positions=positions)
+        return x, kv
+
+    x, skv = jax.lax.scan(group, x, params["mamba_groups"])
+    if "mamba_tail" in params:
+        def inner(xc, lp):
+            xc, _ = m_layer(lp, xc)
+            return xc, None
+        x, _ = jax.lax.scan(inner, x, params["mamba_tail"])
+    return x, (skv if want_cache else None)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, remat=None, use_kernels=False):
+    x = embed(params["embed"], batch["tokens"])
+    S = x.shape[1]
+    h, _ = _forward(params, cfg, x, jnp.arange(S), want_cache=False, remat=remat,
+                    use_kernels=use_kernels)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = unembed(params.get("unembed", params["embed"]), h)
+    ce = cross_entropy_loss(logits, batch["labels"])
+    return ce, {"ce": ce, "aux": 0.0}
+
+
+def prefill(params, batch, S_max: int, cfg: ModelConfig, *, use_kernels=False):
+    """Prefill must also produce mamba states -> run layers with streaming
+    semantics: chunked SSD already yields the final state, so we re-run the
+    group scan keeping states."""
+    x = embed(params["embed"], batch["tokens"])
+    B, S = x.shape[:2]
+    positions = jnp.arange(S)
+    shared = params["shared"]
+    dtype = dtype_of(cfg)
+
+    def m_layer_with_state(lp, xc):
+        xn = rmsnorm(lp["norm"], xc, cfg.norm_eps)
+        # run chunked and also extract final conv window + ssm state
+        from .mamba2 import _causal_conv, ssd_chunked
+        from .layers import dense as _dense
+        di, N, H, P, W = (
+            cfg.d_inner_ssm, cfg.ssm_state, cfg.n_ssm_heads,
+            cfg.ssm_head_dim, cfg.ssm_conv_width,
+        )
+        zxbcdt = _dense(lp["mamba"]["in_proj"], xn)
+        z, xBC, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+        conv_tail = xBC[:, -(W - 1):, :]
+        xBC_c = jax.nn.silu(_causal_conv(xBC, lp["mamba"]["conv_w"], lp["mamba"]["conv_b"]))
+        from ..hints import constrain
+        xs, B_in, C_in = jnp.split(xBC_c, [di, di + N], axis=-1)
+        xs = constrain(xs.reshape(B, S, H, P), "dp", None, "model", None)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["mamba"]["dt_bias"])
+        A = -jnp.exp(lp["mamba"]["A_log"])
+        y, hT = ssd_chunked(xs, dt, A, B_in, C_in, cfg.ssm_chunk)
+        y = y + lp["mamba"]["D"].astype(y.dtype)[None, None, :, None] * xs
+        y = y.reshape(B, S, di)
+        y = rmsnorm(lp["mamba"]["gnorm"], y * jax.nn.silu(z), cfg.norm_eps)
+        out = _dense(lp["mamba"]["out_proj"], y)
+        return xc + out, MambaCache(conv=conv_tail, h=hT)
+
+    def group(x, gp):
+        def inner(xc, lp):
+            xc, st = m_layer_with_state(lp, xc)
+            return xc, st
+
+        x, states = jax.lax.scan(inner, x, gp)
+        x, kv = _shared_apply(shared, x, cfg, positions=positions)
+        return x, (states, kv)
+
+    x, (g_states, skv) = jax.lax.scan(group, x, params["mamba_groups"])
+    t_states = None
+    if "mamba_tail" in params:
+        def inner(xc, lp):
+            xc, st = m_layer_with_state(lp, xc)
+            return xc, st
+        x, t_states = jax.lax.scan(inner, x, params["mamba_tail"])
+
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params.get("unembed", params["embed"]), h[:, -1])
+
+    def grow(a):
+        pad = [(0, 0)] * a.ndim
+        pad[-3] = (0, S_max - S)
+        return jnp.pad(a, pad)
+
+    cache = {
+        "g_conv": g_states.conv, "g_h": g_states.h,
+        "sk": grow(skv.k), "sv": grow(skv.v),
+        "pos": jnp.int32(S),
+    }
+    if t_states is not None:
+        cache["t_conv"], cache["t_h"] = t_states.conv, t_states.h
+    return logits, cache
+
+
+def decode_step(params, cache, batch, cfg: ModelConfig, *, use_kernels=False):
+    x = embed(params["embed"], batch["token"][:, None])
+    pos = cache["pos"]
+    positions = pos[None]
+    shared = params["shared"]
+
+    def group(x, gp):
+        lps, conv, h, k1, v1 = gp
+
+        def inner(xc, inp):
+            lp, c, hh = inp
+            xc, st = _mamba_layer(lp, xc, cfg, cache=MambaCache(c, hh))
+            return xc, st
+
+        x, states = jax.lax.scan(inner, x, (lps, conv, h))
+        x, kv = _shared_apply(shared, x, cfg, positions=positions,
+                              cache=KVCache(k1, v1), cache_pos=pos)
+        return x, (states, kv)
+
+    x, (g_states, skv) = jax.lax.scan(
+        group, x,
+        (params["mamba_groups"], cache["g_conv"], cache["g_h"],
+         cache["sk"], cache["sv"]),
+    )
+    new_cache = {
+        "g_conv": g_states.conv, "g_h": g_states.h,
+        "sk": skv.k, "sv": skv.v, "pos": pos + 1,
+    }
+    if "mamba_tail" in params:
+        def inner(xc, inp):
+            lp, c, hh = inp
+            xc, st = _mamba_layer(lp, xc, cfg, cache=MambaCache(c, hh))
+            return xc, st
+        x, t_states = jax.lax.scan(
+            inner, x, (params["mamba_tail"], cache["t_conv"], cache["t_h"])
+        )
+        new_cache["t_conv"], new_cache["t_h"] = t_states.conv, t_states.h
+
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params.get("unembed", params["embed"]), h[:, 0])
+    return logits, new_cache
+
+
+def init_cache(cfg: ModelConfig, B: int, S_max: int):
+    dtype = dtype_of(cfg)
+    ng, gs, tail = _groups(cfg)
+    mc = empty_mamba_cache(cfg, B, dtype)
+
+    def rep(a, n):
+        return jnp.broadcast_to(a, (n,) + a.shape).copy() if n else None
+
+    def rep2(a):
+        return jnp.broadcast_to(a, (ng, gs) + a.shape).copy()
+
+    K, hd = cfg.n_kv_heads, cfg.hd
+    cache = {
+        "g_conv": rep2(mc.conv), "g_h": rep2(mc.h),
+        "sk": jnp.zeros((ng, B, S_max, K, hd), dtype),
+        "sv": jnp.zeros((ng, B, S_max, K, hd), dtype),
+        "pos": jnp.int32(0),
+    }
+    if tail:
+        cache["t_conv"] = rep(mc.conv, tail)
+        cache["t_h"] = rep(mc.h, tail)
+    return cache
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    return token_specs(shape)
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=functools.partial(init, cfg=cfg),
+        loss=functools.partial(loss_fn, cfg=cfg),
+        prefill=functools.partial(prefill, cfg=cfg),
+        decode_step=functools.partial(decode_step, cfg=cfg),
+        init_cache=functools.partial(init_cache, cfg),
+        input_specs=functools.partial(input_specs, cfg),
+    )

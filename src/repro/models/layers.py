@@ -1,0 +1,168 @@
+"""Shared neural-net primitives (pure-functional, dict params)."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# -- init helpers -------------------------------------------------------------
+def dense_init(rng, d_in: int, d_out: int, *, bias: bool = False, dtype=jnp.float32):
+    w = jax.random.normal(rng, (d_in, d_out), dtype=jnp.float32) * (d_in ** -0.5)
+    p = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def embed_init(rng, vocab: int, d: int, dtype=jnp.float32):
+    w = jax.random.normal(rng, (vocab, d), dtype=jnp.float32) * (d ** -0.5)
+    return {"w": w.astype(dtype)}
+
+
+# -- apply helpers ------------------------------------------------------------
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rmsnorm_bf16bwd(scale, x, eps: float = 1e-5):
+    """rmsnorm with a bwd that emits cotangents in the INPUT dtype.
+
+    Plain autodiff leaves dx in f32 long enough that XLA hoists the
+    bf16 converts above the tensor-parallel all-reduces (measured: 100% of
+    train-step collective bytes in f32 = 2x wire cost). Casting dx/partials
+    to bf16 inside the VJP pins the converts below the reduces.
+    """
+    return rmsnorm({"scale": scale}, x, eps)
+
+
+def _rms_fwd(scale, x, eps):
+    return rmsnorm_bf16bwd(scale, x, eps), (scale, x)
+
+
+def _rms_bwd(eps, res, g):
+    scale, x = res
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True) + eps
+    inv = jax.lax.rsqrt(var)
+    gs = gf * scale.astype(jnp.float32)
+    # d/dx [x * inv(x)]: inv * (gs - x * mean(gs * x) / var)
+    proj = jnp.mean(gs * xf, axis=-1, keepdims=True) / var
+    dx = (inv * (gs - xf * proj)).astype(dt)          # cast BEFORE the AR
+    dscale = jnp.sum(gf * xf * inv, axis=tuple(range(x.ndim - 1)))
+    return dscale.astype(scale.dtype), dx
+
+
+rmsnorm_bf16bwd.defvjp(_rms_fwd, _rms_bwd)
+
+
+def head_rmsnorm(scale, x, eps: float = 1e-5):
+    """qk-norm: normalize over the head dim. x: (..., hd), scale: (hd,)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def embed(p, tokens):
+    return jnp.take(p["w"], tokens, axis=0)
+
+
+def unembed(p, x):
+    """Project to vocab. p is the embed table when tied ((V, d)) or an
+    unembed matrix ((d, V))."""
+    w = p["w"]
+    if w.shape[0] == x.shape[-1]:
+        return x @ w
+    return x @ w.T
+
+
+def swiglu_init(rng, d: int, d_ff: int, dtype=jnp.float32):
+    r1, r2, r3 = jax.random.split(rng, 3)
+    return {
+        "gate": dense_init(r1, d, d_ff, dtype=dtype),
+        "up": dense_init(r2, d, d_ff, dtype=dtype),
+        "down": dense_init(r3, d_ff, d, dtype=dtype),
+    }
+
+
+def swiglu(p, x):
+    return dense(p["down"], jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x))
+
+
+# -- rotary embeddings ---------------------------------------------------------
+def rope_tables(positions: jnp.ndarray, hd: int, theta: float):
+    """positions: (S,) int -> cos/sin (S, hd/2), float32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions.astype(jnp.float32)[:, None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x: (B, S, H, hd); cos/sin: (S, hd/2)."""
+    dt = x.dtype
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(dt)
+
+
+def sinusoid_embed(S: int, d: int):
+    """Whisper-style fixed sinusoidal positional embeddings (S, d)."""
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def softcap(x, cap: Optional[float]):
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def cross_entropy_loss(logits, labels, *, ignore_index: int = -100):
+    """Mean next-token CE over non-ignored positions. logits (B,S,V)."""
+    valid = labels != ignore_index
+    labels_safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels_safe[..., None], axis=-1
+    )[..., 0]
+    nll = (logz - gold) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def norm(p, x, eps: float = 1e-5):
+    """rmsnorm, switching to the bf16-cotangent VJP under the bf16bwd flag."""
+    from ..hints import flag
+    if flag("bf16bwd"):
+        return rmsnorm_bf16bwd(p["scale"], x, eps)
+    return rmsnorm(p, x, eps)

@@ -1,0 +1,193 @@
+"""Mamba2 (SSD) mixer — chunked parallel form for train/prefill, O(1)-state
+recurrent form for decode (arXiv:2405.21060, adapted to TPU: chunk size is
+MXU-aligned, intra-chunk term is a (Q x Q) matmul, inter-chunk term is a
+``lax.scan`` over chunk states).
+
+Recurrence (heads H, head dim P, state N, chunk Q):
+    h_t = a_t * h_{t-1} + dt_t * (B_t ⊗ x_t)        h: (H, P, N)
+    y_t = C_t · h_t + D * x_t
+with a_t = exp(dt_t * A), A = -exp(A_log) < 0.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import dense, dense_init, rmsnorm
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray    # (B, W-1, conv_channels) rolling conv input window
+    h: jnp.ndarray       # (B, H, P, N) SSM state
+
+
+def mamba_init(rng, cfg: ModelConfig, *, dtype=jnp.float32):
+    d = cfg.d_model
+    di = cfg.d_inner_ssm
+    N = cfg.ssm_state
+    H = cfg.n_ssm_heads
+    W = cfg.ssm_conv_width
+    conv_ch = di + 2 * N
+    r0, r1, r2, r3 = jax.random.split(rng, 4)
+    return {
+        "in_proj": dense_init(r0, d, 2 * di + 2 * N + H, dtype=dtype),
+        "conv_w": (jax.random.normal(r1, (W, conv_ch)) * (W ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype=dtype),
+        "dt_bias": jnp.zeros((H,), dtype=jnp.float32),
+        "A_log": jnp.zeros((H,), dtype=jnp.float32),
+        "D": jnp.ones((H,), dtype=jnp.float32),
+        "gnorm": {"scale": jnp.ones((di,), dtype=dtype)},
+        "out_proj": dense_init(r3, di, d, dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, S, Ch); w: (W, Ch)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp,
+        w[:, None, :],
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out + b
+
+
+def ssd_chunked(x, dt, A, B_in, C_in, Q: int, h0=None, *, use_kernel: bool = False):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H) (post-softplus); A: (H,) negative;
+    B_in/C_in: (B, S, N) (single group, shared across heads).
+    Returns y: (B, S, H, P) and final state (B, H, P, N).
+    With ``use_kernel`` the intra-chunk quadratic work runs in the Pallas
+    kernel (``kernels/ssd_scan.py``); the inter-chunk scan stays here.
+    """
+    Bsz, S, H, P = x.shape
+    N = B_in.shape[-1]
+    S_orig = S
+    if S % Q:
+        # pad tail with identity steps: dt=0 -> a=1, xbar=0 -> state unchanged
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_in = jnp.pad(B_in, ((0, 0), (0, pad), (0, 0)))
+        C_in = jnp.pad(C_in, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+    f32 = jnp.float32
+
+    la = (dt * A).astype(f32)                           # log a_t  (B,S,H)
+    xbar = (dt[..., None] * x).astype(f32)              # (B,S,H,P)
+    xc = xbar.reshape(Bsz, nc, Q, H, P)
+    Bc = B_in.reshape(Bsz, nc, Q, N).astype(f32)
+    Cc = C_in.reshape(Bsz, nc, Q, N).astype(f32)
+    lac = la.reshape(Bsz, nc, Q, H)
+    L = jnp.cumsum(lac, axis=2)                         # (B,nc,Q,H)
+    Ltot = L[:, :, -1, :]                               # (B,nc,H)
+
+    if use_kernel:
+        from ..kernels import ops as kops
+        y_intra, states, _ = kops.ssd_intra_chunk(lac, Cc, Bc, xc)
+    else:
+        # intra-chunk: y[t] = sum_{s<=t} exp(L_t - L_s) (C_t.B_s) xbar_s
+        CB = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)      # (B,nc,Q,Q)
+        seg = L[:, :, :, None, :] - L[:, :, None, :, :]  # (B,nc,Q,Q,H)
+        tri = jnp.tril(jnp.ones((Q, Q), dtype=bool))
+        M = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+        M = M * CB[..., None]                           # (B,nc,Q,Q,H)
+        y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", M, xc)
+
+        # chunk states: S_c = sum_s exp(Ltot - L_s) xbar_s ⊗ B_s
+        w_end = jnp.exp(Ltot[:, :, None, :] - L)        # (B,nc,Q,H)
+        states = jnp.einsum("bcqh,bcqhp,bcqn->bchpn", w_end, xc, Bc)
+
+    # inter-chunk scan over h
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), dtype=f32)
+
+    def body(h, inp):
+        st, ltot = inp                                  # (B,H,P,N), (B,H)
+        h_out = h                                       # state *entering* chunk
+        h_new = jnp.exp(ltot)[:, :, None, None] * h + st
+        return h_new, h_out
+
+    hT, h_prevs = jax.lax.scan(
+        body,
+        h0,
+        (states.transpose(1, 0, 2, 3, 4), Ltot.transpose(1, 0, 2)),
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)          # (B,nc,H,P,N)
+
+    # y_inter[t] = exp(L_t) * C_t · h_prev
+    y_inter = jnp.einsum("bcqh,bcqn,bchpn->bcqhp", jnp.exp(L), Cc, h_prevs)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)[:, :S_orig]
+    return y.astype(x.dtype), hT
+
+
+def mamba_forward(p, x, cfg: ModelConfig, *, cache: MambaCache | None = None,
+                  use_kernels: bool = False):
+    """One mamba2 mixer. x: (B, S, d). With ``cache`` (decode) S must be 1."""
+    Bsz, S, d = x.shape
+    di = cfg.d_inner_ssm
+    N = cfg.ssm_state
+    H = cfg.n_ssm_heads
+    P = cfg.ssm_head_dim
+    W = cfg.ssm_conv_width
+
+    zxbcdt = dense(p["in_proj"], x)
+    z, xBC, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+
+    if cache is None:
+        xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+        new_conv = None
+    else:
+        window = jnp.concatenate([cache.conv, xBC], axis=1)     # (B, W, Ch)
+        conv_out = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+        xBC = jax.nn.silu(conv_out)[:, None, :]
+        new_conv = window[:, 1:, :]
+
+    from ..hints import constrain
+
+    xs, B_in, C_in = jnp.split(xBC, [di, di + N], axis=-1)
+    xs = constrain(xs.reshape(Bsz, S, H, P), "dp", None, "model", None)
+    B_in = constrain(B_in, "dp", None, None)
+    C_in = constrain(C_in, "dp", None, None)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if cache is None:
+        y, hT = ssd_chunked(xs, dt, A, B_in, C_in, cfg.ssm_chunk,
+                            use_kernel=use_kernels)
+        new_cache = None
+    else:
+        a = jnp.exp(dt * A)                                     # (B,1,H)
+        xbar = (dt[..., None] * xs).astype(jnp.float32)         # (B,1,H,P)
+        dh = jnp.einsum("bhp,bn->bhpn", xbar[:, 0], B_in[:, 0].astype(jnp.float32))
+        h = a[:, 0, :, None, None] * cache.h + dh
+        y = jnp.einsum("bn,bhpn->bhp", C_in[:, 0].astype(jnp.float32), h)
+        y = y[:, None].astype(x.dtype)
+        new_cache = MambaCache(conv=new_conv, h=h)
+
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xs
+    y = y.reshape(Bsz, S, di)
+    y = rmsnorm(p["gnorm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = dense(p["out_proj"], y)
+    return out, new_cache
+
+
+def empty_mamba_cache(cfg: ModelConfig, B: int, dtype) -> MambaCache:
+    di, N, H, P, W = (
+        cfg.d_inner_ssm, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim,
+        cfg.ssm_conv_width,
+    )
+    return MambaCache(
+        conv=jnp.zeros((B, W - 1, di + 2 * N), dtype=dtype),
+        h=jnp.zeros((B, H, P, N), dtype=jnp.float32),
+    )

@@ -1,0 +1,22 @@
+"""Family dispatch: build a Model from any ModelConfig."""
+
+from __future__ import annotations
+
+from ..configs.base import ModelConfig
+from .common import Model
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        from . import transformer
+        return transformer.build(cfg)
+    if cfg.family == "hybrid":
+        from . import hybrid
+        return hybrid.build(cfg)
+    if cfg.family == "ssm":
+        from . import xlstm_model
+        return xlstm_model.build(cfg)
+    if cfg.family == "audio":
+        from . import encdec
+        return encdec.build(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

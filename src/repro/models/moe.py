@@ -1,0 +1,121 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-bounded, sort-based
+dispatch (GShard/Switch lineage, MaxText-style sort dispatch).
+
+Design for TPU/pjit:
+  * each batch row is a dispatch group (G = B): per-row capacity
+    ``C = ceil(S * k * capacity_factor / E)``;
+  * dispatch is index-based (argsort by expert id + bounded slots), not a
+    (tokens x E x C) one-hot einsum — the one-hot would not fit VMEM/HBM at
+    our shapes;
+  * the dispatch buffer is (B, E, C, d); contracting with expert weights
+    (E, d, f) forces E-sharding over the "model" axis, so XLA inserts the
+    dispatch all-to-all at the (B-sharded -> E-sharded) boundary;
+  * dropped tokens (over capacity) fall into a trash slot and contribute 0.
+
+Returns the standard load-balance auxiliary loss (Switch §2.2):
+``aux = E * sum_e f_e * P_e``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import dense_init
+
+
+def moe_init(rng, cfg: ModelConfig, *, dtype=jnp.float32):
+    r0, r1, r2, r3 = jax.random.split(rng, 4)
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    scale_in = d ** -0.5
+    scale_out = f ** -0.5
+    return {
+        "router": dense_init(r0, d, E, dtype=jnp.float32),
+        "gate": (jax.random.normal(r1, (E, d, f)) * scale_in).astype(dtype),
+        "up": (jax.random.normal(r2, (E, d, f)) * scale_in).astype(dtype),
+        "down": (jax.random.normal(r3, (E, f, d)) * scale_out).astype(dtype),
+    }
+
+
+def _capacity(S: int, cfg: ModelConfig) -> int:
+    c = int(-(-S * cfg.experts_per_token * cfg.moe_capacity_factor // cfg.n_experts))
+    return max(1, c)
+
+
+def _dispatch_row(xr, idx, E: int, C: int):
+    """Per-row dispatch plan. xr: (S, d); idx: (S, k) expert ids.
+
+    Returns (buf (E, C, d), slot_of_dispatch (S*k,)) where slot == E*C means
+    dropped.
+    """
+    S, k = idx.shape
+    d = xr.shape[-1]
+    n = S * k
+    eid = idx.reshape(n)
+    order = jnp.argsort(eid)                      # stable
+    sorted_eid = eid[order]
+    counts = jnp.bincount(eid, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(n, dtype=jnp.int32) - starts[sorted_eid].astype(jnp.int32)
+    keep = pos_in_e < C
+    slot_sorted = jnp.where(keep, sorted_eid * C + pos_in_e, E * C)
+    tok_sorted = (order // k).astype(jnp.int32)
+    # slot -> source token (drops land in the trash slot E*C)
+    slot_tok = jnp.full((E * C + 1,), S, dtype=jnp.int32).at[slot_sorted].set(tok_sorted)
+    slot_tok = slot_tok[: E * C]
+    xpad = jnp.concatenate([xr, jnp.zeros((1, d), dtype=xr.dtype)], axis=0)
+    buf = xpad[slot_tok].reshape(E, C, d)
+    slot_of_dispatch = jnp.zeros((n,), dtype=jnp.int32).at[order].set(slot_sorted)
+    return buf, slot_of_dispatch
+
+
+def moe_ffn(p, x: jnp.ndarray, cfg: ModelConfig):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    C = _capacity(S, cfg)
+
+    logits = (x.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                 # (B, S, E)
+    w, idx = jax.lax.top_k(probs, k)                        # (B, S, k)
+    w = (w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)).astype(x.dtype)
+
+    from ..hints import constrain, flag
+
+    buf, slots = jax.vmap(lambda xr, ir: _dispatch_row(xr, ir, E, C))(x, idx)
+    if flag("moe2d"):
+        # 2D dispatch (hillclimb, see EXPERIMENTS.md §Perf): keep the buffer
+        # (B, E, C, d) sharded (dp, model) THROUGHOUT — every device computes
+        # its expert shard on its batch shard, so the dispatch needs no
+        # collective at all; only the combine gathers expert outputs over
+        # "model". Avoids GSPMD's replicate-then-slice when resharding from
+        # the data axis (dim 0) to the model axis (dim 1).
+        buf = constrain(buf, "dp", "model", None, None)
+        h = jnp.einsum("becd,edf->becf", buf, p["gate"])
+        u = jnp.einsum("becd,edf->becf", buf, p["up"])
+        out = jnp.einsum("becf,efd->becd", jax.nn.silu(h) * u, p["down"])
+        out = constrain(out, "dp", None, None, None)
+        out = out.reshape(B, E * C, d)
+    else:
+        # baseline (GShard-style): reshard (B,E,C,d) -> (E, B*C, d)
+        buf = constrain(buf, "dp", None, None, None)
+        buf = buf.transpose(1, 0, 2, 3).reshape(E, B * C, d)
+        buf = constrain(buf, "model", None, None)
+
+        h = jnp.einsum("ecd,edf->ecf", buf, p["gate"])
+        u = jnp.einsum("ecd,edf->ecf", buf, p["up"])
+        out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, p["down"])
+
+        # back to (B, E*C, d) + trash row, then combine per dispatch slot
+        out = out.reshape(E, B, C, d).transpose(1, 0, 2, 3).reshape(B, E * C, d)
+        out = constrain(out, "dp", None, None)
+    out = jnp.concatenate([out, jnp.zeros((B, 1, d), dtype=out.dtype)], axis=1)
+    y_rep = jnp.take_along_axis(out, slots[..., None].astype(jnp.int32), axis=1)
+    y = (y_rep.reshape(B, S, k, d) * w[..., None]).sum(axis=2)
+
+    # Switch-style load-balance aux (fraction routed x mean prob).
+    f_e = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (B * S * k)
+    p_e = probs.mean(axis=(0, 1))
+    aux = E * jnp.sum(f_e * p_e)
+    return y, aux

@@ -1,0 +1,283 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunked-parallel
+for train/prefill, O(1)-state for decode) and sLSTM (scalar memory with
+exponential gating and per-head recurrence, ``lax.scan`` over time).
+
+Stabilization follows the paper: running log-scale ``m`` with
+``h = num / max(|den|, exp(-m))`` for mLSTM and the max-trick for sLSTM's
+exponential input gate.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import dense, dense_init, rmsnorm
+from .mamba2 import _causal_conv
+
+
+class MLSTMCache(NamedTuple):
+    conv: jnp.ndarray      # (B, W-1, di)
+    C: jnp.ndarray         # (B, H, dh, dh)
+    n: jnp.ndarray         # (B, H, dh)
+    m: jnp.ndarray         # (B, H)
+
+
+class SLSTMCache(NamedTuple):
+    c: jnp.ndarray         # (B, H, dh)
+    n: jnp.ndarray
+    m: jnp.ndarray
+    h: jnp.ndarray
+
+
+def _ff_dim(d: int) -> int:
+    f = (4 * d + 2) // 3
+    return ((f + 63) // 64) * 64
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_init(rng, cfg: ModelConfig, *, dtype=jnp.float32):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = cfg.n_heads
+    W = cfg.ssm_conv_width
+    rs = jax.random.split(rng, 7)
+    return {
+        "in_proj": dense_init(rs[0], d, 2 * di, dtype=dtype),
+        "conv_w": (jax.random.normal(rs[1], (W, di)) * (W ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype=dtype),
+        "wq": dense_init(rs[2], di, di, dtype=dtype),
+        "wk": dense_init(rs[3], di, di, dtype=dtype),
+        "wv": dense_init(rs[4], di, di, dtype=dtype),
+        "w_gates": dense_init(rs[5], di, 2 * H, bias=True, dtype=jnp.float32),
+        "skip": jnp.ones((di,), dtype=dtype),
+        "gnorm": {"scale": jnp.ones((di,), dtype=dtype)},
+        "out_proj": dense_init(rs[6], di, d, dtype=dtype),
+    }
+
+
+def _mlstm_chunk(q, k, v, log_f, log_i, carry, eps=1e-6):
+    """One chunk of the stabilized parallel mLSTM.
+
+    q,k,v: (B,Q,H,dh) f32 (q pre-scaled); log_f/log_i: (B,Q,H) f32;
+    carry: (C (B,H,dh,dh), n (B,H,dh), m (B,H)).
+    """
+    C_prev, n_prev, m_prev = carry
+    B, Q, H, dh = q.shape
+    F = jnp.cumsum(log_f, axis=1)                      # (B,Q,H)
+    # W_ts = F_t - F_s + log_i_s  for s <= t
+    Wmat = F[:, :, None, :] - F[:, None, :, :] + log_i[:, None, :, :]
+    tri = jnp.tril(jnp.ones((Q, Q), dtype=bool))[None, :, :, None]
+    Wmat = jnp.where(tri, Wmat, -jnp.inf)              # (B,Q,Q,H) [t, s]
+    G = F + m_prev[:, None, :]                         # (B,Q,H)
+    m_loc = jnp.max(Wmat, axis=2)                      # (B,Q,H)
+    m_t = jnp.maximum(m_loc, G)
+    D = jnp.exp(Wmat - m_t[:, :, None, :])             # (B,Q,Q,H)
+    qk = jnp.einsum("bqhd,bshd->bqsh", q, k)           # (B,Q,Q,H)
+    A = D * qk
+    num = jnp.einsum("bqsh,bshd->bqhd", A, v)
+    num = num + jnp.exp(G - m_t)[..., None] * jnp.einsum(
+        "bqhd,bhde->bqhe", q, C_prev
+    )
+    den = A.sum(axis=2)                                # (B,Q,H)
+    den = den + jnp.exp(G - m_t) * jnp.einsum("bqhd,bhd->bqh", q, n_prev)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+    # carry update to chunk end
+    Fq = F[:, -1, :]                                   # (B,H)
+    w_end = Fq[:, None, :] - F + log_i                 # (B,Q,H)
+    m_new = jnp.maximum(Fq + m_prev, jnp.max(w_end, axis=1))
+    scale_old = jnp.exp(Fq + m_prev - m_new)
+    wk_end = jnp.exp(w_end - m_new[:, None, :])
+    C_new = scale_old[:, :, None, None] * C_prev + jnp.einsum(
+        "bqh,bqhd,bqhe->bhde", wk_end, k, v
+    )
+    n_new = scale_old[:, :, None] * n_prev + jnp.einsum("bqh,bqhd->bhd", wk_end, k)
+    return h, (C_new, n_new, m_new)
+
+
+def mlstm_core(q, k, v, log_f, log_i, Q: int, carry=None):
+    """q,k,v: (B,S,H,dh); gates (B,S,H). Returns (h (B,S,H,dh), carry)."""
+    B, S, H, dh = q.shape
+    f32 = jnp.float32
+    q = q.astype(f32) * (dh ** -0.5)
+    k = k.astype(f32)
+    v = v.astype(f32)
+    log_f = log_f.astype(f32)
+    log_i = log_i.astype(f32)
+    if carry is None:
+        carry = (
+            jnp.zeros((B, H, dh, dh), f32),
+            jnp.zeros((B, H, dh), f32),
+            jnp.full((B, H), -1e30, f32),
+        )
+    if S == 1:
+        h, carry = _mlstm_chunk(q, k, v, log_f, log_i, carry)
+        return h, carry
+    S_orig = S
+    if S % Q:
+        # pad tail with identity steps: f=1, i=0 -> carry unchanged
+        pad = Q - S % Q
+        zpad4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        zpad3 = ((0, 0), (0, pad), (0, 0))
+        q, k, v = (jnp.pad(t, zpad4) for t in (q, k, v))
+        log_f = jnp.pad(log_f, zpad3)
+        log_i = jnp.pad(log_i, zpad3, constant_values=-1e30)
+        S = S + pad
+    nc = S // Q
+
+    def body(c, inp):
+        qc, kc, vc, fc, ic = inp
+        h, c = _mlstm_chunk(qc, kc, vc, fc, ic, c)
+        return c, h
+
+    split = lambda t: t.reshape(B, nc, Q, *t.shape[2:]).transpose(1, 0, *range(2, t.ndim + 1))
+    carry, hs = jax.lax.scan(body, carry, tuple(split(t) for t in (q, k, v, log_f, log_i)))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)[:, :S_orig]
+    return h, carry
+
+
+def mlstm_forward(p, x, cfg: ModelConfig, *, cache: MLSTMCache | None = None):
+    B, S, d = x.shape
+    di = cfg.ssm_expand * d
+    H = cfg.n_heads
+    dh = di // H
+    xz = dense(p["in_proj"], x)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+
+    if cache is None:
+        cx = jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"]))
+        new_conv = None
+        carry = None
+    else:
+        window = jnp.concatenate([cache.conv, x_in], axis=1)
+        cx = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"])[:, None]
+        new_conv = window[:, 1:, :]
+        carry = (cache.C, cache.n, cache.m)
+
+    from ..hints import constrain
+    q = constrain(dense(p["wq"], cx).reshape(B, S, H, dh), "dp", None, "model", None)
+    k = constrain(dense(p["wk"], cx).reshape(B, S, H, dh), "dp", None, "model", None)
+    v = constrain(dense(p["wv"], x_in).reshape(B, S, H, dh), "dp", None, "model", None)
+    gates = dense(p["w_gates"], x_in.astype(jnp.float32))
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)        # (B,S,H) each
+    log_f = jax.nn.log_sigmoid(f_pre)
+    h, carry = mlstm_core(q, k, v, log_f, i_pre, cfg.ssm_chunk, carry)
+
+    h = h.reshape(B, S, di).astype(x.dtype)
+    h = rmsnorm(p["gnorm"], h, cfg.norm_eps) + p["skip"] * cx
+    h = h * jax.nn.silu(z)
+    out = dense(p["out_proj"], h)
+    new_cache = None
+    if cache is not None:
+        new_cache = MLSTMCache(conv=new_conv, C=carry[0], n=carry[1], m=carry[2])
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_init(rng, cfg: ModelConfig, *, dtype=jnp.float32):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = cfg.n_heads
+    dh = di // H
+    ff = _ff_dim(d)
+    rs = jax.random.split(rng, 4)
+    return {
+        "in_norm": {"scale": jnp.ones((d,), dtype=dtype)},
+        "w_in": dense_init(rs[0], d, 4 * di, bias=True, dtype=dtype),
+        "R": (jax.random.normal(rs[1], (4, H, dh, dh)) * (dh ** -0.5)).astype(dtype),
+        "gnorm": {"scale": jnp.ones((di,), dtype=dtype)},
+        "out_proj": dense_init(rs[2], di, d, dtype=dtype),
+        "ffn": {
+            "up": dense_init(jax.random.fold_in(rs[3], 0), d, 2 * ff, dtype=dtype),
+            "down": dense_init(jax.random.fold_in(rs[3], 1), ff, d, dtype=dtype),
+        },
+        "ffn_norm": {"scale": jnp.ones((d,), dtype=dtype)},
+    }
+
+
+def slstm_cell(p, xg, state: SLSTMCache):
+    """One recurrent step. xg: (B, 4, H, dh) pre-activations from the input."""
+    c, n, m, h = state
+    R = p["R"].astype(jnp.float32)
+    rec = jnp.einsum("bhd,ghde->bghe", h, R)           # (B,4,H,dh)
+    pre = xg.astype(jnp.float32) + rec
+    z_pre, i_pre, f_pre, o_pre = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    # scalar gates per head: mean over the head dim (keeps params dense)
+    i_t = i_pre.mean(-1)                               # (B,H)
+    f_t = jax.nn.log_sigmoid(f_pre.mean(-1))
+    m_new = jnp.maximum(f_t + m, i_t)
+    i_s = jnp.exp(i_t - m_new)[..., None]
+    f_s = jnp.exp(f_t + m - m_new)[..., None]
+    z_t = jnp.tanh(z_pre)
+    o_t = jax.nn.sigmoid(o_pre)
+    c_new = f_s * c + i_s * z_t
+    n_new = f_s * n + i_s
+    h_new = o_t * c_new / jnp.maximum(n_new, 1e-6)
+    return SLSTMCache(c_new, n_new, m_new, h_new)
+
+
+def slstm_forward(p, x, cfg: ModelConfig, *, cache: SLSTMCache | None = None):
+    """Full sLSTM block: pre-norm mixer + post FFN. Takes the RAW residual
+    stream and returns the updated stream (it owns two residual adds)."""
+    B, S, d = x.shape
+    di = cfg.ssm_expand * d
+    H = cfg.n_heads
+    dh = di // H
+    xn = rmsnorm(p["in_norm"], x, cfg.norm_eps)
+    xg = dense(p["w_in"], xn).reshape(B, S, 4, H, dh)
+    state = cache if cache is not None else empty_slstm_state(cfg, B)
+
+    if S == 1:
+        state = slstm_cell(p, xg[:, 0], state)
+        hs = state.h[:, None]
+    else:
+        def body(st, xt):
+            st = slstm_cell(p, xt, st)
+            return st, st.h
+
+        state, hs = jax.lax.scan(body, state, xg.transpose(1, 0, 2, 3, 4))
+        hs = hs.transpose(1, 0, 2, 3)                  # (B,S,H,dh)
+
+    h = hs.reshape(B, S, di).astype(x.dtype)
+    h = rmsnorm(p["gnorm"], h, cfg.norm_eps)
+    x = x + dense(p["out_proj"], h)
+    # post-block gated FFN (GeLU, ~4/3 factor)
+    y = rmsnorm(p["ffn_norm"], x, cfg.norm_eps)
+    u, g = jnp.split(dense(p["ffn"]["up"], y), 2, axis=-1)
+    x = x + dense(p["ffn"]["down"], jax.nn.gelu(u) * g)
+    return x, (state if cache is not None else None)
+
+
+def empty_slstm_state(cfg: ModelConfig, B: int) -> SLSTMCache:
+    H = cfg.n_heads
+    dh = cfg.ssm_expand * cfg.d_model // H
+    f32 = jnp.float32
+    return SLSTMCache(
+        c=jnp.zeros((B, H, dh), f32),
+        n=jnp.zeros((B, H, dh), f32),
+        m=jnp.full((B, H), -1e30, f32),
+        h=jnp.zeros((B, H, dh), f32),
+    )
+
+
+def empty_mlstm_cache(cfg: ModelConfig, B: int, dtype) -> MLSTMCache:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = cfg.n_heads
+    dh = di // H
+    W = cfg.ssm_conv_width
+    f32 = jnp.float32
+    return MLSTMCache(
+        conv=jnp.zeros((B, W - 1, di), dtype=dtype),
+        C=jnp.zeros((B, H, dh, dh), f32),
+        n=jnp.zeros((B, H, dh), f32),
+        m=jnp.full((B, H), -1e30, f32),
+    )

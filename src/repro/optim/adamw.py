@@ -1,0 +1,87 @@
+"""AdamW with fp32 master weights, global-norm clipping, and mixed-precision
+params (bf16 compute copies). Functional: state is a pytree."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray           # scalar int32
+    master: Any                 # fp32 params
+    m: Any
+    v: Any
+
+
+def init(params) -> OptState:
+    # copies force distinct buffers: astype(f32) on fp32 params is a no-op
+    # alias, and identical jnp.zeros results may alias — either breaks
+    # donation ("attempt to donate the same buffer twice")
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    zeros2 = lambda p: jnp.zeros(p.shape, jnp.float32).copy()
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        master=jax.tree.map(f32, params),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros2, params),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def update(grads, state: OptState, params, cfg: AdamWConfig, lr_scale=1.0):
+    """Returns (new_params, new_state, stats). ``lr_scale`` multiplies cfg.lr
+    (schedules pass the factor)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(g, m, v, mw):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        mw_new = mw - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * mw)
+        return m_new, v_new, mw_new
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_w = treedef.flatten_up_to(state.master)
+    out = [upd(g, m, v, w) for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_master = treedef.unflatten([o[2] for o in out])
+    flat_p = treedef.flatten_up_to(params)
+    new_params = treedef.unflatten(
+        [mw.astype(p.dtype) for mw, p in zip([o[2] for o in out], flat_p)]
+    )
+    return new_params, OptState(step, new_master, new_m, new_v), {
+        "grad_norm": gnorm,
+        "lr": jnp.asarray(lr),
+    }

@@ -1,0 +1,90 @@
+"""Gradient compression for the DP all-reduce: int8 quantization with error
+feedback (1-bit-Adam lineage).
+
+On a real pod the win is collective bytes: reduce-scatter the int8 payload
+(4x fewer bytes than fp32, 2x vs bf16) and dequantize after the sum. Here the
+quantize -> (collective) -> dequantize numerics are implemented exactly as
+they would run per-shard, with the residual (quantization error) fed back
+into the next step so the compression bias vanishes over time.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ErrorFeedback(NamedTuple):
+    residual: Any     # same structure as grads, fp32
+
+
+def init(grads_like) -> ErrorFeedback:
+    return ErrorFeedback(
+        jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+    )
+
+
+def quantize(g: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(g)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def int8_allreduce(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Mean-all-reduce with int8 wire payloads (inside shard_map).
+
+    Ring all-reduce of f32 moves ~2·|x|·4 bytes/device; this moves
+    ~2·|x|·1: per-device int8 quantize -> all_to_all chunks -> local f32
+    sum of peers' chunks -> int8 re-quantize -> all_gather. This is the
+    collective the plain ``compress_grads`` round-trip cannot buy under
+    GSPMD (XLA reduces the dequantized values) — §Perf iterations A2/B4.
+
+    x must be the device-local FULL tensor (replicated layout pre-reduce),
+    flattened internally; leading size is padded to the axis size.
+    """
+    n = jax.lax.psum(1, axis_name)
+    flat = x.reshape(-1)
+    pad = (-flat.size) % n
+    flat = jnp.pad(flat, (0, pad))
+    q, scale = quantize(flat)
+    chunks = q.reshape(n, -1)                              # (n, chunk)
+    # every device receives chunk[axis_index] from all peers
+    recv = jax.lax.all_to_all(chunks[:, None, :], axis_name, split_axis=0,
+                              concat_axis=1)[:, :, :]      # (1, n, chunk)
+    recv = recv.reshape(n, -1)
+    scales = jax.lax.all_gather(scale, axis_name)          # (n,)
+    part = jnp.sum(recv.astype(jnp.float32) * scales[:, None], axis=0) / n
+    q2, s2 = quantize(part)
+    full_q = jax.lax.all_gather(q2, axis_name)             # (n, chunk) int8
+    full_s = jax.lax.all_gather(s2, axis_name)
+    out = (full_q.astype(jnp.float32) * full_s[:, None]).reshape(-1)
+    out = out[: x.size] if pad else out
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def compress_grads(grads, ef: ErrorFeedback):
+    """Apply error-feedback int8 round-trip to a grad pytree. Returns
+    (decompressed_grads, new_error_feedback, bytes_ratio)."""
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, s = quantize(gf)
+        deq = dequantize(q, s)
+        return deq.astype(g.dtype), gf - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    new_g = treedef.unflatten([o[0] for o in outs])
+    new_r = treedef.unflatten([o[1] for o in outs])
+    in_bytes = sum(g.size * g.dtype.itemsize for g in flat_g)
+    out_bytes = sum(g.size for g in flat_g)  # int8 payload
+    return new_g, ErrorFeedback(new_r), out_bytes / max(in_bytes, 1)

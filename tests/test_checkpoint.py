@@ -1,0 +1,100 @@
+"""Checkpoint manager: sharded save/restore, two-phase commit, drain, GC."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core import EphemeralFS, FSError, GlobalFS, dom_cluster
+
+
+@pytest.fixture
+def burst(tmp_path):
+    fs = EphemeralFS(dom_cluster().storage_nodes[:2], str(tmp_path / "b"))
+    yield fs
+    fs.teardown()
+
+
+def _tree(x=0.0):
+    return {
+        "params": {"w": jnp.full((8, 4), 1.0 + x), "b": jnp.zeros((4,))},
+        "opt": {"m": jnp.full((8, 4), 0.5 * x), "step": jnp.int32(int(x))},
+    }
+
+
+def test_save_restore_equality(burst):
+    mgr = CheckpointManager(burst)
+    t = _tree(3.0)
+    mgr.save(100, t)
+    restored, step = mgr.restore(_tree())
+    assert step == 100
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(t)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_committed_wins(burst):
+    mgr = CheckpointManager(burst)
+    mgr.save(1, _tree(1.0))
+    mgr.save(2, _tree(2.0))
+    restored, step = mgr.restore(_tree())
+    assert step == 2
+    assert float(restored["params"]["w"][0, 0]) == 3.0
+
+
+def test_uncommitted_checkpoint_ignored(burst):
+    """Simulate a crash between data write and COMMIT: the step must be
+    invisible to restore (two-phase commit)."""
+    mgr = CheckpointManager(burst)
+    mgr.save(1, _tree(1.0))
+    mgr.save(2, _tree(2.0))
+    burst.unlink(f"{mgr.root}/step-{2:08d}/COMMIT")   # 'crash' before commit
+    assert mgr.steps() == [1]
+    _, step = mgr.restore(_tree())
+    assert step == 1
+
+
+def test_gc_keeps_last_k(burst):
+    mgr = CheckpointManager(burst, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(float(s)))
+    assert mgr.steps() == [3, 4]
+
+
+def test_restore_specific_step(burst):
+    mgr = CheckpointManager(burst, keep=5)
+    mgr.save(1, _tree(1.0))
+    mgr.save(2, _tree(2.0))
+    restored, step = mgr.restore(_tree(), step=1)
+    assert step == 1 and float(restored["params"]["w"][0, 0]) == 2.0
+    with pytest.raises(FSError):
+        mgr.restore(_tree(), step=99)
+
+
+def test_no_checkpoints_raises(burst):
+    mgr = CheckpointManager(burst)
+    with pytest.raises(FSError):
+        mgr.restore(_tree())
+
+
+def test_drain_to_global(burst, tmp_path):
+    gfs = GlobalFS(str(tmp_path / "g"))
+    mgr = CheckpointManager(burst, global_fs=gfs)
+    man = mgr.save(7, _tree(7.0))
+    rep = mgr.drain_to_global(7)
+    assert rep["bytes"] >= man["total_bytes"]
+    # restore from the DRAINED copy via a fresh manager on the global fs
+    mgr2 = CheckpointManager(gfs, root="/persist/ckpt")
+    restored, step = mgr2.restore(_tree())
+    assert step == 7 and float(restored["params"]["w"][0, 0]) == 8.0
+    gfs.teardown()
+
+
+def test_file_per_shard_layout(burst):
+    """The paper's C3 finding drives the layout: one object per leaf, not a
+    single shared file."""
+    mgr = CheckpointManager(burst)
+    mgr.save(1, _tree())
+    files = burst.readdir(f"{mgr.root}/step-{1:08d}")
+    npys = [f for f in files if f.endswith(".npy")]
+    assert len(npys) == 4  # one per leaf

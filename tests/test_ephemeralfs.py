@@ -1,0 +1,162 @@
+"""EphemeralFS functional behaviour: roundtrips, namespace, failure modes."""
+
+import os
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import HealthCheck, given, settings
+
+from repro.core import EphemeralFS, FSError, dom_cluster
+from repro.core.ephemeralfs import CacheSim
+
+
+@pytest.fixture
+def fs(tmp_path):
+    nodes = dom_cluster().storage_nodes[:2]
+    f = EphemeralFS(nodes, str(tmp_path / "efs"), stripe_size=1024)
+    yield f
+    if not f._torn_down:
+        f.teardown()
+
+
+def test_roundtrip_across_stripes(fs):
+    fs.mkdir("/d")
+    fs.create("/d/f")
+    data = bytes(range(256)) * 20  # 5120 B -> 5 chunks over 4 targets
+    fs.write("/d/f", 0, data)
+    assert fs.read("/d/f", 0, len(data)) == data
+    assert fs.stat("/d/f").size == len(data)
+    # offset read
+    assert fs.read("/d/f", 1000, 200) == data[1000:1200]
+
+
+def test_offset_write_and_sparse(fs):
+    fs.create("/f")
+    fs.write("/f", 5000, b"xyz")
+    assert fs.stat("/f").size == 5003
+    out = fs.read("/f", 4998, 5)
+    assert out == b"\x00\x00xyz"
+
+
+def test_namespace_ops(fs):
+    fs.mkdir("/a")
+    fs.mkdir("/a/b")
+    fs.create("/a/b/f1")
+    fs.create("/a/b/f2")
+    assert fs.readdir("/a/b") == ["f1", "f2"]
+    with pytest.raises(FSError):
+        fs.rmdir("/a/b")  # not empty
+    fs.unlink("/a/b/f1")
+    fs.unlink("/a/b/f2")
+    fs.rmdir("/a/b")
+    assert fs.readdir("/a") == []
+
+
+def test_errors(fs):
+    with pytest.raises(FSError):
+        fs.stat("/missing")
+    with pytest.raises(FSError):
+        fs.create("/nodir/f")
+    fs.create("/f")
+    with pytest.raises(FSError):
+        fs.create("/f")  # exists
+    with pytest.raises(FSError):
+        fs.read("/", 0, 1)  # directory
+
+
+def test_chunks_distributed_over_targets(fs):
+    fs.create("/big")
+    fs.write("/big", 0, b"a" * 4096)  # 4 chunks
+    used = [s for s in fs.storage_services if s.bytes_written > 0]
+    assert len(used) == 4  # round-robin over all 4 storage targets
+
+
+def test_kill_node_without_mirror_fails_io(fs):
+    fs.create("/f")
+    fs.write("/f", 0, b"a" * 4096)
+    fs.kill_node(fs.storage_nodes[1].node_id)
+    assert not fs.healthy()
+    with pytest.raises(FSError):
+        fs.read("/f", 0, 4096)
+
+
+def test_mirror_survives_node_loss(tmp_path):
+    nodes = dom_cluster().storage_nodes[:2]
+    fs = EphemeralFS(nodes, str(tmp_path / "m"), stripe_size=512, mirror=True)
+    fs.create("/f")
+    data = os.urandom(4096)
+    fs.write("/f", 0, data)
+    fs.kill_node(nodes[1].node_id)
+    assert fs.read("/f", 0, len(data)) == data  # served from mirrors
+    assert fs.degraded()
+    fs.write("/f", 4096, data)  # writes keep working degraded
+    assert fs.read("/f", 4096, len(data)) == data
+    fs.teardown()
+
+
+def test_teardown_deletes_data(fs):
+    fs.create("/f")
+    fs.write("/f", 0, b"secret")
+    base = fs.base_dir
+    fs.teardown()
+    assert not os.path.exists(base)
+    with pytest.raises(FSError):
+        fs.stat("/f")
+
+
+def test_metadata_sharded_over_services(fs):
+    """Namespace spreads by parent-directory hash (BeeGFS dirent locality:
+    one directory's entries stay on one service; different directories land
+    on different services)."""
+    for i in range(16):
+        fs.mkdir(f"/dir{i}")
+        fs.create(f"/dir{i}/f")
+    owners = {s.service_id for s in fs.md_services if s.inodes}
+    assert len(owners) == 2
+    # all entries of one directory co-located
+    for i in range(16):
+        holding = [s for s in fs.md_services if f"/dir{i}/f" in s.inodes]
+        assert len(holding) == 1
+
+
+def test_monitor_collects(fs):
+    fs.create("/f")
+    fs.write("/f", 0, b"d" * 2048)
+    fs.read("/f", 0, 2048)
+    stats = fs.monitor.collect(fs)
+    assert sum(v["bytes_written"] for v in stats["storage"].values()) == 2048
+    assert sum(v["bytes_read"] for v in stats["storage"].values()) == 2048
+
+
+# -- CacheSim: the C2 mechanism ------------------------------------------------
+def test_cachesim_lru_sequential_readback_thrashes():
+    """Working set > capacity + LRU + sequential read-back => ~0 hit rate
+    (the paper's Fig. 2 read collapse mechanism)."""
+    c = CacheSim(capacity_bytes=10 * 100)
+    for i in range(20):  # write 20 chunks of 100B; cache holds 10
+        c.touch(f"chunk{i}", 100, is_read=False)
+    for i in range(20):  # read back in write order
+        c.touch(f"chunk{i}", 100, is_read=True)
+    assert c.hit_rate() == 0.0
+    assert c.evictions > 0
+
+
+def test_cachesim_fits_all_hits():
+    c = CacheSim(capacity_bytes=100 * 100)
+    for i in range(20):
+        c.touch(f"chunk{i}", 100, is_read=False)
+    for i in range(20):
+        c.touch(f"chunk{i}", 100, is_read=True)
+    assert c.hit_rate() == 1.0
+
+
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(data=st.binary(min_size=1, max_size=5000),
+       offset=st.integers(0, 3000))
+def test_property_write_read_roundtrip(fs, data, offset):
+    path = "/prop"
+    if not fs.exists(path):
+        fs.create(path)
+    fs.write(path, offset, data)
+    assert fs.read(path, offset, len(data)) == data

@@ -1,0 +1,104 @@
+"""EphemeralKV — the paper's §VII generality claim (second data-manager type
+on the same provisioning substrate) — plus async checkpoint drain."""
+
+import os
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+
+from repro.checkpoint import CheckpointManager
+from repro.core import EphemeralFS, EphemeralKV, FSError, GlobalFS, dom_cluster
+
+
+@pytest.fixture
+def kv(tmp_path):
+    store = EphemeralKV(dom_cluster().storage_nodes[:2], str(tmp_path / "kv"))
+    yield store
+    if not store._torn_down:
+        store.teardown()
+
+
+def test_put_get_delete(kv):
+    kv.put("a", b"1")
+    kv.put("b", b"22")
+    assert kv.get("a") == b"1"
+    assert kv.get("b") == b"22"
+    assert kv.get("missing") is None
+    assert kv.delete("a")
+    assert kv.get("a") is None
+    assert not kv.delete("a")
+
+
+def test_overwrite_returns_latest(kv):
+    kv.put("k", b"v1")
+    kv.put("k", b"v2" * 100)
+    assert kv.get("k") == b"v2" * 100
+
+
+def test_keys_partitioned_across_shards(kv):
+    for i in range(64):
+        kv.put(f"key-{i}", bytes([i]))
+    used = [s for s in kv.shards if s.index]
+    assert len(used) == 4  # 2 nodes x 2 shards
+    assert kv.scan() == {f"key-{i}".encode() for i in range(64)}
+
+
+def test_kill_node_without_replica_fails(kv):
+    kv.put("x", b"v")
+    kv.kill_node(kv.shards[0].node_id)
+    assert not kv.healthy()
+    with pytest.raises(FSError):
+        for i in range(32):
+            kv.get(f"probe{i}")   # some key lands on the dead node
+
+
+def test_replicated_survives_node_loss(tmp_path):
+    kv = EphemeralKV(dom_cluster().storage_nodes[:2], str(tmp_path / "kvr"),
+                     replicate=True)
+    data = {f"k{i}": os.urandom(64) for i in range(64)}
+    for k, v in data.items():
+        kv.put(k, v)
+    kv.kill_node(kv.shards[0].node_id)
+    for k, v in data.items():
+        assert kv.get(k) == v     # every key still served via replicas
+    kv.teardown()
+
+
+def test_teardown_deletes_everything(kv):
+    kv.put("secret", b"data")
+    base = kv.base_dir
+    kv.teardown()
+    assert not os.path.exists(base)
+    with pytest.raises(FSError):
+        kv.get("secret")
+
+
+@settings(max_examples=50, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(items=st.dictionaries(st.binary(min_size=1, max_size=32),
+                             st.binary(max_size=256), max_size=24))
+def test_property_kv_semantics(kv, items):
+    for k, v in items.items():
+        kv.put(k, v)
+    for k, v in items.items():
+        assert kv.get(k) == v
+
+
+def test_async_drain(tmp_path):
+    burst = EphemeralFS(dom_cluster().storage_nodes[:2], str(tmp_path / "b"))
+    gfs = GlobalFS(str(tmp_path / "g"))
+    mgr = CheckpointManager(burst, global_fs=gfs)
+    t = {"w": jnp.arange(12.0)}
+    mgr.save(5, t)
+    th = mgr.drain_async(5)
+    mgr.wait_drains()
+    assert not th.is_alive()
+    g = CheckpointManager(gfs, root="/persist/ckpt")
+    restored, step = g.restore(t)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(t["w"]))
+    burst.teardown()
+    gfs.teardown()

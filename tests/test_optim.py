@@ -1,0 +1,82 @@
+"""Optimizer numerics, schedules, gradient compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.optim import AdamWConfig
+
+
+def _params():
+    return {"w": jnp.ones((4, 4), jnp.bfloat16), "b": jnp.zeros((4,), jnp.bfloat16)}
+
+
+def test_adamw_first_step_matches_closed_form():
+    """With bias correction, step 1 update is lr * g/(|g| + eps) + wd term."""
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, grad_clip=1e9)
+    p = {"w": jnp.ones((2,), jnp.float32)}
+    st = optim.init(p)
+    g = {"w": jnp.array([0.5, -2.0])}
+    newp, st2, stats = optim.update(g, st, p, cfg)
+    expect = 1.0 - 0.1 * np.sign(np.array([0.5, -2.0]))
+    np.testing.assert_allclose(np.asarray(newp["w"]), expect, rtol=1e-4)
+    assert int(st2.step) == 1
+
+
+def test_grad_clipping():
+    cfg = AdamWConfig(lr=0.0, grad_clip=1.0)
+    p = {"w": jnp.zeros((3,))}
+    g = {"w": jnp.full((3,), 100.0)}
+    _, _, stats = optim.update(g, optim.init(p), p, cfg)
+    assert float(stats["grad_norm"]) == pytest.approx(np.sqrt(3) * 100, rel=1e-5)
+
+
+def test_weight_decay_pulls_to_zero():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.5, grad_clip=1e9)
+    p = {"w": jnp.full((2,), 2.0)}
+    g = {"w": jnp.zeros((2,))}
+    newp, *_ = optim.update(g, optim.init(p), p, cfg)
+    assert float(newp["w"][0]) < 2.0
+
+
+def test_master_weights_fp32_params_bf16():
+    p = _params()
+    st = optim.init(p)
+    assert st.master["w"].dtype == jnp.float32
+    g = jax.tree.map(lambda x: jnp.ones_like(x, jnp.float32), p)
+    newp, st2, _ = optim.update(g, st, p, AdamWConfig())
+    assert newp["w"].dtype == jnp.bfloat16
+    assert st2.master["w"].dtype == jnp.float32
+
+
+def test_warmup_cosine_shape():
+    s = optim.warmup_cosine
+    assert float(s(0, warmup=10, total=100)) == 0.0
+    assert float(s(10, warmup=10, total=100)) == pytest.approx(1.0)
+    assert float(s(100, warmup=10, total=100)) == pytest.approx(0.1, abs=1e-6)
+    mid = float(s(55, warmup=10, total=100))
+    assert 0.1 < mid < 1.0
+
+
+def test_compression_roundtrip_small_error():
+    g = {"w": jnp.linspace(-1, 1, 256).reshape(16, 16)}
+    ef = optim.ef_init(g)
+    out, ef2, ratio = optim.compress_grads(g, ef)
+    err = float(jnp.max(jnp.abs(out["w"] - g["w"])))
+    assert err <= 1.0 / 127 + 1e-6
+    assert ratio == pytest.approx(0.25, abs=0.01)  # int8 vs f32
+
+
+def test_error_feedback_unbiased_over_time():
+    """Mean compressed gradient converges to the true mean (residual carries
+    the rounding error forward)."""
+    true_g = {"w": jnp.full((8,), 0.003)}
+    ef = optim.ef_init(true_g)
+    acc = jnp.zeros((8,))
+    n = 50
+    for _ in range(n):
+        out, ef, _ = optim.compress_grads(true_g, ef)
+        acc = acc + out["w"]
+    np.testing.assert_allclose(np.asarray(acc / n), 0.003, rtol=0.02)

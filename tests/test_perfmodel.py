@@ -1,0 +1,144 @@
+"""Paper-claims validation (C1..C9, DESIGN.md §1) against the perf model."""
+
+import pytest
+
+from repro.core import (
+    Workload,
+    ault_efs,
+    dom_efs,
+    dom_lustre,
+    hacc_workload,
+    predict_deploy_time,
+    predict_mdtest,
+    predict_read,
+    predict_write,
+)
+
+MiB = 1 << 20
+GB = 1e9
+
+
+def _w(sp_mb, pattern="shared", n=288):
+    return Workload(n_procs=n, size_per_proc=sp_mb * MiB, pattern=pattern)
+
+
+class TestC1SharedWrite:
+    def test_comparable_to_lustre_beyond_32mb(self):
+        """Fig 2: both ~6 GB/s from 32 MB/proc."""
+        for sp in (32, 64, 256):
+            b = predict_write(_w(sp), dom_efs(2)).bandwidth
+            l = predict_write(_w(sp), dom_lustre()).bandwidth
+            assert 5 * GB < b < 7.5 * GB, sp
+            assert 5 * GB < l < 6.5 * GB, sp
+
+    def test_lustre_wins_small_sizes(self):
+        b = predict_write(_w(1), dom_efs(2)).bandwidth
+        l = predict_write(_w(1), dom_lustre()).bandwidth
+        assert l > b
+
+
+class TestC2ReadCollapse:
+    def test_read_2x_lustre_when_cached(self):
+        for sp in (16, 64, 256):
+            b = predict_read(_w(sp), dom_efs(2)).bandwidth
+            l = predict_read(_w(sp), dom_lustre()).bandwidth
+            assert b / l > 1.7, sp
+
+    def test_even_more_at_4mb(self):
+        b = predict_read(_w(4), dom_efs(2)).bandwidth
+        l = predict_read(_w(4), dom_lustre()).bandwidth
+        assert b / l > 2.5
+
+    def test_collapse_at_512mb(self):
+        """Per-server working set 73.72 GB > 64 GB DRAM -> dramatic drop."""
+        ok = predict_read(_w(256), dom_efs(2))
+        bad = predict_read(_w(512), dom_efs(2))
+        assert ok.cache_resident and not bad.cache_resident
+        assert bad.bandwidth < 0.4 * ok.bandwidth
+        assert bad.bound == "cache-thrash"
+
+    def test_collapse_boundary_math(self):
+        """0.5 x 8 x 36 x S_p >= 73.72 GB at S_p = 512 MB (paper §IV-A2)."""
+        per_node = 288 * 512 * MiB / 2
+        assert per_node == pytest.approx(73.72e9, rel=0.05)
+
+
+class TestC3C4FilePerProcess:
+    def test_fpp_peak_near_raw(self):
+        """11.96 GB/s ~ 93% of 4 x 3.2 raw: 'maximum of its capability'."""
+        r = predict_write(_w(64, "fpp"), dom_efs(2))
+        assert r.peak_bandwidth == pytest.approx(11.96 * GB, rel=0.02)
+        assert r.peak_bandwidth / 12.8e9 > 0.9
+
+    def test_fpp_1p7x_shared(self):
+        fpp = predict_write(_w(64, "fpp"), dom_efs(2)).peak_bandwidth
+        sh = predict_write(_w(64), dom_efs(2)).peak_bandwidth
+        assert fpp / sh == pytest.approx(1.7, rel=0.05)
+
+
+class TestC5Scaling:
+    def test_shared_write_logarithmic(self):
+        """1->2 nodes ~3x; 2->4 only ~+30% (Fig 4)."""
+        b1 = predict_write(_w(256), dom_efs(1)).peak_bandwidth
+        b2 = predict_write(_w(256), dom_efs(2)).peak_bandwidth
+        b4 = predict_write(_w(256), dom_efs(4)).peak_bandwidth
+        assert b2 / b1 == pytest.approx(3.0, rel=0.1)
+        assert b4 / b2 == pytest.approx(1.3, rel=0.1)
+
+    def test_fpp_scales_linearly(self):
+        b1 = predict_write(_w(64, "fpp"), dom_efs(1)).peak_bandwidth
+        b4 = predict_write(_w(64, "fpp"), dom_efs(4)).peak_bandwidth
+        assert b4 / b1 == pytest.approx(4.0, rel=0.05)
+
+
+class TestC6Mdtest:
+    def test_lustre_file_creation_3p5x(self):
+        e = predict_mdtest(dom_efs(2))
+        l = predict_mdtest(dom_lustre())
+        ratio = l[("file", "creation")] / e[("file", "creation")]
+        assert ratio == pytest.approx(3.5, rel=0.05)
+
+    def test_beegfs_dir_stat_anomaly(self):
+        """Client-cache-served dir stat: 5.3M op/s >> everything else."""
+        e = predict_mdtest(dom_efs(2))
+        assert e[("dir", "stat")] > 1e6
+        assert e[("dir", "stat")] > 20 * predict_mdtest(dom_lustre())[("dir", "stat")]
+
+    def test_md_rate_scales_with_targets(self):
+        e2 = predict_mdtest(dom_efs(2))
+        e4 = predict_mdtest(dom_efs(4))
+        assert e4[("file", "creation")] == pytest.approx(
+            2 * e2[("file", "creation")], rel=0.01)
+
+
+class TestC7HaccIO:
+    def test_beegfs_peaks(self):
+        w = hacc_workload(288, 4_000_000)  # ~43.8 GB total
+        wr = predict_write(w, dom_efs(2))
+        rd = predict_read(w, dom_efs(2))
+        assert wr.bandwidth == pytest.approx(5.3 * GB, rel=0.05)
+        assert rd.bandwidth == pytest.approx(9.1 * GB, rel=0.05)
+
+    def test_lustre_collapses_on_unaligned(self):
+        w = hacc_workload(288, 4_000_000)
+        assert predict_write(w, dom_lustre()).bandwidth < 1.0 * GB
+        assert predict_read(w, dom_lustre()).bandwidth < 0.4 * GB
+
+
+class TestC8DeployTime:
+    def test_dom(self):
+        assert predict_deploy_time(3, runtime="shifter") == pytest.approx(5.37, abs=0.05)
+
+    def test_ault_fresh_and_warm(self):
+        assert predict_deploy_time(8, runtime="docker") == pytest.approx(4.6, abs=0.05)
+        assert predict_deploy_time(8, runtime="docker", fresh=False) == pytest.approx(1.2, abs=0.05)
+
+
+class TestC9Ault:
+    def test_fpp_peaks(self):
+        """Fig 7: 13.70 GB/s write, 20.36 GB/s read, file-per-process."""
+        w = Workload(n_procs=22, size_per_proc=512 * MiB, pattern="fpp")
+        wr = predict_write(w, ault_efs())
+        rd = predict_read(w, ault_efs())
+        assert wr.peak_bandwidth == pytest.approx(13.70 * GB, rel=0.02)
+        assert rd.peak_bandwidth == pytest.approx(20.36 * GB, rel=0.02)

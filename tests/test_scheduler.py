@@ -1,0 +1,98 @@
+"""Scheduler invariants: no double allocation, release restores, sizing."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (
+    AllocationError,
+    JobRequest,
+    Scheduler,
+    SizingPolicy,
+    StorageRequest,
+    dom_cluster,
+    size_for_checkpoint,
+)
+from repro.core.resources import GB, TB
+
+
+def test_basic_allocate_release():
+    s = Scheduler(dom_cluster())
+    a = s.submit(JobRequest("j1", 4, storage=StorageRequest(nodes=2)))
+    assert len(a.compute_nodes) == 4 and len(a.storage_nodes) == 2
+    assert s.free_counts() == (4, 2)
+    s.release(a)
+    assert s.free_counts() == (8, 4)
+    with pytest.raises(AllocationError):
+        s.release(a)  # double release
+
+
+def test_exhaustion():
+    s = Scheduler(dom_cluster())
+    s.submit(JobRequest("j1", 8))
+    with pytest.raises(AllocationError):
+        s.submit(JobRequest("j2", 1))
+
+
+def test_storage_requires_constraint():
+    s = Scheduler(dom_cluster())
+    with pytest.raises(AllocationError):
+        s.submit(JobRequest("j", 1, storage=StorageRequest(nodes=1), constraint="mc"))
+
+
+def test_capacity_sizing():
+    """2 storage disks/node x 5.9 TB: 20 TB needs 2 nodes."""
+    s = Scheduler(dom_cluster())
+    n = s.resolve_storage_nodes(StorageRequest(capacity_bytes=20 * TB))
+    assert n == 2
+
+
+def test_capability_sizing():
+    """Paper's capability notion (§V): 2 x 3.2 GB/s per node."""
+    s = Scheduler(dom_cluster())
+    assert s.resolve_storage_nodes(StorageRequest(capability_bw=6 * GB)) == 1
+    assert s.resolve_storage_nodes(StorageRequest(capability_bw=12.8 * GB)) == 2
+    assert s.resolve_storage_nodes(StorageRequest(capability_bw=13 * GB)) == 3
+
+
+def test_checkpoint_sizing_helper():
+    req = size_for_checkpoint(64 * GB, stall_budget_s=10, cluster=dom_cluster())
+    s = Scheduler(dom_cluster())
+    assert s.resolve_storage_nodes(req) == 1  # 6.4 GB/s within one node
+
+
+def test_storage_request_validation():
+    with pytest.raises(ValueError):
+        StorageRequest()
+    with pytest.raises(ValueError):
+        StorageRequest(nodes=1, capacity_bytes=1.0)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 4), st.integers(0, 2)), max_size=12))
+def test_property_no_double_allocation(jobs):
+    """Random submit/release sequences never hand a node to two live jobs and
+    always conserve inventory."""
+    s = Scheduler(dom_cluster())
+    live = []
+    for n_c, n_s in jobs:
+        try:
+            a = s.submit(JobRequest(
+                "j", n_c,
+                storage=StorageRequest(nodes=n_s) if n_s else None,
+            ))
+            live.append(a)
+        except AllocationError:
+            if live:
+                s.release(live.pop(0))
+        # invariant: live allocations are disjoint
+        seen = set()
+        for al in s.live_allocations:
+            ids = {n.node_id for n in al.compute_nodes + al.storage_nodes}
+            assert not ids & seen
+            seen |= ids
+        free_c, free_s = s.free_counts()
+        used_c = sum(len(a.compute_nodes) for a in s.live_allocations)
+        used_s = sum(len(a.storage_nodes) for a in s.live_allocations)
+        assert free_c + used_c == 8
+        assert free_s + used_s == 4

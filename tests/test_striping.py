@@ -1,0 +1,81 @@
+"""Striping math: unit + hypothesis property tests."""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.striping import (
+    StripeConfig,
+    bytes_per_target,
+    extents_for_range,
+    targets_touched,
+)
+
+
+def test_single_chunk():
+    cfg = StripeConfig(stripe_size=1024, n_targets=4)
+    exts = list(extents_for_range(cfg, 0, 100))
+    assert len(exts) == 1
+    assert exts[0].target == 0 and exts[0].length == 100
+
+
+def test_crosses_chunks_round_robin():
+    cfg = StripeConfig(stripe_size=100, n_targets=3)
+    exts = list(extents_for_range(cfg, 50, 200))
+    assert [e.target for e in exts] == [0, 1, 2]
+    assert [e.length for e in exts] == [50, 100, 50]
+    assert sum(e.length for e in exts) == 200
+
+
+def test_shift_rotates_targets():
+    cfg = StripeConfig(stripe_size=100, n_targets=4, shift=2)
+    exts = list(extents_for_range(cfg, 0, 400))
+    assert [e.target for e in exts] == [2, 3, 0, 1]
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    stripe=st.integers(1, 1 << 20),
+    n_targets=st.integers(1, 32),
+    shift=st.integers(0, 31),
+    offset=st.integers(0, 1 << 24),
+    length=st.integers(0, 1 << 22),
+)
+def test_extents_partition_range(stripe, n_targets, shift, offset, length):
+    """Extents tile [offset, offset+length) exactly, contiguously, and each
+    lies within one chunk on the correct target."""
+    cfg = StripeConfig(stripe, n_targets, shift % n_targets)
+    pos = offset
+    total = 0
+    for e in extents_for_range(cfg, offset, length):
+        assert e.file_offset == pos
+        assert 0 <= e.chunk_offset < stripe
+        assert e.chunk_offset + e.length <= stripe
+        assert e.chunk_id == e.file_offset // stripe
+        assert e.target == cfg.target_of_chunk(e.chunk_id)
+        assert e.length > 0
+        pos += e.length
+        total += e.length
+    assert total == length
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    stripe=st.integers(1, 4096),
+    n_targets=st.integers(1, 8),
+    offset=st.integers(0, 1 << 16),
+    length=st.integers(1, 1 << 16),
+)
+def test_bytes_per_target_balanced(stripe, n_targets, offset, length):
+    cfg = StripeConfig(stripe, n_targets)
+    per = bytes_per_target(cfg, offset, length)
+    assert sum(per.values()) == length
+    assert set(per) <= set(range(n_targets))
+    # round-robin balance: targets differ by at most one stripe (+ partials)
+    if len(per) == n_targets and n_targets > 1:
+        assert max(per.values()) - min(per.values()) <= 2 * stripe
+
+
+def test_targets_touched_subset():
+    cfg = StripeConfig(100, 8)
+    assert targets_touched(cfg, 0, 100) == {0}
+    assert targets_touched(cfg, 0, 800) == set(range(8))

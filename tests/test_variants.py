@@ -1,0 +1,116 @@
+"""Perf-variant switches keep numerics: moe2d, bf16bwd, dp_decode, padheads.
+
+These are the §Perf hillclimb levers — each must be a pure performance
+transform (same math), so we assert output equality vs the baseline path.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.hints import flag, mesh_hint
+from repro.models import build_model
+from repro.models.layers import rmsnorm, rmsnorm_bf16bwd
+
+
+def test_flag_context():
+    assert not flag("moe2d")
+    with mesh_hint(None, ("moe2d",)):
+        assert flag("moe2d")
+        assert not flag("other")
+    assert not flag("moe2d")
+
+
+def test_moe2d_same_loss_and_grads():
+    cfg = get_smoke("qwen3-moe-30b-a3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0, cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 64), 0, cfg.vocab_size),
+    }
+
+    def loss(p):
+        return model.loss(p, batch)[0]
+
+    l0, g0 = jax.value_and_grad(loss)(params)
+    with mesh_hint(None, ("moe2d",)):
+        l1, g1 = jax.value_and_grad(loss)(params)
+    assert float(l0) == pytest.approx(float(l1), abs=1e-6)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_bf16bwd_norm_matches_autodiff():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 32, 64), jnp.bfloat16)
+    s = jnp.ones((64,), jnp.bfloat16)
+
+    def f_ref(s_, x_):
+        return (rmsnorm({"scale": s_}, x_).astype(jnp.float32) ** 2).sum()
+
+    def f_cus(s_, x_):
+        return (rmsnorm_bf16bwd(s_, x_).astype(jnp.float32) ** 2).sum()
+
+    gr = jax.grad(f_ref, argnums=(0, 1))(s, x)
+    gc = jax.grad(f_cus, argnums=(0, 1))(s, x)
+    for a, b in zip(gr, gc):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=5e-2, rtol=5e-2,  # bf16 cotangent quantization
+        )
+    # cotangent dtype is pinned to the input dtype
+    dx = jax.grad(lambda x_: f_cus(s, x_))(x)
+    assert dx.dtype == jnp.bfloat16
+
+
+def test_padheads_equivalence_with_zero_wo_rows():
+    """Padding q-heads (GROUP-ALIGNED for GQA) with zero wo rows is an exact
+    no-op on outputs: original group-g head i lands at padded slot
+    g*G' + i; pad slots contribute nothing through zero wo rows."""
+    cfg = get_smoke("phi4-mini-3.8b")   # 4 q heads, 2 kv heads in smoke
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.arange(64, dtype=jnp.int32)[None, :] % cfg.vocab_size}
+    logits, _ = model.prefill(params, batch, 70)
+
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    H_pad = H + K  # one pad head per kv group
+    G, Gp = H // K, H_pad // K
+    cfg_p = dataclasses.replace(cfg, n_heads=H_pad)
+    model_p = build_model(cfg_p)
+    params_p = model_p.init(jax.random.PRNGKey(0))
+
+    a = params["layers"]["attn"]
+    b = params_p["layers"]["attn"]
+    wq = jnp.zeros_like(b["wq"]["w"])
+    wo = jnp.zeros_like(b["wo"]["w"])
+    for h in range(H):
+        g, i = divmod(h, G)
+        dst = g * Gp + i
+        wq = wq.at[..., dst * hd:(dst + 1) * hd].set(
+            a["wq"]["w"][..., h * hd:(h + 1) * hd])
+        wo = wo.at[..., dst * hd:(dst + 1) * hd, :].set(
+            a["wo"]["w"][..., h * hd:(h + 1) * hd, :])
+    params_p["layers"]["attn"] = {
+        **b, "wq": {"w": wq}, "wo": {"w": wo},
+        "wk": a["wk"], "wv": a["wv"],
+    }
+    for k in ("ln1", "ln2", "mlp"):
+        params_p["layers"][k] = params["layers"][k]
+    for k in ("embed", "final_norm", "unembed"):
+        if k in params:
+            params_p[k] = params[k]
+    logits_p, _ = model_p.prefill(params_p, batch, 70)
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(logits_p), atol=2e-5, rtol=2e-5)
+
+
+def test_runtime_flags_reach_trace(tmp_path):
+    """RuntimeConfig.flags flow into the traced step via mesh_hint."""
+    from repro.runtime import RuntimeConfig
+    rt = RuntimeConfig(flags=("moe2d",))
+    assert "moe2d" in rt.flags
