@@ -1,0 +1,66 @@
+"""Campaign benchmark: the orchestrator under queue pressure.
+
+200 jobs with more aggregate storage demand than the 4 DataWarp nodes can
+hold at once, pushed through each queueing policy. ``us_per_call`` is the
+wallclock of simulating the whole campaign (the event engine's job is to
+make this milliseconds); ``derived`` reports virtual makespan and
+storage-node utilization.
+"""
+
+from __future__ import annotations
+
+from repro.core import StorageRequest, dom_cluster
+from repro.orchestrator import (
+    BackfillPolicy,
+    FIFOPolicy,
+    Orchestrator,
+    StorageAwarePolicy,
+    summarize,
+)
+from repro.orchestrator.lifecycle import WorkflowSpec
+
+from .common import time_us
+
+N_JOBS = 200
+GB = 1e9
+
+
+def _specs() -> list[WorkflowSpec]:
+    return [
+        WorkflowSpec(
+            name=f"job{i:03d}",
+            n_compute=1 + i % 4,
+            storage=StorageRequest(nodes=1 + i % 3),
+            stage_in_bytes=(8 + 24 * (i % 5)) * GB,
+            stage_out_bytes=(2 + 6 * (i % 3)) * GB,
+            run_time_s=20.0 + 15.0 * (i % 7),
+        )
+        for i in range(N_JOBS)
+    ]
+
+
+def rows():
+    out = []
+    for policy in (FIFOPolicy(), BackfillPolicy(), StorageAwarePolicy()):
+        reports = []
+
+        def campaign():
+            orch = Orchestrator(dom_cluster(), policy=policy)
+            jobs = orch.run_campaign(_specs())
+            reports.append(
+                summarize(jobs, n_storage_nodes=len(orch.scheduler.cluster.storage_nodes))
+            )
+
+        us = time_us(campaign, repeat=2)
+        rep = reports[-1]
+        assert rep.n_done == N_JOBS, f"{policy.name}: {rep.n_failed} jobs failed"
+        out.append(
+            (
+                f"orchestrator/{policy.name}-{N_JOBS}jobs",
+                us,
+                f"makespan={rep.makespan_s:.0f}s "
+                f"util={rep.storage_node_utilization:.2f} "
+                f"wait={rep.mean_queue_wait_s:.0f}s",
+            )
+        )
+    return out

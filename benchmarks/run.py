@@ -20,6 +20,7 @@ def main() -> None:
         ior_shared,
         kernels_bench,
         mdtest,
+        orchestrator_bench,
         roofline,
         scalability,
     )
@@ -33,6 +34,7 @@ def main() -> None:
         ("ault", ault),                    # Fig. 7
         ("deployment", deployment),        # §IV-A1/B1
         ("checkpoint_io", checkpoint_io),  # beyond-paper (§III-B use-case)
+        ("orchestrator", orchestrator_bench),  # beyond-paper campaign pipeline
         ("kernels", kernels_bench),
         ("roofline", roofline),            # §Roofline (reads dry-run artifacts)
     ]

@@ -43,7 +43,7 @@ from .scheduler import (
     StorageRequest,
     size_for_checkpoint,
 )
-from .staging import StageReport, stage, stage_tree
+from .staging import StageReport, modeled_stage_time, stage, stage_tree
 from .striping import Extent, StripeConfig, bytes_per_target, extents_for_range
 
 __all__ = [
@@ -57,6 +57,6 @@ __all__ = [
     "StorageNode", "ault_cluster", "dom_cluster", "tpu_pod_cluster",
     "Allocation", "AllocationError", "JobRequest", "Scheduler", "SizingPolicy",
     "StorageRequest", "size_for_checkpoint",
-    "StageReport", "stage", "stage_tree",
+    "StageReport", "modeled_stage_time", "stage", "stage_tree",
     "Extent", "StripeConfig", "bytes_per_target", "extents_for_range",
 ]

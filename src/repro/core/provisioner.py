@@ -117,12 +117,37 @@ class Provisioner:
             raise FSError("allocation has no storage nodes")
         return DeploymentPlan(
             storage_nodes=alloc.storage_nodes,
-            md_disks_per_node=md_disks_per_node or self.policy.metadata_disks_per_node,
-            storage_disks_per_node=storage_disks_per_node
-            or self.policy.storage_disks_per_node,
+            md_disks_per_node=(
+                md_disks_per_node
+                if md_disks_per_node is not None
+                else self.policy.metadata_disks_per_node
+            ),
+            storage_disks_per_node=(
+                storage_disks_per_node
+                if storage_disks_per_node is not None
+                else self.policy.storage_disks_per_node
+            ),
             stripe_size=stripe_size,
             mirror=mirror,
             runtime=runtime,
+        )
+
+    def model_for(self, plan: DeploymentPlan) -> FSDeployment:
+        """The analytic (perfmodel) view of a plan -- no disk I/O.
+
+        Used by the workflow orchestrator's event-driven engine, which runs
+        whole provisioning campaigns against modeled time only.
+        """
+        node0 = plan.storage_nodes[0]
+        return FSDeployment(
+            kind="ephemeral",
+            n_nodes=len(plan.storage_nodes),
+            storage_targets=plan.n_storage_targets,
+            md_targets=plan.md_disks_per_node * len(plan.storage_nodes),
+            disk=node0.disks[plan.md_disks_per_node].spec,
+            node_dram=node0.dram_bytes,
+            net=self.cluster.interconnect,
+            local_client=self.cluster.name == "ault",
         )
 
     def deploy(self, plan: DeploymentPlan, base_dir: Optional[str] = None) -> Deployment:
@@ -140,17 +165,7 @@ class Provisioner:
         )
         wall = time.perf_counter() - t0
         self._seen_trees.add(base_dir)
-        node0 = plan.storage_nodes[0]
-        model = FSDeployment(
-            kind="ephemeral",
-            n_nodes=len(plan.storage_nodes),
-            storage_targets=plan.n_storage_targets,
-            md_targets=plan.md_disks_per_node * len(plan.storage_nodes),
-            disk=node0.disks[plan.md_disks_per_node].spec,
-            node_dram=node0.dram_bytes,
-            net=self.cluster.interconnect,
-            local_client=self.cluster.name == "ault",
-        )
+        model = self.model_for(plan)
         t_model = predict_deploy_time(
             plan.targets_per_node, runtime=plan.runtime, fresh=fresh
         )

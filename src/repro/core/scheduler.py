@@ -39,6 +39,12 @@ class StorageRequest:
         n_set = sum(x is not None for x in (self.nodes, self.capacity_bytes, self.capability_bw))
         if n_set != 1:
             raise ValueError("set exactly one of nodes/capacity_bytes/capability_bw")
+        if self.nodes is not None and self.nodes <= 0:
+            raise ValueError(f"storage node count must be positive, got {self.nodes}")
+        if self.capacity_bytes is not None and self.capacity_bytes <= 0:
+            raise ValueError(f"capacity_bytes must be positive, got {self.capacity_bytes}")
+        if self.capability_bw is not None and self.capability_bw <= 0:
+            raise ValueError(f"capability_bw must be positive, got {self.capability_bw}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +53,10 @@ class JobRequest:
     n_compute: int
     storage: Optional[StorageRequest] = None
     constraint: str = "storage"
+
+    def __post_init__(self) -> None:
+        if self.n_compute < 0:
+            raise ValueError(f"n_compute must be >= 0, got {self.n_compute}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,6 +125,56 @@ class Scheduler:
             return self.policy.nodes_for_capacity(proto, req.capacity_bytes)
         assert req.capability_bw is not None
         return self.policy.nodes_for_capability(proto, req.capability_bw)
+
+    # -- feasibility (orchestrator queueing path) ----------------------------
+    def demand(self, req: JobRequest) -> tuple[int, int]:
+        """Resolve a request to ``(n_compute, n_storage)`` node counts.
+
+        Raises :class:`AllocationError` for requests that are malformed
+        (storage without the storage constraint) -- these can never be
+        granted, no matter how the cluster drains.
+        """
+        n_storage = 0
+        if req.storage is not None:
+            if req.constraint != "storage":
+                raise AllocationError(
+                    f"{req.job_name}: storage request without storage constraint"
+                )
+            n_storage = self.resolve_storage_nodes(req.storage)
+        return req.n_compute, n_storage
+
+    def feasible(self, req: JobRequest) -> bool:
+        """Could this request ever be granted on an *empty* cluster?"""
+        n_compute, n_storage = self.demand(req)
+        return n_compute <= len(self.cluster.compute_nodes) and n_storage <= len(
+            self.cluster.storage_nodes
+        )
+
+    def can_allocate(self, req: JobRequest) -> bool:
+        """Does the request fit the free pool *right now*?"""
+        n_compute, n_storage = self.demand(req)
+        return n_compute <= len(self._free_compute) and n_storage <= len(
+            self._free_storage
+        )
+
+    def try_submit(self, req: JobRequest) -> Optional[Allocation]:
+        """Non-raising allocation path for queueing schedulers.
+
+        Returns ``None`` when the cluster is merely *busy* (the request fits
+        an empty cluster but not the current free pool) so callers can queue
+        and retry; still raises :class:`AllocationError` for requests that
+        can never be satisfied.
+        """
+        if not self.feasible(req):
+            n_compute, n_storage = self.demand(req)
+            raise AllocationError(
+                f"{req.job_name}: wants {n_compute} compute / {n_storage} storage "
+                f"nodes but the cluster only has "
+                f"{len(self.cluster.compute_nodes)} / {len(self.cluster.storage_nodes)}"
+            )
+        if not self.can_allocate(req):
+            return None
+        return self.submit(req)
 
     # -- allocation ----------------------------------------------------------
     def submit(self, req: JobRequest) -> Allocation:

@@ -39,12 +39,16 @@ def _copy_file(src: DataManager, dst: DataManager, src_path: str, dst_path: str)
     return moved
 
 
-def _modeled_time(
-    nbytes: int,
+def modeled_stage_time(
+    nbytes: float,
     src_model: FSDeployment | None,
     dst_model: FSDeployment | None,
-    n_streams: int,
+    n_streams: int = 8,
 ) -> float:
+    """Modeled wall time to move ``nbytes`` from ``src`` to ``dst``: the
+    slower of the source read and destination write paths at paper scale.
+    Shared with the workflow orchestrator, which advances its virtual clock
+    by this prediction for every stage-in/stage-out phase."""
     w = Workload(n_procs=max(1, n_streams), size_per_proc=nbytes / max(1, n_streams),
                  pattern="fpp")
     t = 0.0
@@ -72,7 +76,7 @@ def stage(
         if parent and parent != "":
             FSClient(dst, "stager").makedirs(parent)
         total += _copy_file(src, dst, sp, dp)
-    t = _modeled_time(total, src_model, dst_model, n_streams)
+    t = modeled_stage_time(total, src_model, dst_model, n_streams)
     return StageReport(files=len(paths), bytes=total, modeled_time_s=t, direction=direction)
 
 

@@ -1,0 +1,34 @@
+"""Event-driven workflow orchestrator over the provisioning substrate.
+
+Turns the paper's hand-driven allocate/provision/stage/run/teardown sequence
+into a pipeline: jobs queue instead of failing when nodes are busy, phase
+durations come from the calibrated perfmodel, faults trigger requeue, and a
+campaign of hundreds of jobs simulates in milliseconds of wallclock.
+"""
+
+from .engine import SimEngine
+from .lifecycle import (
+    TERMINAL_STATES,
+    JobRecord,
+    JobState,
+    Orchestrator,
+    WorkflowSpec,
+)
+from .metrics import (
+    BREAKDOWN_STATES,
+    CampaignReport,
+    JobBreakdown,
+    format_report,
+    job_breakdown,
+    storage_node_utilization,
+    summarize,
+)
+from .policies import BackfillPolicy, FIFOPolicy, QueuePolicy, StorageAwarePolicy
+
+__all__ = [
+    "SimEngine",
+    "TERMINAL_STATES", "JobRecord", "JobState", "Orchestrator", "WorkflowSpec",
+    "BREAKDOWN_STATES", "CampaignReport", "JobBreakdown", "format_report",
+    "job_breakdown", "storage_node_utilization", "summarize",
+    "BackfillPolicy", "FIFOPolicy", "QueuePolicy", "StorageAwarePolicy",
+]

@@ -1,0 +1,75 @@
+"""Event-driven simulation engine with a virtual clock.
+
+The orchestrator advances time by *model predictions* (deploy time C8,
+staging bandwidth, run time), not wallclock: a campaign of hundreds of jobs
+— each spending modeled minutes in provisioning, staging, and compute —
+executes in milliseconds of real time. Classic discrete-event simulation:
+a min-heap of timestamped callbacks, popped in (time, insertion) order so
+simultaneous events fire FIFO.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable, Optional
+
+
+class SimEngine:
+    """A discrete-event loop over a virtual clock."""
+
+    def __init__(self, start: float = 0.0):
+        self._now = start
+        self._heap: list[tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+        self._events_processed = 0
+
+    @property
+    def now(self) -> float:
+        """Current virtual time (seconds)."""
+        return self._now
+
+    @property
+    def events_processed(self) -> int:
+        return self._events_processed
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def at(self, t: float, fn: Callable[[], None]) -> None:
+        """Schedule ``fn`` to fire at virtual time ``t``."""
+        if t < self._now:
+            raise ValueError(f"cannot schedule at {t} < now {self._now}")
+        heapq.heappush(self._heap, (t, next(self._seq), fn))
+
+    def after(self, delay: float, fn: Callable[[], None]) -> None:
+        """Schedule ``fn`` to fire ``delay`` seconds from now."""
+        if delay < 0:
+            raise ValueError(f"negative delay {delay}")
+        self.at(self._now + delay, fn)
+
+    def run(self, until: Optional[float] = None, max_events: int = 1_000_000) -> float:
+        """Drain the event heap; returns the final virtual time.
+
+        ``until`` stops the clock at that time, leaving later events queued.
+        ``max_events`` guards against a pathological self-rescheduling loop.
+        """
+        processed = 0
+        while self._heap:
+            t, _, fn = self._heap[0]
+            if until is not None and t > until:
+                self._now = until
+                return self._now
+            heapq.heappop(self._heap)
+            self._now = t
+            fn()
+            processed += 1
+            self._events_processed += 1
+            if processed >= max_events:
+                raise RuntimeError(
+                    f"engine processed {max_events} events without draining; "
+                    f"likely an event loop (now={self._now})"
+                )
+        if until is not None and until > self._now:
+            self._now = until
+        return self._now

@@ -1,0 +1,291 @@
+"""Job lifecycle state machine over the provisioning pipeline.
+
+The paper's mechanism is a workflow — allocate compute+storage, deploy the
+on-demand file system, stage in, run, stage out, tear down — and this module
+wires the repo's pieces (`Scheduler`, `Provisioner`, staging model, fault
+injection) into one event-driven pipeline:
+
+    QUEUED -> ALLOCATED -> PROVISIONING -> STAGING_IN -> RUNNING
+           -> STAGING_OUT -> TEARDOWN -> DONE
+                                 \\-> (fault) -> requeue or FAILED
+
+Every phase duration comes from the calibrated perfmodel: deployment time
+is C8 (`predict_deploy_time`, warm on retries over the same tree), staging
+time is the slower of the global-FS read and ephemeral-FS write paths
+(`modeled_stage_time`), and the run phase is the job's own compute time.
+A `FaultInjector` may trip any phase; a tripped job releases its nodes and
+requeues (up to ``max_retries``) — the retry pays a *warm* redeploy, the
+paper's §IV-B1 1.2 s vs 4.6 s observation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Optional
+
+from ..core.perfmodel import FSDeployment, dom_lustre, predict_deploy_time
+from ..core.provisioner import Provisioner
+from ..core.scheduler import (
+    Allocation,
+    AllocationError,
+    JobRequest,
+    Scheduler,
+    StorageRequest,
+)
+from ..core.staging import modeled_stage_time
+from ..runtime.fault import FaultInjector
+from .engine import SimEngine
+from .policies import FIFOPolicy, QueuePolicy
+
+
+class JobState(enum.Enum):
+    QUEUED = "queued"
+    ALLOCATED = "allocated"
+    PROVISIONING = "provisioning"
+    STAGING_IN = "staging_in"
+    RUNNING = "running"
+    STAGING_OUT = "staging_out"
+    TEARDOWN = "teardown"
+    DONE = "done"
+    FAILED = "failed"
+
+
+TERMINAL_STATES = frozenset({JobState.DONE, JobState.FAILED})
+
+# Lifecycle phase -> the FaultInjector phase name consulted at its end.
+_FAULT_PHASE = {
+    JobState.PROVISIONING: "provision",
+    JobState.STAGING_IN: "stage_in",
+    JobState.RUNNING: "run",
+    JobState.STAGING_OUT: "stage_out",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkflowSpec:
+    """One job's demands on the provisioning pipeline."""
+
+    name: str
+    n_compute: int
+    storage: Optional[StorageRequest] = None
+    stage_in_bytes: float = 0.0
+    stage_out_bytes: float = 0.0
+    run_time_s: float = 60.0
+    n_streams: int = 8
+    max_retries: int = 2
+    runtime: str = "shifter"
+
+    def __post_init__(self) -> None:
+        if self.run_time_s < 0 or self.stage_in_bytes < 0 or self.stage_out_bytes < 0:
+            raise ValueError(f"negative duration/bytes in spec {self.name!r}")
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if self.storage is None and (self.stage_in_bytes or self.stage_out_bytes):
+            raise ValueError(f"{self.name!r}: staging bytes without a storage request")
+
+
+@dataclasses.dataclass
+class JobRecord:
+    """Mutable per-job bookkeeping the orchestrator and metrics share."""
+
+    spec: WorkflowSpec
+    job_id: int
+    submit_time: float
+    state: JobState = JobState.QUEUED
+    attempt: int = 0
+    allocation: Optional[Allocation] = None
+    alloc_started: Optional[float] = None
+    fs_model: Optional[FSDeployment] = None
+    failure_phase: Optional[str] = None
+    # storage nodes holding a fully-deployed tree of this job's FS: a retry
+    # landing on these nodes redeploys warm (paper §IV-B1)
+    warm_nodes: frozenset = frozenset()
+    history: list[tuple[JobState, float]] = dataclasses.field(default_factory=list)
+    # closed (alloc_time, release_time, n_storage_nodes) intervals per attempt
+    storage_intervals: list[tuple[float, float, int]] = dataclasses.field(
+        default_factory=list
+    )
+    staged_in_bytes: float = 0.0
+    staged_out_bytes: float = 0.0
+
+    @property
+    def request(self) -> JobRequest:
+        return JobRequest(self.spec.name, self.spec.n_compute, storage=self.spec.storage)
+
+    @property
+    def done(self) -> bool:
+        return self.state in TERMINAL_STATES
+
+
+class Orchestrator:
+    """Runs provisioning campaigns: many jobs through one cluster, queued
+    by policy, timed by the perfmodel, perturbed by fault injection."""
+
+    def __init__(
+        self,
+        cluster,
+        *,
+        policy: QueuePolicy | None = None,
+        faults: FaultInjector | None = None,
+        engine: SimEngine | None = None,
+        globalfs_model: FSDeployment | None = None,
+        teardown_time_s: float = 0.5,
+    ):
+        self.engine = engine or SimEngine()
+        self.scheduler = Scheduler(cluster)
+        self.provisioner = Provisioner(cluster)
+        self.policy = policy or FIFOPolicy()
+        self.faults = faults or FaultInjector()
+        self.globalfs_model = globalfs_model or dom_lustre()
+        self.teardown_time_s = teardown_time_s
+        self.queue: list[JobRecord] = []
+        self.jobs: list[JobRecord] = []
+        self._ids = itertools.count(1)
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, spec: WorkflowSpec, at: Optional[float] = None) -> JobRecord:
+        """Enqueue a job at virtual time ``at`` (default: now)."""
+        t = self.engine.now if at is None else at
+        job = JobRecord(spec=spec, job_id=next(self._ids), submit_time=t)
+        self.jobs.append(job)
+        self.engine.at(t, lambda: self._arrive(job))
+        return job
+
+    def _arrive(self, job: JobRecord) -> None:
+        try:
+            feasible = self.scheduler.feasible(job.request)
+        except AllocationError:
+            feasible = False
+        if not feasible:
+            # Never satisfiable on this cluster: fail fast instead of letting
+            # an AllocationError escape the campaign (or queueing forever).
+            job.failure_phase = "infeasible"
+            self._transition(job, JobState.QUEUED)
+            self._transition(job, JobState.FAILED)
+            return
+        self._transition(job, JobState.QUEUED)
+        self.queue.append(job)
+        self._dispatch()
+
+    # -- dispatch loop -------------------------------------------------------
+    def _dispatch(self) -> None:
+        """Start every queued job the policy admits against the free pool."""
+        started = True
+        while started and self.queue:
+            started = False
+            for job in self.policy.order(self.queue, self.scheduler, self.engine.now):
+                alloc = self.scheduler.try_submit(job.request)
+                if alloc is None:
+                    if self.policy.head_blocking:
+                        break
+                    continue
+                self.queue.remove(job)
+                self._start(job, alloc)
+                started = True
+                break                 # re-ask the policy: free pool changed
+
+    def _start(self, job: JobRecord, alloc: Allocation) -> None:
+        job.allocation = alloc
+        job.alloc_started = self.engine.now
+        self._transition(job, JobState.ALLOCATED)
+        if alloc.storage_nodes:
+            plan = self.provisioner.plan_for(alloc, runtime=job.spec.runtime)
+            job.fs_model = self.provisioner.model_for(plan)
+            # warm only when every granted node already holds this job's
+            # fully-deployed tree from an earlier attempt; a retry placed on
+            # different nodes (or after a provisioning fault) deploys fresh
+            ids = frozenset(n.node_id for n in alloc.storage_nodes)
+            t_prov = predict_deploy_time(
+                plan.targets_per_node,
+                runtime=job.spec.runtime,
+                fresh=not ids <= job.warm_nodes,
+            )
+        else:
+            job.fs_model = None
+            t_prov = 0.0
+        self._enter_phase(job, JobState.PROVISIONING, t_prov)
+
+    # -- phase machinery -----------------------------------------------------
+    def _enter_phase(self, job: JobRecord, state: JobState, duration: float) -> None:
+        self._transition(job, state)
+        self.engine.after(duration, lambda: self._phase_done(job, state))
+
+    def _phase_done(self, job: JobRecord, state: JobState) -> None:
+        fault_phase = _FAULT_PHASE.get(state)
+        if fault_phase is not None and self.faults.trip(job.spec.name, fault_phase):
+            self._fail_attempt(job, fault_phase)
+            return
+        if state is JobState.PROVISIONING:
+            if job.allocation is not None:
+                job.warm_nodes = job.warm_nodes | frozenset(
+                    n.node_id for n in job.allocation.storage_nodes
+                )
+            self._enter_phase(job, JobState.STAGING_IN, self._stage_time(job, "in"))
+        elif state is JobState.STAGING_IN:
+            job.staged_in_bytes += job.spec.stage_in_bytes
+            self._enter_phase(job, JobState.RUNNING, job.spec.run_time_s)
+        elif state is JobState.RUNNING:
+            self._enter_phase(job, JobState.STAGING_OUT, self._stage_time(job, "out"))
+        elif state is JobState.STAGING_OUT:
+            job.staged_out_bytes += job.spec.stage_out_bytes
+            self._enter_phase(job, JobState.TEARDOWN, self.teardown_time_s)
+        elif state is JobState.TEARDOWN:
+            self._release(job)
+            self._transition(job, JobState.DONE)
+            self._dispatch()
+
+    def _stage_time(self, job: JobRecord, direction: str) -> float:
+        nbytes = job.spec.stage_in_bytes if direction == "in" else job.spec.stage_out_bytes
+        if nbytes <= 0 or job.fs_model is None:
+            return 0.0
+        if direction == "in":       # global FS read feeds ephemeral FS write
+            src, dst = self.globalfs_model, job.fs_model
+        else:                       # drain back to the global store
+            src, dst = job.fs_model, self.globalfs_model
+        return modeled_stage_time(nbytes, src, dst, job.spec.n_streams)
+
+    def _fail_attempt(self, job: JobRecord, phase: str) -> None:
+        job.failure_phase = phase
+        self._release(job)
+        job.attempt += 1
+        if job.attempt > job.spec.max_retries:
+            self._transition(job, JobState.FAILED)
+        else:
+            self._transition(job, JobState.QUEUED)
+            self.queue.append(job)
+        self._dispatch()
+
+    def _release(self, job: JobRecord) -> None:
+        if job.allocation is None:
+            return
+        t0 = job.alloc_started if job.alloc_started is not None else self.engine.now
+        job.storage_intervals.append(
+            (t0, self.engine.now, len(job.allocation.storage_nodes))
+        )
+        self.scheduler.release(job.allocation)
+        job.allocation = None
+        job.alloc_started = None
+        job.fs_model = None
+
+    def _transition(self, job: JobRecord, state: JobState) -> None:
+        job.state = state
+        job.history.append((state, self.engine.now))
+
+    # -- campaign driver -----------------------------------------------------
+    def run_campaign(
+        self,
+        specs: Optional[list[WorkflowSpec]] = None,
+        *,
+        until: Optional[float] = None,
+    ) -> list[JobRecord]:
+        """Submit ``specs`` (if given), drain the event loop, return records.
+
+        Guarantees every job reaches a terminal state (DONE or FAILED) unless
+        ``until`` cut the clock short.
+        """
+        for spec in specs or []:
+            self.submit(spec)
+        self.engine.run(until=until)
+        return list(self.jobs)

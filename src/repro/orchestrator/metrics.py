@@ -1,0 +1,174 @@
+"""Campaign telemetry: per-job latency breakdowns and cluster-level rollups.
+
+Everything here is derived from the `JobRecord.history` transition logs the
+lifecycle machine writes — no live instrumentation, so a report can be
+computed for any subset of jobs at any point of the campaign.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from .lifecycle import TERMINAL_STATES, JobRecord, JobState
+
+# Phases reported in per-job latency breakdowns, pipeline order.
+BREAKDOWN_STATES = (
+    JobState.QUEUED,
+    JobState.PROVISIONING,
+    JobState.STAGING_IN,
+    JobState.RUNNING,
+    JobState.STAGING_OUT,
+    JobState.TEARDOWN,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class JobBreakdown:
+    """Seconds spent per lifecycle phase, summed across retries."""
+
+    name: str
+    job_id: int
+    final_state: JobState
+    attempts: int
+    phase_s: dict
+    total_s: float
+
+    @property
+    def queue_wait_s(self) -> float:
+        return self.phase_s.get(JobState.QUEUED, 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignReport:
+    n_jobs: int
+    n_done: int
+    n_failed: int
+    makespan_s: float
+    storage_node_utilization: float      # busy node-seconds / capacity
+    total_retries: int
+    staged_in_bytes: float
+    staged_out_bytes: float
+    mean_queue_wait_s: float
+    max_queue_wait_s: float
+    mean_phase_s: dict
+    breakdowns: tuple
+
+
+def job_breakdown(job: JobRecord, now: Optional[float] = None) -> JobBreakdown:
+    """Fold a job's transition history into per-phase durations."""
+    phase_s: dict = {s: 0.0 for s in BREAKDOWN_STATES}
+    hist = job.history
+    for (state, t0), (_, t1) in zip(hist, hist[1:]):
+        if state in phase_s:
+            phase_s[state] += t1 - t0
+    if hist and hist[-1][0] not in TERMINAL_STATES and now is not None:
+        state, t0 = hist[-1]
+        if state in phase_s:
+            phase_s[state] += now - t0
+    end = hist[-1][1] if hist else job.submit_time
+    if now is not None and job.state not in TERMINAL_STATES:
+        end = now
+    # each attempt (initial or requeue) opens with a QUEUED transition, so
+    # the count is exact for DONE, FAILED-exhausted, and still-running jobs
+    attempts = max(1, sum(s is JobState.QUEUED for s, _ in hist))
+    return JobBreakdown(
+        name=job.spec.name,
+        job_id=job.job_id,
+        final_state=job.state,
+        attempts=attempts,
+        phase_s=phase_s,
+        total_s=end - job.submit_time,
+    )
+
+
+def storage_node_utilization(
+    jobs: Sequence[JobRecord],
+    n_storage_nodes: int,
+    makespan_s: float,
+    now: Optional[float] = None,
+) -> float:
+    """Busy storage-node-seconds over the campaign's node-second capacity.
+
+    Pass ``now`` for a mid-campaign snapshot: allocations still open at
+    ``now`` count as busy from their start time."""
+    if n_storage_nodes <= 0 or makespan_s <= 0:
+        return 0.0
+    busy = sum(
+        (t1 - t0) * n for job in jobs for (t0, t1, n) in job.storage_intervals
+    )
+    if now is not None:
+        busy += sum(
+            (now - job.alloc_started) * len(job.allocation.storage_nodes)
+            for job in jobs
+            if job.allocation is not None and job.alloc_started is not None
+        )
+    return busy / (n_storage_nodes * makespan_s)
+
+
+def summarize(
+    jobs: Sequence[JobRecord],
+    *,
+    n_storage_nodes: int,
+    now: Optional[float] = None,
+) -> CampaignReport:
+    if not jobs:
+        raise ValueError("no jobs to summarize")
+    breakdowns = tuple(job_breakdown(j, now) for j in jobs)
+    t_start = min(j.submit_time for j in jobs)
+    t_end = max(
+        (h[-1][1] for j in jobs if (h := j.history)), default=t_start
+    )
+    if now is not None:
+        t_end = max(t_end, now)
+    makespan = t_end - t_start
+    waits = [b.queue_wait_s for b in breakdowns]
+    mean_phase = {
+        s: sum(b.phase_s[s] for b in breakdowns) / len(breakdowns)
+        for s in BREAKDOWN_STATES
+    }
+    return CampaignReport(
+        n_jobs=len(jobs),
+        n_done=sum(j.state is JobState.DONE for j in jobs),
+        n_failed=sum(j.state is JobState.FAILED for j in jobs),
+        makespan_s=makespan,
+        storage_node_utilization=storage_node_utilization(
+            jobs, n_storage_nodes, makespan, now
+        ),
+        total_retries=sum(b.attempts - 1 for b in breakdowns),
+        staged_in_bytes=sum(j.staged_in_bytes for j in jobs),
+        staged_out_bytes=sum(j.staged_out_bytes for j in jobs),
+        mean_queue_wait_s=sum(waits) / len(waits),
+        max_queue_wait_s=max(waits),
+        mean_phase_s=mean_phase,
+        breakdowns=breakdowns,
+    )
+
+
+def format_report(report: CampaignReport, *, top_n: int = 10) -> str:
+    """Human-readable campaign summary + the ``top_n`` slowest jobs."""
+    lines = [
+        f"jobs: {report.n_jobs} ({report.n_done} done, {report.n_failed} failed, "
+        f"{report.total_retries} retries)",
+        f"makespan: {report.makespan_s:,.1f} s (virtual)",
+        f"storage-node utilization: {report.storage_node_utilization:.1%}",
+        f"staged: {report.staged_in_bytes / 1e9:,.1f} GB in, "
+        f"{report.staged_out_bytes / 1e9:,.1f} GB out",
+        f"queue wait: mean {report.mean_queue_wait_s:,.1f} s, "
+        f"max {report.max_queue_wait_s:,.1f} s",
+        "mean phase breakdown (s): "
+        + "  ".join(
+            f"{s.value}={report.mean_phase_s[s]:,.1f}" for s in BREAKDOWN_STATES
+        ),
+        f"slowest {min(top_n, report.n_jobs)} jobs:",
+    ]
+    slowest = sorted(report.breakdowns, key=lambda b: -b.total_s)[:top_n]
+    for b in slowest:
+        phases = "  ".join(
+            f"{s.value}={b.phase_s[s]:,.1f}" for s in BREAKDOWN_STATES
+        )
+        lines.append(
+            f"  {b.name:<20s} {b.final_state.value:<7s} x{b.attempts} "
+            f"total={b.total_s:,.1f}s  {phases}"
+        )
+    return "\n".join(lines)

@@ -1,0 +1,78 @@
+"""Queueing policies: which waiting job starts when nodes free up.
+
+The seed repo's `Scheduler.submit` hard-fails when the free pool is short;
+the orchestrator instead holds a queue and consults a policy every time
+capacity changes. Three policies, in increasing awareness:
+
+* **FIFO** — strict arrival order with head-of-line blocking: if the oldest
+  job doesn't fit, nothing starts (the classic batch-queue baseline).
+* **Backfill** — arrival order, but jobs that fit may jump a blocked head
+  (EASY-style backfill without reservations; small jobs drain around a
+  large one).
+* **Storage-aware** — orders by resolved *storage-node* demand, smallest
+  first, so scarce DataWarp nodes turn over quickly; an aging threshold
+  promotes long-waiting jobs back to arrival order to prevent starvation.
+  This is the data-aware scheduling direction of Raicu et al.'s Data
+  Diffusion applied to the paper's schedulable-storage model.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import TYPE_CHECKING, Sequence
+
+if TYPE_CHECKING:  # circular: lifecycle imports policies
+    from ..core.scheduler import Scheduler
+    from .lifecycle import JobRecord
+
+
+class QueuePolicy(abc.ABC):
+    """Orders the wait queue for dispatch; the orchestrator starts jobs in
+    the returned order, stopping at the first misfit iff ``head_blocking``."""
+
+    name: str = "abstract"
+    head_blocking: bool = False
+
+    @abc.abstractmethod
+    def order(
+        self, queue: Sequence["JobRecord"], scheduler: "Scheduler", now: float
+    ) -> list["JobRecord"]:
+        ...
+
+
+class FIFOPolicy(QueuePolicy):
+    name = "fifo"
+    head_blocking = True
+
+    def order(self, queue, scheduler, now):
+        return list(queue)          # queue is maintained in arrival order
+
+
+class BackfillPolicy(QueuePolicy):
+    name = "backfill"
+    head_blocking = False
+
+    def order(self, queue, scheduler, now):
+        return list(queue)
+
+
+class StorageAwarePolicy(QueuePolicy):
+    """Smallest storage demand first, with aging anti-starvation."""
+
+    name = "storage-aware"
+    head_blocking = False
+
+    def __init__(self, aging_s: float = 3600.0):
+        if aging_s <= 0:
+            raise ValueError("aging_s must be positive")
+        self.aging_s = aging_s
+
+    def order(self, queue, scheduler, now):
+        def key(job):
+            aged = (now - job.submit_time) >= self.aging_s
+            if aged:
+                return (0, job.submit_time, job.submit_time)
+            _, n_storage = scheduler.demand(job.request)
+            return (1, n_storage, job.submit_time)
+
+        return sorted(queue, key=key)

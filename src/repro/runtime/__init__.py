@@ -1,4 +1,4 @@
-from .fault import HeartbeatMonitor, RestartPlan, plan_restart
+from .fault import FaultInjector, FaultSpec, HeartbeatMonitor, RestartPlan, plan_restart
 from .parallel import (
     RuntimeConfig,
     TrainState,
@@ -21,7 +21,7 @@ from .sharding import (
 )
 
 __all__ = [
-    "HeartbeatMonitor", "RestartPlan", "plan_restart",
+    "FaultInjector", "FaultSpec", "HeartbeatMonitor", "RestartPlan", "plan_restart",
     "RuntimeConfig", "TrainState", "jit_decode_step", "jit_prefill",
     "jit_train_step", "make_decode_step", "make_prefill", "make_train_state",
     "make_train_step", "train_state_shardings",

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import random
 import time
 from typing import Optional
 
@@ -102,3 +103,52 @@ def plan_restart(
         restore_step=committed_steps[-1] if committed_steps else None,
         dropped_nodes=dropped_nodes,
     )
+
+
+# --------------------------------------------------------------------------
+# Per-phase fault injection for the workflow orchestrator
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Per-phase trip probabilities for a provisioning workflow.
+
+    Each probability is the chance that the named lifecycle phase fails on
+    a given attempt (deploy daemon crash, staging transfer error, node loss
+    mid-run). Deterministic under ``seed`` so campaigns are reproducible.
+    """
+
+    provision_fail_p: float = 0.0
+    stage_in_fail_p: float = 0.0
+    run_fail_p: float = 0.0
+    stage_out_fail_p: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        for f in ("provision_fail_p", "stage_in_fail_p", "run_fail_p", "stage_out_fail_p"):
+            p = getattr(self, f)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{f} must be in [0, 1], got {p}")
+
+
+class FaultInjector:
+    """Seeded coin-flipper the orchestrator consults at each phase boundary."""
+
+    _PHASE_FIELDS = {
+        "provision": "provision_fail_p",
+        "stage_in": "stage_in_fail_p",
+        "run": "run_fail_p",
+        "stage_out": "stage_out_fail_p",
+    }
+
+    def __init__(self, spec: FaultSpec | None = None):
+        self.spec = spec or FaultSpec()
+        self._rng = random.Random(self.spec.seed)
+        self.trips: list[tuple[str, str]] = []     # (job_name, phase)
+
+    def trip(self, job_name: str, phase: str) -> bool:
+        """Does ``phase`` of ``job_name`` fail on this attempt?"""
+        p = getattr(self.spec, self._PHASE_FIELDS[phase])
+        tripped = p > 0.0 and self._rng.random() < p
+        if tripped:
+            self.trips.append((job_name, phase))
+        return tripped

@@ -2,8 +2,10 @@
 
 import os
 
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import HealthCheck, given, settings
 
 from repro.core import EphemeralFS, FSError, dom_cluster

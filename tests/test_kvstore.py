@@ -3,10 +3,12 @@ on the same provisioning substrate) — plus async checkpoint drain."""
 
 import os
 
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import HealthCheck, given, settings
 
 from repro.checkpoint import CheckpointManager

@@ -1,0 +1,360 @@
+"""Orchestrator subsystem: engine, lifecycle, policies, metrics, campaigns."""
+
+import time
+
+import pytest
+
+from repro.core import AllocationError, StorageRequest, dom_cluster
+from repro.core.perfmodel import predict_deploy_time
+from repro.orchestrator import (
+    BackfillPolicy,
+    FIFOPolicy,
+    JobState,
+    Orchestrator,
+    SimEngine,
+    StorageAwarePolicy,
+    WorkflowSpec,
+    format_report,
+    job_breakdown,
+    summarize,
+)
+from repro.runtime import FaultInjector, FaultSpec
+
+GB = 1e9
+
+
+# -- engine ------------------------------------------------------------------
+def test_engine_orders_events():
+    eng = SimEngine()
+    fired = []
+    eng.after(5.0, lambda: fired.append("b"))
+    eng.after(1.0, lambda: fired.append("a"))
+    eng.at(5.0, lambda: fired.append("c"))      # same time: insertion order
+    assert eng.run() == 5.0
+    assert fired == ["a", "b", "c"]
+
+
+def test_engine_nested_scheduling_and_until():
+    eng = SimEngine()
+    fired = []
+
+    def first():
+        fired.append(eng.now)
+        eng.after(10.0, lambda: fired.append(eng.now))
+
+    eng.after(2.0, first)
+    assert eng.run(until=5.0) == 5.0
+    assert fired == [2.0]
+    assert eng.run() == 12.0
+    assert fired == [2.0, 12.0]
+
+
+def test_engine_rejects_past_and_detects_loops():
+    eng = SimEngine()
+    eng.after(1.0, lambda: None)
+    eng.run()
+    with pytest.raises(ValueError):
+        eng.at(0.5, lambda: None)
+
+    def reschedule():
+        eng.after(1.0, reschedule)
+
+    eng.after(1.0, reschedule)
+    with pytest.raises(RuntimeError):
+        eng.run(max_events=100)
+
+
+# -- single-job lifecycle ----------------------------------------------------
+def test_single_job_walks_all_states():
+    orch = Orchestrator(dom_cluster())
+    job = orch.submit(
+        WorkflowSpec("j", 4, StorageRequest(nodes=2),
+                     stage_in_bytes=10 * GB, stage_out_bytes=5 * GB,
+                     run_time_s=100.0)
+    )
+    orch.engine.run()
+    states = [s for s, _ in job.history]
+    assert states == [
+        JobState.QUEUED, JobState.ALLOCATED, JobState.PROVISIONING,
+        JobState.STAGING_IN, JobState.RUNNING, JobState.STAGING_OUT,
+        JobState.TEARDOWN, JobState.DONE,
+    ]
+    times = [t for _, t in job.history]
+    assert times == sorted(times)
+    # provisioning advanced the clock by the C8 model (Dom, 3 targets/node)
+    b = job_breakdown(job)
+    assert b.phase_s[JobState.PROVISIONING] == pytest.approx(
+        predict_deploy_time(3, runtime="shifter"), abs=1e-9
+    )
+    assert b.phase_s[JobState.RUNNING] == pytest.approx(100.0)
+    assert b.phase_s[JobState.STAGING_IN] > 0
+    assert b.phase_s[JobState.STAGING_OUT] > 0
+    # nodes fully returned
+    assert orch.scheduler.free_counts() == (8, 4)
+    assert job.staged_in_bytes == 10 * GB and job.staged_out_bytes == 5 * GB
+
+
+def test_job_without_storage_skips_staging():
+    orch = Orchestrator(dom_cluster())
+    job = orch.submit(WorkflowSpec("compute-only", 2, run_time_s=50.0))
+    orch.engine.run()
+    assert job.state is JobState.DONE
+    b = job_breakdown(job)
+    assert b.phase_s[JobState.PROVISIONING] == 0.0
+    assert b.phase_s[JobState.STAGING_IN] == 0.0
+    assert b.phase_s[JobState.RUNNING] == pytest.approx(50.0)
+
+
+def test_infeasible_job_fails_fast_without_raising():
+    orch = Orchestrator(dom_cluster())
+    job = orch.submit(WorkflowSpec("too-big", 100, StorageRequest(nodes=2)))
+    orch.engine.run()
+    assert job.state is JobState.FAILED
+    assert job.failure_phase == "infeasible"
+    assert not orch.queue
+
+
+# -- queueing (the fail-on-busy behavior is gone) ----------------------------
+def test_busy_cluster_queues_instead_of_failing():
+    orch = Orchestrator(dom_cluster())
+    a = orch.submit(WorkflowSpec("a", 8, StorageRequest(nodes=4), run_time_s=100.0))
+    b = orch.submit(WorkflowSpec("b", 8, StorageRequest(nodes=4), run_time_s=10.0))
+    orch.engine.run()
+    assert a.state is JobState.DONE and b.state is JobState.DONE
+    # b could only start after a released everything
+    b_alloc = next(t for s, t in b.history if s is JobState.ALLOCATED)
+    a_done = next(t for s, t in a.history if s is JobState.DONE)
+    assert b_alloc >= a_done
+
+
+def test_fifo_head_of_line_blocks_but_backfill_overtakes():
+    def specs():
+        # both wide jobs need the whole storage pool; tiny is compute-only,
+        # so under FIFO it still waits behind the blocked head
+        return [
+            WorkflowSpec("wide", 4, StorageRequest(nodes=4), run_time_s=100.0),
+            WorkflowSpec("wide2", 4, StorageRequest(nodes=4), run_time_s=100.0),
+            WorkflowSpec("tiny", 1, run_time_s=1.0),
+        ]
+
+    fifo = Orchestrator(dom_cluster(), policy=FIFOPolicy())
+    fifo_jobs = fifo.run_campaign(specs())
+    bf = Orchestrator(dom_cluster(), policy=BackfillPolicy())
+    bf_jobs = bf.run_campaign(specs())
+
+    def done_time(jobs, name):
+        j = next(x for x in jobs if x.spec.name == name)
+        return next(t for s, t in j.history if s is JobState.DONE)
+
+    # FIFO: tiny waits behind both wide jobs; backfill: tiny slips through
+    assert done_time(bf_jobs, "tiny") < done_time(fifo_jobs, "tiny")
+    assert all(j.state is JobState.DONE for j in fifo_jobs + bf_jobs)
+
+
+def test_storage_aware_prefers_small_storage_demand():
+    orch = Orchestrator(dom_cluster(), policy=StorageAwarePolicy(aging_s=1e6))
+    blocker = orch.submit(WorkflowSpec("blocker", 1, StorageRequest(nodes=4),
+                                       run_time_s=10.0))
+    # arrival order is big-then-small; storage-aware starts small first and
+    # big (which needs the whole pool) must wait for small to drain
+    big = orch.submit(WorkflowSpec("big", 1, StorageRequest(nodes=4), run_time_s=10.0))
+    small = orch.submit(WorkflowSpec("small", 1, StorageRequest(nodes=1), run_time_s=10.0))
+    orch.engine.run()
+    assert all(j.state is JobState.DONE for j in (blocker, big, small))
+    alloc = {
+        j.spec.name: next(t for s, t in j.history if s is JobState.ALLOCATED)
+        for j in (big, small)
+    }
+    assert alloc["small"] < alloc["big"]
+
+
+# -- faults & retries --------------------------------------------------------
+def test_fault_requeues_then_succeeds():
+    faults = FaultInjector(FaultSpec(run_fail_p=0.5, seed=2))
+    orch = Orchestrator(dom_cluster(), faults=faults)
+    job = orch.submit(WorkflowSpec("f", 1, StorageRequest(nodes=1), max_retries=20))
+    orch.engine.run()
+    assert job.state is JobState.DONE
+    if faults.trips:                           # retried at least once
+        assert job.attempt == len(faults.trips)
+        assert [s for s, _ in job.history].count(JobState.QUEUED) == job.attempt + 1
+
+
+def test_fault_exhausts_retries_to_failed_and_releases_nodes():
+    faults = FaultInjector(FaultSpec(run_fail_p=1.0, seed=3))
+    orch = Orchestrator(dom_cluster(), faults=faults)
+    job = orch.submit(WorkflowSpec("f", 2, StorageRequest(nodes=2), max_retries=1))
+    orch.engine.run()
+    assert job.state is JobState.FAILED
+    assert job.attempt == 2                     # initial + 1 retry
+    assert job.failure_phase == "run"
+    assert orch.scheduler.free_counts() == (8, 4)
+    # each attempt held (and returned) its storage nodes
+    assert len(job.storage_intervals) == 2
+    assert all(n == 2 for _, _, n in job.storage_intervals)
+
+
+def test_retry_after_provision_fault_redeploys_fresh():
+    """A provisioning fault means no tree ever landed: the retry pays the
+    fresh deploy again, not the warm one."""
+    faults = FaultInjector(FaultSpec(provision_fail_p=1.0, seed=4))
+    orch = Orchestrator(dom_cluster(), faults=faults)
+    job = orch.submit(WorkflowSpec("p", 1, StorageRequest(nodes=1), max_retries=1))
+    orch.engine.run()
+    assert job.state is JobState.FAILED
+    prov_spans = [
+        t1 - t0
+        for (s0, t0), (_, t1) in zip(job.history, job.history[1:])
+        if s0 is JobState.PROVISIONING
+    ]
+    assert len(prov_spans) == 2
+    fresh = predict_deploy_time(3, fresh=True)
+    assert all(d == pytest.approx(fresh) for d in prov_spans)
+
+
+def test_retry_on_different_nodes_redeploys_fresh():
+    """If another job grabbed the faulted job's nodes, the retry lands on a
+    different (cold) node and must deploy fresh."""
+    faults = FaultInjector(FaultSpec(run_fail_p=0.5, seed=6))
+    orch = Orchestrator(dom_cluster(), policy=BackfillPolicy(), faults=faults)
+    jobs = orch.run_campaign(
+        [
+            WorkflowSpec(f"j{i}", 1, StorageRequest(nodes=1),
+                         run_time_s=10.0, max_retries=10)
+            for i in range(12)
+        ]
+    )
+    assert all(j.state is JobState.DONE for j in jobs)
+    fresh = predict_deploy_time(3, fresh=True)
+    warm = predict_deploy_time(3, fresh=False)
+    for job in jobs:
+        spans = [
+            t1 - t0
+            for (s0, t0), (_, t1) in zip(job.history, job.history[1:])
+            if s0 is JobState.PROVISIONING
+        ]
+        # first deploy of any job is always fresh; later ones are warm only
+        # on nodes it already deployed to
+        assert spans[0] == pytest.approx(fresh)
+        for d in spans[1:]:
+            assert d == pytest.approx(fresh) or d == pytest.approx(warm)
+
+
+def test_midcampaign_utilization_counts_open_allocations():
+    orch = Orchestrator(dom_cluster())
+    orch.submit(WorkflowSpec("long", 2, StorageRequest(nodes=4), run_time_s=1000.0))
+    orch.engine.run(until=500.0)
+    rep = summarize(orch.jobs, n_storage_nodes=4, now=orch.engine.now)
+    assert rep.n_done == 0
+    assert rep.storage_node_utilization > 0.9      # all 4 nodes busy so far
+
+
+def test_total_retries_exact_for_exhausted_job():
+    faults = FaultInjector(FaultSpec(run_fail_p=1.0, seed=8))
+    orch = Orchestrator(dom_cluster(), faults=faults)
+    jobs = orch.run_campaign(
+        [WorkflowSpec("doomed", 1, StorageRequest(nodes=1), max_retries=0)]
+    )
+    rep = summarize(jobs, n_storage_nodes=4)
+    assert rep.n_failed == 1
+    assert rep.total_retries == 0                  # one attempt, zero retries
+    assert rep.breakdowns[0].attempts == 1
+
+
+def test_retry_redeploys_warm():
+    faults = FaultInjector(FaultSpec(stage_in_fail_p=1.0, seed=5))
+    orch = Orchestrator(dom_cluster(), faults=faults)
+    job = orch.submit(WorkflowSpec("w", 1, StorageRequest(nodes=1),
+                                   stage_in_bytes=GB, max_retries=1))
+    orch.engine.run()
+    prov_spans = []
+    for (s0, t0), (_, t1) in zip(job.history, job.history[1:]):
+        if s0 is JobState.PROVISIONING:
+            prov_spans.append(t1 - t0)
+    assert len(prov_spans) == 2
+    assert prov_spans[0] == pytest.approx(predict_deploy_time(3, fresh=True))
+    assert prov_spans[1] == pytest.approx(predict_deploy_time(3, fresh=False))
+    assert prov_spans[1] < prov_spans[0]
+
+
+# -- acceptance campaign -----------------------------------------------------
+@pytest.mark.parametrize("policy_cls", [FIFOPolicy, BackfillPolicy, StorageAwarePolicy])
+def test_campaign_100plus_jobs_oversubscribed(policy_cls):
+    """>=100 jobs demanding far more storage than the 4 free nodes: no
+    AllocationError escapes, everything queues and finishes, metrics report
+    the breakdowns, and the event engine keeps wallclock tiny."""
+    cluster = dom_cluster()
+    faults = FaultInjector(
+        FaultSpec(provision_fail_p=0.02, stage_in_fail_p=0.02, run_fail_p=0.01, seed=11)
+    )
+    orch = Orchestrator(cluster, policy=policy_cls(), faults=faults)
+    specs = [
+        WorkflowSpec(
+            name=f"job{i:03d}",
+            n_compute=1 + i % 4,
+            storage=StorageRequest(nodes=1 + i % 3),
+            stage_in_bytes=(4 + 12 * (i % 5)) * GB,
+            stage_out_bytes=(1 + 3 * (i % 3)) * GB,
+            run_time_s=20.0 + 10.0 * (i % 6),
+            max_retries=5,
+        )
+        for i in range(120)
+    ]
+    t0 = time.perf_counter()
+    jobs = orch.run_campaign(specs)
+    wallclock = time.perf_counter() - t0
+
+    assert len(jobs) == 120
+    assert all(j.state is JobState.DONE for j in jobs)
+    assert not orch.queue
+    assert orch.scheduler.free_counts() == (8, 4)
+
+    rep = summarize(jobs, n_storage_nodes=len(cluster.storage_nodes))
+    assert rep.n_done == 120 and rep.n_failed == 0
+    # oversubscription showed up as real queueing and real virtual time
+    assert rep.max_queue_wait_s > 0
+    assert rep.makespan_s > 1000.0
+    assert 0.0 < rep.storage_node_utilization <= 1.0
+    # >= because a job that trips after a successful stage-in re-stages on retry
+    assert rep.staged_in_bytes >= sum(s.stage_in_bytes for s in specs)
+    # per-job breakdowns cover the whole pipeline
+    for b in rep.breakdowns:
+        assert b.phase_s[JobState.RUNNING] > 0
+        assert b.total_s >= b.phase_s[JobState.RUNNING]
+    # the virtual campaign must simulate fast
+    assert wallclock < 5.0
+    assert "storage-node utilization" in format_report(rep)
+
+
+def test_campaign_metrics_consistency():
+    orch = Orchestrator(dom_cluster(), policy=BackfillPolicy())
+    jobs = orch.run_campaign(
+        [
+            WorkflowSpec(f"j{i}", 2, StorageRequest(nodes=2),
+                         stage_in_bytes=GB, run_time_s=10.0)
+            for i in range(8)
+        ]
+    )
+    rep = summarize(jobs, n_storage_nodes=4)
+    for b in rep.breakdowns:
+        assert b.total_s == pytest.approx(sum(b.phase_s.values()), rel=1e-9)
+    # two 2-node jobs fit at once; utilization reflects overlap, not serial sum
+    assert rep.storage_node_utilization <= 1.0
+
+
+def test_try_submit_never_escapes_allocation_error_when_feasible():
+    orch = Orchestrator(dom_cluster())
+    # saturate, then submit a feasible job: must queue, not raise
+    orch.submit(WorkflowSpec("sat", 8, StorageRequest(nodes=4), run_time_s=5.0))
+    job = orch.submit(WorkflowSpec("q", 8, StorageRequest(nodes=4), run_time_s=5.0))
+    orch.engine.run()
+    assert job.state is JobState.DONE
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        WorkflowSpec("bad", 1, stage_in_bytes=GB)          # staging w/o storage
+    with pytest.raises(ValueError):
+        WorkflowSpec("bad", 1, run_time_s=-1.0)
+    with pytest.raises(ValueError):
+        WorkflowSpec("bad", 1, max_retries=-1)

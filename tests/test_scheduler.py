@@ -1,7 +1,9 @@
 """Scheduler invariants: no double allocation, release restores, sizing."""
 
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import (

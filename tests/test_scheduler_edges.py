@@ -1,0 +1,125 @@
+"""Scheduler edge cases the orchestrator relies on (no hypothesis needed):
+double-release, free-pool restoration under interleaving, sizing round-trips,
+request validation, and the non-raising try-allocate path."""
+
+import pytest
+
+from repro.core import (
+    AllocationError,
+    JobRequest,
+    Scheduler,
+    SizingPolicy,
+    StorageRequest,
+    dom_cluster,
+)
+from repro.core.resources import GB, TB
+
+
+def test_double_release_raises():
+    s = Scheduler(dom_cluster())
+    a = s.submit(JobRequest("j", 2, storage=StorageRequest(nodes=1)))
+    s.release(a)
+    with pytest.raises(AllocationError):
+        s.release(a)
+    assert s.free_counts() == (8, 4)
+
+
+def test_interleaved_submit_release_restores_pool():
+    s = Scheduler(dom_cluster())
+    a = s.submit(JobRequest("a", 3, storage=StorageRequest(nodes=2)))
+    b = s.submit(JobRequest("b", 2, storage=StorageRequest(nodes=1)))
+    s.release(a)
+    c = s.submit(JobRequest("c", 5, storage=StorageRequest(nodes=3)))
+    s.release(b)
+    s.release(c)
+    assert s.free_counts() == (8, 4)
+    # no node ended up in two live allocations along the way
+    assert s.live_allocations == ()
+    # the full pool is allocatable again
+    d = s.submit(JobRequest("d", 8, storage=StorageRequest(nodes=4)))
+    assert len(d.compute_nodes) == 8 and len(d.storage_nodes) == 4
+
+
+def test_capability_sizing_round_trip():
+    """capability -> node count -> that many nodes actually deliver it."""
+    cluster = dom_cluster()
+    s = Scheduler(cluster)
+    policy = SizingPolicy()
+    for bw in (1 * GB, 6.4 * GB, 10 * GB, 19.2 * GB):
+        req = StorageRequest(capability_bw=bw)
+        n = s.resolve_storage_nodes(req)
+        node = cluster.storage_nodes[0]
+        per_node = sum(
+            d.spec.write_bw for d in node.disks[: policy.storage_disks_per_node]
+        )
+        assert n * per_node >= bw                  # delivered >= requested
+        if n > 1:
+            assert (n - 1) * per_node < bw         # and n is minimal
+
+
+def test_capacity_sizing_round_trip():
+    cluster = dom_cluster()
+    s = Scheduler(cluster)
+    per_node = 2 * 5.9 * TB                        # 2 storage disks per node
+    for cap in (1 * TB, 11.8 * TB, 12 * TB, 40 * TB):
+        n = s.resolve_storage_nodes(StorageRequest(capacity_bytes=cap))
+        assert n * per_node >= cap
+        if n > 1:
+            assert (n - 1) * per_node < cap
+
+
+def test_zero_and_negative_storage_requests_rejected():
+    with pytest.raises(ValueError):
+        StorageRequest(nodes=0)
+    with pytest.raises(ValueError):
+        StorageRequest(nodes=-2)
+    with pytest.raises(ValueError):
+        StorageRequest(capacity_bytes=0.0)
+    with pytest.raises(ValueError):
+        StorageRequest(capability_bw=-1.0)
+    with pytest.raises(ValueError):
+        JobRequest("j", -1)
+
+
+def test_try_submit_busy_vs_infeasible():
+    s = Scheduler(dom_cluster())
+    held = s.submit(JobRequest("hold", 8, storage=StorageRequest(nodes=4)))
+    # busy: feasible on an empty cluster -> None, not an exception
+    assert s.try_submit(JobRequest("q", 4, storage=StorageRequest(nodes=2))) is None
+    # infeasible: bigger than the cluster -> raises even while busy
+    with pytest.raises(AllocationError):
+        s.try_submit(JobRequest("huge", 9))
+    with pytest.raises(AllocationError):
+        s.try_submit(JobRequest("huge-storage", 1, storage=StorageRequest(nodes=5)))
+    s.release(held)
+    granted = s.try_submit(JobRequest("q", 4, storage=StorageRequest(nodes=2)))
+    assert granted is not None
+    assert len(granted.compute_nodes) == 4 and len(granted.storage_nodes) == 2
+
+
+def test_can_allocate_and_feasible():
+    s = Scheduler(dom_cluster())
+    req = JobRequest("j", 4, storage=StorageRequest(nodes=2))
+    assert s.feasible(req) and s.can_allocate(req)
+    a = s.submit(JobRequest("hog", 6, storage=StorageRequest(nodes=3)))
+    assert s.feasible(req) and not s.can_allocate(req)
+    s.release(a)
+    assert s.can_allocate(req)
+    # malformed (storage without constraint) raises from demand()
+    with pytest.raises(AllocationError):
+        s.demand(JobRequest("bad", 1, storage=StorageRequest(nodes=1), constraint="mc"))
+
+
+def test_provisioner_explicit_zero_md_disks_not_replaced_by_default(tmp_path):
+    """The falsy-zero fix: md_disks_per_node=0 must survive plan_for."""
+    from repro.core import Provisioner
+
+    cluster = dom_cluster()
+    s = Scheduler(cluster)
+    alloc = s.submit(JobRequest("j", 1, storage=StorageRequest(nodes=2)))
+    prov = Provisioner(cluster)
+    plan = prov.plan_for(alloc, md_disks_per_node=0, storage_disks_per_node=3)
+    assert plan.md_disks_per_node == 0
+    assert plan.storage_disks_per_node == 3
+    assert plan.targets_per_node == 3
+    s.release(alloc)

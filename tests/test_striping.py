@@ -1,5 +1,8 @@
 """Striping math: unit + hypothesis property tests."""
 
+import pytest
+
+pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 from hypothesis import given, settings
 
