@@ -1,0 +1,127 @@
+"""Persistent pools vs per-job provisioning on a shared-dataset campaign.
+
+The acceptance scenario for the pool subsystem: >= 100 jobs sharing <= 10
+datasets on an oversubscribed cluster (dom: 4 DataWarp nodes). The baseline
+provisions a job-scoped file system per job and re-stages every shared
+dataset from the global FS each time (the paper's mechanism, PR 1's
+orchestrator); the pooled mode pins the storage nodes under two persistent
+pools, routes jobs to their data with ``DataAwarePolicy``, and stages each
+dataset once per residency — later references are cache hits. Pool ledgers
+are capped below hardware capacity so the LRU eviction engine sees real
+pressure.
+
+``derived`` reports both modes' virtual makespan, the stage-in bytes saved,
+the dataset hit rate, and eviction counts. The pooled mode must beat the
+baseline on makespan (including its one-time pool deploys) and save >= 50%
+of the baseline's stage-in traffic — asserted here, so `benchmarks/run.py`
+fails loudly if the subsystem regresses.
+"""
+
+from __future__ import annotations
+
+from repro.core import StorageRequest, dom_cluster
+from repro.orchestrator import (
+    BackfillPolicy,
+    DataAwarePolicy,
+    JobState,
+    Orchestrator,
+    summarize,
+)
+from repro.orchestrator.lifecycle import WorkflowSpec
+from repro.pool import DatasetRef
+
+from .common import time_us
+
+GB = 1e9
+N_JOBS = 120
+N_DATASETS = 8          # <= 10 shared datasets
+POOL_CAP_GB = 110.0     # per-pool ledger cap -> eviction pressure
+
+
+def _datasets() -> list[DatasetRef]:
+    return [
+        DatasetRef(f"ds{k}", (15.0 + 5.0 * (k % 4)) * GB) for k in range(N_DATASETS)
+    ]
+
+
+def _refs(i: int, ds: list[DatasetRef]) -> tuple[DatasetRef, ...]:
+    """1-3 shared inputs per job, with skewed popularity (low ids hotter)."""
+    picks = {i % N_DATASETS, (i * i + 1) % (N_DATASETS // 2)}
+    if i % 3 == 0:
+        picks.add((i // 3) % N_DATASETS)
+    return tuple(ds[k] for k in sorted(picks))
+
+
+def _specs(ds: list[DatasetRef], *, pooled: bool) -> list[WorkflowSpec]:
+    return [
+        WorkflowSpec(
+            name=f"job{i:03d}",
+            n_compute=1 + i % 3,
+            storage=None if pooled else StorageRequest(nodes=1 + i % 2),
+            datasets=_refs(i, ds),
+            use_pool=pooled,
+            stage_in_bytes=2 * GB,
+            stage_out_bytes=1 * GB,
+            run_time_s=20.0 + 5.0 * (i % 6),
+        )
+        for i in range(N_JOBS)
+    ]
+
+
+def run_baseline():
+    ds = _datasets()
+    orch = Orchestrator(dom_cluster(), policy=BackfillPolicy())
+    jobs = orch.run_campaign(_specs(ds, pooled=False))
+    assert all(j.state is JobState.DONE for j in jobs)
+    return summarize(jobs, n_storage_nodes=4)
+
+
+def run_pooled():
+    ds = _datasets()
+    orch = Orchestrator(dom_cluster(), policy=BackfillPolicy())
+    pools = orch.enable_pools(ttl_s=None)
+    p1 = pools.create_pool(nodes=2, cap_bytes=POOL_CAP_GB * GB)
+    p2 = pools.create_pool(nodes=2, cap_bytes=POOL_CAP_GB * GB)
+    orch.policy = DataAwarePolicy(pools)
+    jobs = orch.run_campaign(_specs(ds, pooled=True))
+    assert all(j.state is JobState.DONE for j in jobs)
+    rep = summarize(jobs, n_storage_nodes=4, pools=pools)
+    setup_s = p1.deploy_time_s + p2.deploy_time_s
+    return rep, setup_s
+
+
+def rows():
+    base_reports, pool_reports = [], []
+
+    us_base = time_us(lambda: base_reports.append(run_baseline()), repeat=2)
+    us_pool = time_us(lambda: pool_reports.append(run_pooled()), repeat=2)
+
+    base = base_reports[-1]
+    pooled, setup_s = pool_reports[-1]
+    p = pooled.pool
+
+    saved_frac = pooled.stage_in_bytes_saved / base.staged_in_bytes
+    # acceptance: >= 50% stage-in bytes saved, strictly lower makespan
+    assert saved_frac >= 0.5, f"only {saved_frac:.1%} stage-in bytes saved"
+    assert pooled.makespan_s + setup_s < base.makespan_s, (
+        f"pooled {pooled.makespan_s + setup_s:.0f}s not under "
+        f"baseline {base.makespan_s:.0f}s"
+    )
+    assert p is not None and p.evictions > 0, "no eviction pressure exercised"
+
+    return [
+        (
+            f"pool/per-job-{N_JOBS}jobs",
+            us_base,
+            f"makespan={base.makespan_s:.0f}s "
+            f"staged_in={base.staged_in_bytes / GB:.0f}GB",
+        ),
+        (
+            f"pool/pooled-data-aware-{N_JOBS}jobs",
+            us_pool,
+            f"makespan={pooled.makespan_s:.0f}s(+{setup_s:.1f}s setup) "
+            f"staged_in={pooled.staged_in_bytes / GB:.0f}GB "
+            f"saved={saved_frac:.0%} hit_rate={p.hit_rate:.0%} "
+            f"evictions={p.evictions}",
+        ),
+    ]

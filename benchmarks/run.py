@@ -21,6 +21,7 @@ def main() -> None:
         kernels_bench,
         mdtest,
         orchestrator_bench,
+        pool_bench,
         roofline,
         scalability,
     )
@@ -35,6 +36,7 @@ def main() -> None:
         ("deployment", deployment),        # §IV-A1/B1
         ("checkpoint_io", checkpoint_io),  # beyond-paper (§III-B use-case)
         ("orchestrator", orchestrator_bench),  # beyond-paper campaign pipeline
+        ("pool", pool_bench),              # beyond-paper persistent pools
         ("kernels", kernels_bench),
         ("roofline", roofline),            # §Roofline (reads dry-run artifacts)
     ]

@@ -115,8 +115,35 @@ class Provisioner:
     ) -> DeploymentPlan:
         if not alloc.storage_nodes:
             raise FSError("allocation has no storage nodes")
+        return self.plan_for_nodes(
+            alloc.storage_nodes,
+            mirror=mirror,
+            stripe_size=stripe_size,
+            md_disks_per_node=md_disks_per_node,
+            storage_disks_per_node=storage_disks_per_node,
+            runtime=runtime,
+        )
+
+    def plan_for_nodes(
+        self,
+        storage_nodes: tuple[StorageNode, ...],
+        *,
+        mirror: bool = False,
+        stripe_size: int = DEFAULT_STRIPE,
+        md_disks_per_node: Optional[int] = None,
+        storage_disks_per_node: Optional[int] = None,
+        runtime: Literal["shifter", "docker"] = "shifter",
+    ) -> DeploymentPlan:
+        """Plan a deployment over an explicit node set (no Allocation needed).
+
+        The persistent-pool subsystem plans its long-lived file systems this
+        way: the pool holds the nodes through its own scheduler allocation
+        and re-plans (warm) deployments over the same set across leases.
+        """
+        if not storage_nodes:
+            raise FSError("no storage nodes to plan over")
         return DeploymentPlan(
-            storage_nodes=alloc.storage_nodes,
+            storage_nodes=tuple(storage_nodes),
             md_disks_per_node=(
                 md_disks_per_node
                 if md_disks_per_node is not None
@@ -131,6 +158,15 @@ class Provisioner:
             mirror=mirror,
             runtime=runtime,
         )
+
+    def is_warm(self, base_dir: str) -> bool:
+        """Would a deploy into ``base_dir`` take the warm (1.2 s) path?"""
+        return base_dir in self._seen_trees and os.path.isdir(base_dir)
+
+    def forget_tree(self, base_dir: str) -> None:
+        """Drop a tree from the warm cache (pool retirement / eviction of a
+        pool-resident tree): the next deploy over it pays the fresh cost."""
+        self._seen_trees.discard(base_dir)
 
     def model_for(self, plan: DeploymentPlan) -> FSDeployment:
         """The analytic (perfmodel) view of a plan -- no disk I/O.

@@ -75,17 +75,23 @@ class SizingPolicy:
     storage_disks_per_node: int = 2
     metadata_disks_per_node: int = 1
 
-    def nodes_for_capacity(self, node: StorageNode, capacity: float) -> int:
-        per_node = sum(
+    def node_capacity_bytes(self, node: StorageNode) -> float:
+        """Usable bytes one node contributes (its storage-role disks)."""
+        return sum(
             d.spec.capacity_bytes for d in node.disks[: self.storage_disks_per_node]
         )
-        return max(1, math.ceil(capacity / per_node))
 
-    def nodes_for_capability(self, node: StorageNode, bw: float) -> int:
-        per_node = sum(
+    def node_capability_bw(self, node: StorageNode) -> float:
+        """Aggregate write bandwidth one node contributes (storage-role disks)."""
+        return sum(
             d.spec.write_bw for d in node.disks[: self.storage_disks_per_node]
         )
-        return max(1, math.ceil(bw / per_node))
+
+    def nodes_for_capacity(self, node: StorageNode, capacity: float) -> int:
+        return max(1, math.ceil(capacity / self.node_capacity_bytes(node)))
+
+    def nodes_for_capability(self, node: StorageNode, bw: float) -> int:
+        return max(1, math.ceil(bw / self.node_capability_bw(node)))
 
 
 class Scheduler:
@@ -115,19 +121,40 @@ class Scheduler:
         return len(self._free_compute), len(self._free_storage)
 
     # -- sizing (paper §V trade-off) ----------------------------------------
-    def resolve_storage_nodes(self, req: StorageRequest) -> int:
+    def resolve_storage_nodes(
+        self, req: StorageRequest, *, assume_empty: bool = False
+    ) -> int:
+        """Resolve a capacity/capability request to a node count.
+
+        Sizing is against the **minimum** per-node contribution across the
+        candidate nodes, so any subset the allocator picks delivers at least
+        the requested bytes/bandwidth — on heterogeneous storage nodes a
+        single-prototype sizing (the old ``storage_nodes[0]``) over- or
+        under-sizes whenever node 0 isn't the weakest.
+
+        Candidates are the currently free storage nodes (what a grant would
+        actually draw from); with ``assume_empty`` (the feasibility question
+        "could this ever fit?") or an exhausted free pool, the whole
+        inventory. Min over the free subset >= min over all nodes, so the
+        empty-cluster count is the largest and feasibility stays conservative.
+        """
         if not self.cluster.storage_nodes:
             raise AllocationError("cluster has no storage nodes")
-        proto = self.cluster.storage_nodes[0]
         if req.nodes is not None:
             return req.nodes
+        if assume_empty or not self._free_storage:
+            candidates = self.cluster.storage_nodes
+        else:
+            candidates = tuple(self._free_storage.values())
         if req.capacity_bytes is not None:
-            return self.policy.nodes_for_capacity(proto, req.capacity_bytes)
+            weakest = min(candidates, key=self.policy.node_capacity_bytes)
+            return self.policy.nodes_for_capacity(weakest, req.capacity_bytes)
         assert req.capability_bw is not None
-        return self.policy.nodes_for_capability(proto, req.capability_bw)
+        weakest = min(candidates, key=self.policy.node_capability_bw)
+        return self.policy.nodes_for_capability(weakest, req.capability_bw)
 
     # -- feasibility (orchestrator queueing path) ----------------------------
-    def demand(self, req: JobRequest) -> tuple[int, int]:
+    def demand(self, req: JobRequest, *, assume_empty: bool = False) -> tuple[int, int]:
         """Resolve a request to ``(n_compute, n_storage)`` node counts.
 
         Raises :class:`AllocationError` for requests that are malformed
@@ -140,12 +167,12 @@ class Scheduler:
                 raise AllocationError(
                     f"{req.job_name}: storage request without storage constraint"
                 )
-            n_storage = self.resolve_storage_nodes(req.storage)
+            n_storage = self.resolve_storage_nodes(req.storage, assume_empty=assume_empty)
         return req.n_compute, n_storage
 
     def feasible(self, req: JobRequest) -> bool:
         """Could this request ever be granted on an *empty* cluster?"""
-        n_compute, n_storage = self.demand(req)
+        n_compute, n_storage = self.demand(req, assume_empty=True)
         return n_compute <= len(self.cluster.compute_nodes) and n_storage <= len(
             self.cluster.storage_nodes
         )
@@ -169,7 +196,7 @@ class Scheduler:
             n_compute, n_storage = self.demand(req)
             raise AllocationError(
                 f"{req.job_name}: wants {n_compute} compute / {n_storage} storage "
-                f"nodes but the cluster only has "
+                "nodes but the cluster only has "
                 f"{len(self.cluster.compute_nodes)} / {len(self.cluster.storage_nodes)}"
             )
         if not self.can_allocate(req):

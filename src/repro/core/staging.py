@@ -48,7 +48,14 @@ def modeled_stage_time(
     """Modeled wall time to move ``nbytes`` from ``src`` to ``dst``: the
     slower of the source read and destination write paths at paper scale.
     Shared with the workflow orchestrator, which advances its virtual clock
-    by this prediction for every stage-in/stage-out phase."""
+    by this prediction for every stage-in/stage-out phase (and by the pool
+    subsystem, which charges only the *missing* dataset bytes on a cache hit).
+
+    Zero (or negative) byte counts are a no-op — an empty stage must not pay
+    the perfmodel's fixed setup ramp — and ``n_streams`` is clamped to >= 1.
+    """
+    if nbytes <= 0:
+        return 0.0
     w = Workload(n_procs=max(1, n_streams), size_per_proc=nbytes / max(1, n_streams),
                  pattern="fpp")
     t = 0.0

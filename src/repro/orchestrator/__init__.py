@@ -3,9 +3,18 @@
 Turns the paper's hand-driven allocate/provision/stage/run/teardown sequence
 into a pipeline: jobs queue instead of failing when nodes are busy, phase
 durations come from the calibrated perfmodel, faults trigger requeue, and a
-campaign of hundreds of jobs simulates in milliseconds of wallclock.
+campaign of hundreds of jobs simulates in milliseconds. Campaigns can draw
+arrivals from a Poisson process (`arrivals`) and, with a persistent-pool
+subsystem attached (`Orchestrator.enable_pools`, see ``repro.pool``), route
+jobs to pools already holding their input datasets via `DataAwarePolicy`.
 """
 
+from .arrivals import (
+    exponential_interarrivals,
+    mean_interarrival,
+    poisson_arrivals,
+    replay_trace,
+)
 from .engine import SimEngine
 from .lifecycle import (
     TERMINAL_STATES,
@@ -18,17 +27,29 @@ from .metrics import (
     BREAKDOWN_STATES,
     CampaignReport,
     JobBreakdown,
+    PoolReport,
     format_report,
     job_breakdown,
+    pool_report,
     storage_node_utilization,
     summarize,
 )
-from .policies import BackfillPolicy, FIFOPolicy, QueuePolicy, StorageAwarePolicy
+from .policies import (
+    BackfillPolicy,
+    DataAwarePolicy,
+    FIFOPolicy,
+    QueuePolicy,
+    StorageAwarePolicy,
+)
 
 __all__ = [
     "SimEngine",
     "TERMINAL_STATES", "JobRecord", "JobState", "Orchestrator", "WorkflowSpec",
-    "BREAKDOWN_STATES", "CampaignReport", "JobBreakdown", "format_report",
-    "job_breakdown", "storage_node_utilization", "summarize",
-    "BackfillPolicy", "FIFOPolicy", "QueuePolicy", "StorageAwarePolicy",
+    "BREAKDOWN_STATES", "CampaignReport", "JobBreakdown", "PoolReport",
+    "format_report", "job_breakdown", "pool_report",
+    "storage_node_utilization", "summarize",
+    "BackfillPolicy", "DataAwarePolicy", "FIFOPolicy", "QueuePolicy",
+    "StorageAwarePolicy",
+    "exponential_interarrivals", "mean_interarrival", "poisson_arrivals",
+    "replay_trace",
 ]

@@ -1,0 +1,64 @@
+"""Arrival processes for provisioning campaigns.
+
+The first ROADMAP orchestrator follow-up: instead of dumping every job on the
+queue at t=0 (worst-case burst), campaigns can draw arrivals from a seeded
+Poisson process — the standard open-system model for batch submissions — or
+replay a recorded trace deterministically. Both produce a ``submit_times``
+list for :meth:`Orchestrator.run_campaign`.
+
+Seeding uses a private ``random.Random`` instance, so two campaigns with the
+same (rate, n, seed) see byte-identical arrival sequences regardless of any
+global RNG state.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Iterable, Sequence
+
+
+def exponential_interarrivals(
+    rate_per_s: float, n: int, *, seed: int = 0
+) -> list[float]:
+    """``n`` i.i.d. Exp(rate) gaps — the memoryless inter-arrival law."""
+    if rate_per_s <= 0:
+        raise ValueError(f"rate_per_s must be positive, got {rate_per_s}")
+    if n < 0:
+        raise ValueError(f"n must be >= 0, got {n}")
+    rng = random.Random(seed)
+    return [rng.expovariate(rate_per_s) for _ in range(n)]
+
+
+def poisson_arrivals(
+    rate_per_s: float, n: int, *, seed: int = 0, start: float = 0.0
+) -> list[float]:
+    """``n`` absolute arrival times of a Poisson process with the given rate,
+    beginning at ``start``. Monotone non-decreasing by construction."""
+    if start < 0:
+        raise ValueError(f"start must be >= 0, got {start}")
+    times = []
+    t = start
+    for gap in exponential_interarrivals(rate_per_s, n, seed=seed):
+        t += gap
+        times.append(t)
+    return times
+
+
+def replay_trace(times: Iterable[float], *, start: float = 0.0) -> list[float]:
+    """Validate a recorded arrival trace for deterministic replay.
+
+    Returns the times sorted (submission order is by time, whatever order the
+    trace file listed them in) and shifted by ``start``. Negative times are
+    rejected — the virtual clock cannot schedule into the past.
+    """
+    out = sorted(float(t) for t in times)
+    if out and out[0] < 0:
+        raise ValueError(f"trace has negative arrival time {out[0]}")
+    return [t + start for t in out]
+
+
+def mean_interarrival(times: Sequence[float]) -> float:
+    """Empirical mean gap of an arrival sequence (trace sanity checks)."""
+    if len(times) < 2:
+        return 0.0
+    return (times[-1] - times[0]) / (len(times) - 1)

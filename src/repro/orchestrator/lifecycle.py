@@ -16,6 +16,15 @@ time is the slower of the global-FS read and ephemeral-FS write paths
 A `FaultInjector` may trip any phase; a tripped job releases its nodes and
 requeues (up to ``max_retries``) — the retry pays a *warm* redeploy, the
 paper's §IV-B1 1.2 s vs 4.6 s observation.
+
+**Pool-backed jobs** (``WorkflowSpec.use_pool`` with a `PoolManager` attached
+via :meth:`Orchestrator.enable_pools`) ride the same state machine but swap
+the expensive edges for persistent-pool ones: instead of allocating storage
+nodes and deploying a fresh file system, they acquire a *lease* on a
+long-lived pool — the PROVISIONING slot costs only the lease attach, the
+TEARDOWN slot is free (the pool outlives the job), and STAGING_IN moves only
+the dataset bytes *not already resident* on the granted pool (plus the job's
+private scratch). Datasets staged by one job are cache hits for the next.
 """
 
 from __future__ import annotations
@@ -35,6 +44,9 @@ from ..core.scheduler import (
     StorageRequest,
 )
 from ..core.staging import modeled_stage_time
+from ..pool.catalog import DatasetRef, total_bytes
+from ..pool.manager import PoolManager
+from ..pool.pool import Lease
 from ..runtime.fault import FaultInjector
 from .engine import SimEngine
 from .policies import FIFOPolicy, QueuePolicy
@@ -65,7 +77,13 @@ _FAULT_PHASE = {
 
 @dataclasses.dataclass(frozen=True)
 class WorkflowSpec:
-    """One job's demands on the provisioning pipeline."""
+    """One job's demands on the provisioning pipeline.
+
+    ``datasets`` are *shared* inputs by reference (`DatasetRef`): a pool-backed
+    job (``use_pool=True``) only stages the ones not already resident on its
+    granted pool, while a job-scoped job re-stages all of them every time.
+    ``stage_in_bytes``/``stage_out_bytes`` remain the job's private traffic.
+    """
 
     name: str
     n_compute: int
@@ -76,14 +94,39 @@ class WorkflowSpec:
     n_streams: int = 8
     max_retries: int = 2
     runtime: str = "shifter"
+    datasets: tuple = ()              # tuple[DatasetRef, ...] shared inputs
+    use_pool: bool = False
 
     def __post_init__(self) -> None:
+        object.__setattr__(self, "datasets", tuple(self.datasets))
         if self.run_time_s < 0 or self.stage_in_bytes < 0 or self.stage_out_bytes < 0:
             raise ValueError(f"negative duration/bytes in spec {self.name!r}")
         if self.max_retries < 0:
             raise ValueError("max_retries must be >= 0")
-        if self.storage is None and (self.stage_in_bytes or self.stage_out_bytes):
+        if any(not isinstance(d, DatasetRef) for d in self.datasets):
+            raise ValueError(f"{self.name!r}: datasets must be DatasetRef instances")
+        if len({d.name for d in self.datasets}) != len(self.datasets):
+            raise ValueError(f"{self.name!r}: duplicate dataset names")
+        if self.use_pool and self.storage is not None:
+            raise ValueError(
+                f"{self.name!r}: use_pool jobs lease pool capacity; "
+                "drop the per-job storage request"
+            )
+        if (
+            self.storage is None
+            and not self.use_pool
+            and (self.stage_in_bytes or self.stage_out_bytes or self.datasets)
+        ):
             raise ValueError(f"{self.name!r}: staging bytes without a storage request")
+
+    @property
+    def dataset_bytes(self) -> float:
+        return total_bytes(self.datasets)
+
+    @property
+    def scratch_bytes(self) -> float:
+        """Private pool capacity a lease must reserve on top of datasets."""
+        return self.stage_in_bytes + self.stage_out_bytes
 
 
 @dataclasses.dataclass
@@ -109,10 +152,18 @@ class JobRecord:
     )
     staged_in_bytes: float = 0.0
     staged_out_bytes: float = 0.0
+    # pool-backed bookkeeping (summed across retries)
+    lease: Optional[Lease] = None
+    pool_id: Optional[int] = None
+    dataset_hits: int = 0
+    dataset_misses: int = 0
+    stage_in_saved_bytes: float = 0.0
 
     @property
     def request(self) -> JobRequest:
-        return JobRequest(self.spec.name, self.spec.n_compute, storage=self.spec.storage)
+        # pool-backed jobs draw storage from a lease, not the scheduler
+        storage = None if self.spec.use_pool else self.spec.storage
+        return JobRequest(self.spec.name, self.spec.n_compute, storage=storage)
 
     @property
     def done(self) -> bool:
@@ -140,13 +191,27 @@ class Orchestrator:
         self.faults = faults or FaultInjector()
         self.globalfs_model = globalfs_model or dom_lustre()
         self.teardown_time_s = teardown_time_s
+        self.pools: Optional[PoolManager] = None
         self.queue: list[JobRecord] = []
         self.jobs: list[JobRecord] = []
         self._ids = itertools.count(1)
 
+    # -- pools ----------------------------------------------------------------
+    def enable_pools(self, **kwargs) -> PoolManager:
+        """Attach a persistent-pool subsystem over this orchestrator's own
+        scheduler/provisioner. Create pools on the returned manager before
+        (or during) the campaign; ``use_pool`` jobs lease from them."""
+        kwargs.setdefault("clock", lambda: self.engine.now)
+        self.pools = PoolManager(self.scheduler, self.provisioner, **kwargs)
+        return self.pools
+
     # -- submission ----------------------------------------------------------
     def submit(self, spec: WorkflowSpec, at: Optional[float] = None) -> JobRecord:
         """Enqueue a job at virtual time ``at`` (default: now)."""
+        if spec.use_pool and self.pools is None:
+            raise ValueError(
+                f"{spec.name!r}: use_pool requires enable_pools() first"
+            )
         t = self.engine.now if at is None else at
         job = JobRecord(spec=spec, job_id=next(self._ids), submit_time=t)
         self.jobs.append(job)
@@ -158,6 +223,9 @@ class Orchestrator:
             feasible = self.scheduler.feasible(job.request)
         except AllocationError:
             feasible = False
+        if feasible and job.spec.use_pool:
+            # no pool could ever hold the working set -> fail fast
+            feasible = self.pools.feasible(job.spec.datasets, job.spec.scratch_bytes)
         if not feasible:
             # Never satisfiable on this cluster: fail fast instead of letting
             # an AllocationError escape the campaign (or queueing forever).
@@ -176,21 +244,63 @@ class Orchestrator:
         while started and self.queue:
             started = False
             for job in self.policy.order(self.queue, self.scheduler, self.engine.now):
+                lease = None
+                if job.spec.use_pool:
+                    if not self.pools.feasible(
+                        job.spec.datasets, job.spec.scratch_bytes
+                    ):
+                        # every pool that could have held this working set is
+                        # gone (retired/reaped): fail fast instead of
+                        # stranding the job in the queue forever
+                        self.queue.remove(job)
+                        job.failure_phase = "infeasible"
+                        self._transition(job, JobState.FAILED)
+                        started = True
+                        break
+                    # check compute first (side-effect free), then lease: a
+                    # failed compute fit must not evict datasets for nothing
+                    if not self.scheduler.can_allocate(job.request):
+                        if self.policy.head_blocking:
+                            break
+                        continue
+                    lease = self.pools.try_acquire(
+                        job.spec.name,
+                        job.spec.datasets,
+                        job.spec.scratch_bytes,
+                        now=self.engine.now,
+                    )
+                    if lease is None:
+                        if self.policy.head_blocking:
+                            break
+                        continue
                 alloc = self.scheduler.try_submit(job.request)
                 if alloc is None:
+                    if lease is not None:
+                        self.pools.release(lease, self.engine.now)
                     if self.policy.head_blocking:
                         break
                     continue
                 self.queue.remove(job)
-                self._start(job, alloc)
+                self._start(job, alloc, lease)
                 started = True
                 break                 # re-ask the policy: free pool changed
 
-    def _start(self, job: JobRecord, alloc: Allocation) -> None:
+    def _start(
+        self, job: JobRecord, alloc: Allocation, lease: Optional[Lease] = None
+    ) -> None:
         job.allocation = alloc
         job.alloc_started = self.engine.now
         self._transition(job, JobState.ALLOCATED)
-        if alloc.storage_nodes:
+        if lease is not None:
+            # pool-backed: the file system is already running; the
+            # PROVISIONING slot costs only the lease attach (no C8 deploy)
+            job.lease = lease
+            job.pool_id = lease.pool_id
+            job.dataset_hits += lease.hits
+            job.dataset_misses += lease.misses
+            job.fs_model = self.pools.get(lease.pool_id).fs_model
+            t_prov = self.pools.lease_attach_s
+        elif alloc.storage_nodes:
             plan = self.provisioner.plan_for(alloc, runtime=job.spec.runtime)
             job.fs_model = self.provisioner.model_for(plan)
             # warm only when every granted node already holds this job's
@@ -218,26 +328,46 @@ class Orchestrator:
             self._fail_attempt(job, fault_phase)
             return
         if state is JobState.PROVISIONING:
-            if job.allocation is not None:
+            if job.lease is None and job.allocation is not None:
                 job.warm_nodes = job.warm_nodes | frozenset(
                     n.node_id for n in job.allocation.storage_nodes
                 )
             self._enter_phase(job, JobState.STAGING_IN, self._stage_time(job, "in"))
         elif state is JobState.STAGING_IN:
-            job.staged_in_bytes += job.spec.stage_in_bytes
+            job.staged_in_bytes += self._stage_in_bytes(job)
+            if job.lease is not None:
+                # saved bytes count only when the stage-in actually completed
+                # (a faulted attempt neither staged nor saved anything)
+                job.stage_in_saved_bytes += job.lease.resident_bytes
+                # missing datasets are now resident: hits for every later job
+                self.pools.on_stage_in_complete(job.lease, self.engine.now)
             self._enter_phase(job, JobState.RUNNING, job.spec.run_time_s)
         elif state is JobState.RUNNING:
             self._enter_phase(job, JobState.STAGING_OUT, self._stage_time(job, "out"))
         elif state is JobState.STAGING_OUT:
             job.staged_out_bytes += job.spec.stage_out_bytes
-            self._enter_phase(job, JobState.TEARDOWN, self.teardown_time_s)
+            # pool-backed jobs release a lease, not a file system: teardown
+            # costs nothing (the pool outlives the job)
+            t_down = 0.0 if job.lease is not None else self.teardown_time_s
+            self._enter_phase(job, JobState.TEARDOWN, t_down)
         elif state is JobState.TEARDOWN:
             self._release(job)
             self._transition(job, JobState.DONE)
             self._dispatch()
 
+    def _stage_in_bytes(self, job: JobRecord) -> float:
+        """Bytes STAGING_IN actually moves: private traffic plus the shared
+        datasets this attempt must fetch (all of them for a job-scoped FS;
+        only the lease's cache misses for a pool-backed one)."""
+        if job.lease is not None:
+            return job.spec.stage_in_bytes + total_bytes(job.lease.missing)
+        return job.spec.stage_in_bytes + job.spec.dataset_bytes
+
     def _stage_time(self, job: JobRecord, direction: str) -> float:
-        nbytes = job.spec.stage_in_bytes if direction == "in" else job.spec.stage_out_bytes
+        if direction == "in":
+            nbytes = self._stage_in_bytes(job)
+        else:
+            nbytes = job.spec.stage_out_bytes
         if nbytes <= 0 or job.fs_model is None:
             return 0.0
         if direction == "in":       # global FS read feeds ephemeral FS write
@@ -258,6 +388,11 @@ class Orchestrator:
         self._dispatch()
 
     def _release(self, job: JobRecord) -> None:
+        if job.lease is not None:
+            self.pools.release(job.lease, self.engine.now)
+            job.lease = None
+            if self.pools.ttl_s is not None:
+                self.engine.after(self.pools.ttl_s, self._reap_pools)
         if job.allocation is None:
             return
         t0 = job.alloc_started if job.alloc_started is not None else self.engine.now
@@ -269,6 +404,20 @@ class Orchestrator:
         job.alloc_started = None
         job.fs_model = None
 
+    def _reap_pools(self) -> None:
+        """TTL check scheduled after each lease release. Never reaps while
+        any pool-backed job has yet to run — queued now, requeued after a
+        fault, or submitted with a future arrival time — because a reaped
+        pool could strand it (or fail it spuriously as infeasible)."""
+        if self.pools is None:
+            return
+        if any(
+            j.spec.use_pool and not j.done and j.lease is None
+            for j in self.jobs
+        ):
+            return
+        self.pools.reap_idle(self.engine.now)
+
     def _transition(self, job: JobRecord, state: JobState) -> None:
         job.state = state
         job.history.append((state, self.engine.now))
@@ -278,14 +427,29 @@ class Orchestrator:
         self,
         specs: Optional[list[WorkflowSpec]] = None,
         *,
+        submit_times: Optional[list[float]] = None,
         until: Optional[float] = None,
     ) -> list[JobRecord]:
         """Submit ``specs`` (if given), drain the event loop, return records.
 
+        ``submit_times`` gives each spec its own arrival instant (e.g. from
+        :func:`repro.orchestrator.arrivals.poisson_arrivals` or a replayed
+        trace) instead of the batch-at-now default; it must match ``specs``
+        in length, and no time may predate the engine clock.
+
         Guarantees every job reaches a terminal state (DONE or FAILED) unless
         ``until`` cut the clock short.
         """
-        for spec in specs or []:
-            self.submit(spec)
+        specs = specs or []
+        if submit_times is not None:
+            if len(submit_times) != len(specs):
+                raise ValueError(
+                    f"{len(submit_times)} submit times for {len(specs)} specs"
+                )
+            for spec, t in zip(specs, submit_times):
+                self.submit(spec, at=t)
+        else:
+            for spec in specs:
+                self.submit(spec)
         self.engine.run(until=until)
         return list(self.jobs)

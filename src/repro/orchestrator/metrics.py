@@ -40,6 +40,24 @@ class JobBreakdown:
 
 
 @dataclasses.dataclass(frozen=True)
+class PoolReport:
+    """Persistent-pool telemetry attached to a campaign report."""
+
+    n_pools: int                 # ever created
+    n_live: int                  # not yet retired at summarize time
+    dataset_hits: int
+    dataset_misses: int
+    hit_rate: float              # hits / (hits + misses), dataset-granular
+    stage_in_bytes_saved: float  # traffic avoided by cache hits
+    bytes_staged: float          # dataset bytes pulled into pools
+    evictions: int
+    evicted_bytes: float
+    occupancy: float             # mean used/capacity over live pools
+    leases_granted: int
+    pools_retired: int
+
+
+@dataclasses.dataclass(frozen=True)
 class CampaignReport:
     n_jobs: int
     n_done: int
@@ -53,6 +71,8 @@ class CampaignReport:
     max_queue_wait_s: float
     mean_phase_s: dict
     breakdowns: tuple
+    stage_in_bytes_saved: float = 0.0    # summed over jobs (pool cache hits)
+    pool: Optional[PoolReport] = None
 
 
 def job_breakdown(job: JobRecord, now: Optional[float] = None) -> JobBreakdown:
@@ -106,11 +126,31 @@ def storage_node_utilization(
     return busy / (n_storage_nodes * makespan_s)
 
 
+def pool_report(pools) -> PoolReport:
+    """Snapshot a :class:`~repro.pool.PoolManager` for a campaign report."""
+    stats = pools.stats
+    return PoolReport(
+        n_pools=stats.pools_created,
+        n_live=len(pools.live_pools),
+        dataset_hits=stats.dataset_hits,
+        dataset_misses=stats.dataset_misses,
+        hit_rate=stats.hit_rate,
+        stage_in_bytes_saved=stats.bytes_saved,
+        bytes_staged=stats.bytes_staged,
+        evictions=pools.evictor.evictions,
+        evicted_bytes=pools.evictor.evicted_bytes,
+        occupancy=pools.occupancy(),
+        leases_granted=stats.leases_granted,
+        pools_retired=stats.pools_retired,
+    )
+
+
 def summarize(
     jobs: Sequence[JobRecord],
     *,
     n_storage_nodes: int,
     now: Optional[float] = None,
+    pools=None,
 ) -> CampaignReport:
     if not jobs:
         raise ValueError("no jobs to summarize")
@@ -122,6 +162,16 @@ def summarize(
     if now is not None:
         t_end = max(t_end, now)
     makespan = t_end - t_start
+    utilization = storage_node_utilization(jobs, n_storage_nodes, makespan, now)
+    if pools is not None and makespan > 0 and n_storage_nodes > 0:
+        # pool-held nodes are busy from creation to retirement (or still),
+        # clipped to the campaign window — jobs' own intervals don't see them
+        busy = 0.0
+        for p in pools.pools:
+            end = p.retired_at if p.retired_at is not None else t_end
+            span = min(end, t_end) - max(p.created_at, t_start)
+            busy += len(p.allocation.storage_nodes) * max(0.0, span)
+        utilization += busy / (n_storage_nodes * makespan)
     waits = [b.queue_wait_s for b in breakdowns]
     mean_phase = {
         s: sum(b.phase_s[s] for b in breakdowns) / len(breakdowns)
@@ -132,9 +182,7 @@ def summarize(
         n_done=sum(j.state is JobState.DONE for j in jobs),
         n_failed=sum(j.state is JobState.FAILED for j in jobs),
         makespan_s=makespan,
-        storage_node_utilization=storage_node_utilization(
-            jobs, n_storage_nodes, makespan, now
-        ),
+        storage_node_utilization=utilization,
         total_retries=sum(b.attempts - 1 for b in breakdowns),
         staged_in_bytes=sum(j.staged_in_bytes for j in jobs),
         staged_out_bytes=sum(j.staged_out_bytes for j in jobs),
@@ -142,6 +190,8 @@ def summarize(
         max_queue_wait_s=max(waits),
         mean_phase_s=mean_phase,
         breakdowns=breakdowns,
+        stage_in_bytes_saved=sum(j.stage_in_saved_bytes for j in jobs),
+        pool=pool_report(pools) if pools is not None else None,
     )
 
 
@@ -160,8 +210,20 @@ def format_report(report: CampaignReport, *, top_n: int = 10) -> str:
         + "  ".join(
             f"{s.value}={report.mean_phase_s[s]:,.1f}" for s in BREAKDOWN_STATES
         ),
-        f"slowest {min(top_n, report.n_jobs)} jobs:",
     ]
+    if report.pool is not None:
+        p = report.pool
+        lines += [
+            f"pools: {p.n_pools} created ({p.n_live} live, {p.pools_retired} "
+            f"retired), {p.leases_granted} leases",
+            f"dataset cache: {p.dataset_hits} hits / {p.dataset_misses} misses "
+            f"(hit rate {p.hit_rate:.1%}), "
+            f"{p.stage_in_bytes_saved / 1e9:,.1f} GB stage-in saved, "
+            f"{p.bytes_staged / 1e9:,.1f} GB staged into pools",
+            f"evictions: {p.evictions} ({p.evicted_bytes / 1e9:,.1f} GB), "
+            f"pool occupancy {p.occupancy:.1%}",
+        ]
+    lines.append(f"slowest {min(top_n, report.n_jobs)} jobs:")
     slowest = sorted(report.breakdowns, key=lambda b: -b.total_s)[:top_n]
     for b in slowest:
         phases = "  ".join(

@@ -14,6 +14,12 @@ capacity changes. Three policies, in increasing awareness:
   promotes long-waiting jobs back to arrival order to prevent starvation.
   This is the data-aware scheduling direction of Raicu et al.'s Data
   Diffusion applied to the paper's schedulable-storage model.
+* **Data-aware** — the full Data Diffusion move, over the persistent-pool
+  subsystem (``repro.pool``): jobs whose input datasets are already resident
+  on some pool run first (their stage-in is partly or wholly a cache hit),
+  ranked by resident-byte fraction; ties and pool-less jobs fall back to
+  storage-aware ordering, and the same aging threshold prevents starvation
+  of jobs whose data is nowhere warm.
 """
 
 from __future__ import annotations
@@ -23,6 +29,7 @@ from typing import TYPE_CHECKING, Sequence
 
 if TYPE_CHECKING:  # circular: lifecycle imports policies
     from ..core.scheduler import Scheduler
+    from ..pool.manager import PoolManager
     from .lifecycle import JobRecord
 
 
@@ -74,5 +81,40 @@ class StorageAwarePolicy(QueuePolicy):
                 return (0, job.submit_time, job.submit_time)
             _, n_storage = scheduler.demand(job.request)
             return (1, n_storage, job.submit_time)
+
+        return sorted(queue, key=key)
+
+
+class DataAwarePolicy(QueuePolicy):
+    """Route jobs to their data: highest resident-byte fraction first.
+
+    Needs the :class:`~repro.pool.PoolManager` whose catalog knows what is
+    warm where. A job with 100% of its datasets resident skips all shared
+    stage-in; starting it now both finishes it sooner and *keeps* those
+    datasets pinned-warm against eviction, which is the Data Diffusion
+    feedback loop (hits beget hits). Jobs with nothing warm are ordered by
+    storage demand (small first), and aging promotes starved jobs to strict
+    arrival order.
+    """
+
+    name = "data-aware"
+    head_blocking = False
+
+    def __init__(self, pools: "PoolManager", aging_s: float = 3600.0):
+        if aging_s <= 0:
+            raise ValueError("aging_s must be positive")
+        self.pools = pools
+        self.aging_s = aging_s
+
+    def order(self, queue, scheduler, now):
+        def key(job):
+            if (now - job.submit_time) >= self.aging_s:
+                return (0, job.submit_time, 0.0, job.submit_time)
+            spec = job.spec
+            frac = 0.0
+            if spec.use_pool and spec.datasets:
+                frac = self.pools.resident_fraction(spec.datasets)
+            _, n_storage = scheduler.demand(job.request)
+            return (1, -frac, n_storage, job.submit_time)
 
         return sorted(queue, key=key)

@@ -1,0 +1,502 @@
+"""Persistent-pool subsystem: ledger, leases, catalog, eviction, teardown
+discipline, and the orchestrator's pool-backed fast path.
+
+The hypothesis-driven sweeps live in test_pool_props.py (skipped when
+hypothesis is absent); everything here is deterministic, including a
+seeded-random invariant soak so the core invariants are exercised even
+without hypothesis installed.
+"""
+
+import random
+
+import pytest
+
+from repro.core import AllocationError, Scheduler, StorageRequest, dom_cluster
+from repro.orchestrator import (
+    DataAwarePolicy,
+    JobState,
+    Orchestrator,
+    WorkflowSpec,
+    format_report,
+    summarize,
+)
+from repro.pool import (
+    DatasetRef,
+    PoolManager,
+    PoolState,
+)
+from repro.runtime import FaultInjector, FaultSpec
+
+GB = 1e9
+TB = 1e12
+
+
+def mk_manager(**kw) -> PoolManager:
+    return PoolManager(Scheduler(dom_cluster()), **kw)
+
+
+# -- pools pin nodes through the scheduler ------------------------------------
+def test_create_pool_pins_nodes_and_teardown_returns_them():
+    mgr = mk_manager()
+    pool = mgr.create_pool(nodes=2)
+    assert mgr.scheduler.free_counts() == (8, 2)
+    assert pool.state is PoolState.ACTIVE
+    assert pool.capacity_bytes == pytest.approx(2 * 2 * 5.9 * TB)
+    assert mgr.retire(pool, now=1.0) is True          # no leases -> immediate
+    assert pool.state is PoolState.RETIRED
+    assert mgr.scheduler.free_counts() == (8, 4)
+
+
+def test_node_never_in_two_live_pools():
+    mgr = mk_manager()
+    a = mgr.create_pool(nodes=2)
+    b = mgr.create_pool(nodes=2)
+    assert not a.storage_node_ids & b.storage_node_ids
+    with pytest.raises(AllocationError):              # inventory exhausted
+        mgr.create_pool(nodes=1)
+    mgr.check_invariants()
+    mgr.retire(a, now=0.0)
+    c = mgr.create_pool(nodes=2)                      # reuses a's nodes
+    assert not c.storage_node_ids & b.storage_node_ids
+    mgr.check_invariants()
+
+
+def test_create_pool_by_capacity():
+    mgr = mk_manager()
+    pool = mgr.create_pool(capacity_bytes=20 * TB)    # 11.8 TB/node -> 2 nodes
+    assert len(pool.allocation.storage_nodes) == 2
+
+
+def test_cap_bytes_caps_ledger_below_hardware():
+    mgr = mk_manager()
+    pool = mgr.create_pool(nodes=2, cap_bytes=100 * GB)
+    assert pool.capacity_bytes == 100 * GB
+
+
+# -- capacity ledger ------------------------------------------------------------
+def test_ledger_never_oversubscribed_and_acquire_fails_when_full():
+    mgr = mk_manager()
+    pool = mgr.create_pool(nodes=1, cap_bytes=100 * GB)
+    d1 = DatasetRef("d1", 60 * GB)
+    lease = mgr.try_acquire("a", [d1], scratch_bytes=30 * GB, now=0.0)
+    assert lease is not None
+    assert pool.used_bytes == pytest.approx(90 * GB)
+    # 60 GB more can never fit while d1 is pinned and 30 GB scratch is held
+    assert mgr.try_acquire("b", [DatasetRef("d2", 60 * GB)], now=1.0) is None
+    mgr.check_invariants()
+    mgr.on_stage_in_complete(lease, 2.0)
+    mgr.release(lease, 3.0)
+    assert pool.scratch_bytes == 0.0
+    assert pool.used_bytes == pytest.approx(60 * GB)   # d1 persists, unpinned
+    # now d2 fits by evicting LRU d1
+    lease2 = mgr.try_acquire("b", [DatasetRef("d2", 60 * GB)], now=4.0)
+    assert lease2 is not None
+    assert mgr.evictor.evictions == 1
+    mgr.check_invariants()
+
+
+def test_working_set_larger_than_any_pool_is_unleasable():
+    mgr = mk_manager()
+    mgr.create_pool(nodes=1, cap_bytes=50 * GB)
+    big = [DatasetRef("huge", 80 * GB)]
+    assert not mgr.feasible(big)
+    assert mgr.try_acquire("j", big, now=0.0) is None
+
+
+# -- hits, misses, and the staleness invariant -----------------------------------
+def test_second_reference_is_a_hit_and_saves_bytes():
+    mgr = mk_manager()
+    mgr.create_pool(nodes=2)
+    d = DatasetRef("shared", 40 * GB)
+    l1 = mgr.try_acquire("first", [d], now=0.0)
+    assert l1.misses == 1 and l1.hits == 0
+    mgr.on_stage_in_complete(l1, 1.0)
+    l2 = mgr.try_acquire("second", [d], now=2.0)      # while l1 still live
+    assert l2.hits == 1 and l2.misses == 0
+    assert l2.resident_bytes == 40 * GB
+    assert mgr.stats.bytes_saved == 0.0               # not yet: counts at stage-in
+    mgr.on_stage_in_complete(l2, 2.5)                 # all-hit stage-in completes
+    mgr.release(l1, 3.0)
+    mgr.release(l2, 4.0)
+    assert mgr.stats.dataset_hits == 1 and mgr.stats.dataset_misses == 1
+    assert mgr.stats.bytes_saved == 40 * GB
+
+
+def test_evicted_dataset_is_restaged_not_served_stale():
+    mgr = mk_manager()
+    mgr.create_pool(nodes=1, cap_bytes=100 * GB)
+    d_old = DatasetRef("old", 60 * GB)
+    l1 = mgr.try_acquire("a", [d_old], now=0.0)
+    mgr.on_stage_in_complete(l1, 1.0)
+    mgr.release(l1, 2.0)
+    # pressure evicts d_old
+    l2 = mgr.try_acquire("b", [DatasetRef("new", 70 * GB)], now=3.0)
+    assert l2 is not None and mgr.evictor.evictions == 1
+    assert not mgr.catalog.resident(l2.pool_id, "old")
+    # next reference to d_old is a miss: it must re-stage
+    mgr.on_stage_in_complete(l2, 4.0)
+    mgr.release(l2, 5.0)
+    l3 = mgr.try_acquire("c", [d_old], now=6.0)
+    assert l3 is not None and l3.misses == 1 and l3.hits == 0
+    assert d_old in l3.missing
+
+
+def test_pinned_and_inflight_datasets_are_not_evictable():
+    mgr = mk_manager()
+    mgr.create_pool(nodes=1, cap_bytes=100 * GB)
+    d = DatasetRef("pinned", 60 * GB)
+    l1 = mgr.try_acquire("holder", [d], now=0.0)      # INFLIGHT + pinned
+    # 50 GB can't fit: the only evictable candidate set is empty
+    assert mgr.try_acquire("b", [DatasetRef("x", 50 * GB)], now=1.0) is None
+    mgr.on_stage_in_complete(l1, 2.0)                 # RESIDENT, still pinned
+    assert mgr.try_acquire("b", [DatasetRef("x", 50 * GB)], now=3.0) is None
+    mgr.release(l1, 4.0)                              # unpinned -> evictable
+    assert mgr.try_acquire("b", [DatasetRef("x", 50 * GB)], now=5.0) is not None
+    mgr.check_invariants()
+
+
+def test_faulted_stage_rolls_back_inflight_charge():
+    mgr = mk_manager()
+    pool = mgr.create_pool(nodes=1, cap_bytes=100 * GB)
+    d = DatasetRef("doomed", 60 * GB)
+    lease = mgr.try_acquire("a", [d], scratch_bytes=10 * GB, now=0.0)
+    assert pool.used_bytes == pytest.approx(70 * GB)
+    # stage-in fault: release WITHOUT on_stage_in_complete
+    mgr.release(lease, 1.0)
+    assert pool.used_bytes == 0.0                      # no ghost bytes
+    assert mgr.catalog.lookup(pool.pool_id, "doomed") is None
+    mgr.check_invariants()
+
+
+def test_concurrent_inflight_is_charged_once():
+    mgr = mk_manager()
+    pool = mgr.create_pool(nodes=1, cap_bytes=200 * GB)
+    d = DatasetRef("shared", 60 * GB)
+    l1 = mgr.try_acquire("a", [d], now=0.0)
+    l2 = mgr.try_acquire("b", [d], now=0.5)            # INFLIGHT: miss, no recharge
+    assert l2.misses == 1
+    assert pool.used_bytes == pytest.approx(60 * GB)
+    mgr.on_stage_in_complete(l1, 1.0)
+    mgr.release(l1, 2.0)
+    mgr.release(l2, 3.0)
+    assert pool.used_bytes == pytest.approx(60 * GB)   # resident survives
+    mgr.check_invariants()
+
+
+# -- teardown discipline ----------------------------------------------------------
+def test_teardown_only_on_last_lease_drain():
+    mgr = mk_manager()
+    pool = mgr.create_pool(nodes=2)
+    d = DatasetRef("d", GB)
+    l1 = mgr.try_acquire("a", [d], now=0.0)
+    l2 = mgr.try_acquire("b", [d], now=0.0)
+    assert mgr.retire(pool, now=1.0) is False          # live leases: draining
+    assert pool.state is PoolState.DRAINING
+    assert mgr.try_acquire("c", [d], now=1.5) is None  # draining grants nothing
+    assert mgr.release(l1, 2.0) is False               # not the last lease
+    assert pool.state is PoolState.DRAINING
+    assert mgr.release(l2, 3.0) is True                # last lease -> teardown
+    assert pool.state is PoolState.RETIRED
+    assert mgr.scheduler.free_counts() == (8, 4)
+
+
+def test_ttl_reaps_only_idle_pools():
+    mgr = mk_manager(ttl_s=100.0)
+    idle = mgr.create_pool(nodes=1, now=0.0)
+    busy = mgr.create_pool(nodes=1, now=0.0)
+    lease = mgr.try_acquire("j", [DatasetRef("d", GB)], now=10.0)
+    assert lease.pool_id in (idle.pool_id, busy.pool_id)
+    holder = mgr.get(lease.pool_id)
+    other = idle if holder is busy else busy
+    assert mgr.reap_idle(now=50.0) == []               # not idle long enough
+    reaped = mgr.reap_idle(now=150.0)
+    assert reaped == [other]                           # leased pool survives
+    assert holder.state is PoolState.ACTIVE
+    mgr.release(lease, 200.0)
+    assert mgr.reap_idle(now=250.0) == []              # idle 50s < ttl
+    assert mgr.reap_idle(now=301.0) == [holder]        # idle >= ttl
+    assert mgr.scheduler.free_counts() == (8, 4)
+
+
+def test_ttl_disabled_never_reaps():
+    mgr = mk_manager()                                  # ttl_s=None
+    mgr.create_pool(nodes=1, now=0.0)
+    assert mgr.reap_idle(now=1e12) == []
+
+
+# -- seeded-random invariant soak (runs without hypothesis) ------------------------
+def test_random_ops_preserve_invariants():
+    rng = random.Random(1234)
+    mgr = mk_manager(ttl_s=500.0)
+    datasets = [DatasetRef(f"d{i}", (5 + 10 * (i % 7)) * GB) for i in range(12)]
+    live_leases = []
+    staged = set()
+    now = 0.0
+    for step in range(400):
+        now += rng.random() * 10
+        op = rng.random()
+        if op < 0.15 and len(mgr.active_pools) < 4:
+            try:
+                mgr.create_pool(nodes=1, cap_bytes=rng.choice([80, 150, 400]) * GB,
+                                now=now)
+            except AllocationError:
+                pass
+        elif op < 0.55:
+            refs = rng.sample(datasets, rng.randint(1, 3))
+            lease = mgr.try_acquire(f"job{step}", refs,
+                                    scratch_bytes=rng.random() * 20 * GB, now=now)
+            if lease is not None:
+                live_leases.append(lease)
+        elif op < 0.75 and live_leases:
+            lease = live_leases.pop(rng.randrange(len(live_leases)))
+            if rng.random() < 0.7:
+                mgr.on_stage_in_complete(lease, now)
+                staged.add(lease.lease_id)
+            mgr.release(lease, now)
+        elif op < 0.85 and mgr.active_pools:
+            pool = rng.choice(mgr.active_pools)
+            mgr.retire(pool, now)
+        else:
+            mgr.reap_idle(now)
+        mgr.check_invariants()
+    for lease in live_leases:
+        mgr.release(lease, now + 1)
+        mgr.check_invariants()
+    # every storage node is home (pools either live or cleanly retired)
+    free_c, free_s = mgr.scheduler.free_counts()
+    held = sum(len(p.allocation.storage_nodes) for p in mgr.live_pools)
+    assert free_s + held == 4 and free_c == 8
+
+
+# -- orchestrator integration --------------------------------------------------------
+def _pooled_orch(**pool_kw):
+    orch = Orchestrator(dom_cluster())
+    mgr = orch.enable_pools(**pool_kw)
+    return orch, mgr
+
+
+def test_pool_backed_job_pays_lease_attach_not_deploy():
+    orch, mgr = _pooled_orch(lease_attach_s=0.25)
+    mgr.create_pool(nodes=2)
+    d = DatasetRef("in", 10 * GB)
+    job = orch.submit(WorkflowSpec("j", 2, use_pool=True, datasets=(d,),
+                                   stage_in_bytes=GB, stage_out_bytes=GB,
+                                   run_time_s=50.0))
+    orch.engine.run()
+    assert job.state is JobState.DONE
+    states = [s for s, _ in job.history]
+    assert states == [
+        JobState.QUEUED, JobState.ALLOCATED, JobState.PROVISIONING,
+        JobState.STAGING_IN, JobState.RUNNING, JobState.STAGING_OUT,
+        JobState.TEARDOWN, JobState.DONE,
+    ]
+    spans = {s0: t1 - t0 for (s0, t0), (_, t1) in zip(job.history, job.history[1:])}
+    assert spans[JobState.PROVISIONING] == pytest.approx(0.25)   # no C8 deploy
+    assert spans[JobState.TEARDOWN] == pytest.approx(0.0)        # pool survives
+    assert job.staged_in_bytes == pytest.approx(11 * GB)         # miss + private
+    assert job.pool_id is not None
+    assert mgr.get(job.pool_id).state is PoolState.ACTIVE
+
+
+def test_cache_hit_fast_path_skips_shared_stage_in():
+    orch, mgr = _pooled_orch()
+    mgr.create_pool(nodes=2)
+    d = DatasetRef("shared", 100 * GB)
+    spec = lambda name: WorkflowSpec(name, 1, use_pool=True, datasets=(d,),  # noqa: E731
+                                     run_time_s=10.0)
+    first = orch.submit(spec("first"))
+    orch.engine.run()
+    second = orch.submit(spec("second"))
+    orch.engine.run()
+    assert first.dataset_misses == 1 and first.dataset_hits == 0
+    assert second.dataset_hits == 1 and second.dataset_misses == 0
+    assert second.staged_in_bytes == 0.0                  # full cache hit
+    assert second.stage_in_saved_bytes == 100 * GB
+    first_in = next(t1 - t0 for (s, t0), (_, t1)
+                    in zip(first.history, first.history[1:])
+                    if s is JobState.STAGING_IN)
+    second_in = next(t1 - t0 for (s, t0), (_, t1)
+                     in zip(second.history, second.history[1:])
+                     if s is JobState.STAGING_IN)
+    assert first_in > 0 and second_in == pytest.approx(0.0)
+
+
+def test_stage_in_fault_forces_restage_on_retry():
+    faults = FaultInjector(FaultSpec(stage_in_fail_p=1.0, seed=9))
+    orch, mgr = _pooled_orch()
+    mgr.create_pool(nodes=2)
+    d = DatasetRef("flaky", 20 * GB)
+    job = orch.submit(WorkflowSpec("j", 1, use_pool=True, datasets=(d,),
+                                   max_retries=1))
+    orch.faults = faults
+    orch.engine.run()
+    assert job.state is JobState.FAILED
+    # both attempts were misses: the faulted stage never became resident
+    assert job.dataset_misses == 2 and job.dataset_hits == 0
+    assert not mgr.catalog.pools_holding("flaky")
+    mgr.check_invariants()
+
+
+def test_pool_job_infeasible_without_capacity_fails_fast():
+    orch, mgr = _pooled_orch()
+    mgr.create_pool(nodes=1, cap_bytes=10 * GB)
+    job = orch.submit(WorkflowSpec("big", 1, use_pool=True,
+                                   datasets=(DatasetRef("d", 50 * GB),)))
+    orch.engine.run()
+    assert job.state is JobState.FAILED
+    assert job.failure_phase == "infeasible"
+
+
+def test_use_pool_without_manager_raises():
+    orch = Orchestrator(dom_cluster())
+    with pytest.raises(ValueError):
+        orch.submit(WorkflowSpec("j", 1, use_pool=True))
+
+
+def test_spec_validation_pool_fields():
+    with pytest.raises(ValueError):   # pool jobs lease, not allocate
+        WorkflowSpec("bad", 1, storage=StorageRequest(nodes=1), use_pool=True)
+    with pytest.raises(ValueError):   # datasets need storage or a pool
+        WorkflowSpec("bad", 1, datasets=(DatasetRef("d", GB),))
+    with pytest.raises(ValueError):   # DatasetRef only
+        WorkflowSpec("bad", 1, use_pool=True, datasets=("d",))
+    with pytest.raises(ValueError):
+        DatasetRef("", GB)
+    with pytest.raises(ValueError):
+        DatasetRef("d", 0.0)
+
+
+def test_data_aware_policy_prefers_warm_jobs():
+    orch, mgr = _pooled_orch()
+    mgr.create_pool(nodes=2, cap_bytes=500 * GB)
+    orch.policy = DataAwarePolicy(mgr, aging_s=1e9)
+    warm_ds = DatasetRef("warm", 50 * GB)
+    cold_ds = DatasetRef("cold", 50 * GB)
+    seed = orch.submit(WorkflowSpec("seed", 8, use_pool=True, datasets=(warm_ds,),
+                                    run_time_s=10.0))
+    # both wait behind seed (it holds all compute); arrival order cold-first
+    cold = orch.submit(WorkflowSpec("cold", 8, use_pool=True, datasets=(cold_ds,),
+                                    run_time_s=10.0))
+    warm = orch.submit(WorkflowSpec("warm", 8, use_pool=True, datasets=(warm_ds,),
+                                    run_time_s=10.0))
+    orch.engine.run()
+    assert all(j.state is JobState.DONE for j in (seed, cold, warm))
+    alloc_t = {
+        j.spec.name: next(t for s, t in j.history if s is JobState.ALLOCATED)
+        for j in (cold, warm)
+    }
+    assert alloc_t["warm"] < alloc_t["cold"]          # data-aware overtake
+    assert warm.dataset_hits == 1
+
+
+def test_pooled_campaign_report_metrics():
+    orch, mgr = _pooled_orch(ttl_s=10_000.0)
+    mgr.create_pool(nodes=2)
+    mgr.create_pool(nodes=2)
+    orch.policy = DataAwarePolicy(mgr)
+    ds = [DatasetRef(f"d{k}", (10 + 5 * k) * GB) for k in range(5)]
+    specs = [
+        WorkflowSpec(f"j{i:02d}", 1 + i % 3, use_pool=True,
+                     datasets=(ds[i % 5], ds[(i + 1) % 5]),
+                     stage_in_bytes=GB, run_time_s=15.0)
+        for i in range(60)
+    ]
+    jobs = orch.run_campaign(specs)
+    assert all(j.state is JobState.DONE for j in jobs)
+    rep = summarize(jobs, n_storage_nodes=4, pools=mgr)
+    assert rep.pool is not None
+    assert rep.pool.hit_rate > 0.5                      # sharing pays off
+    assert rep.stage_in_bytes_saved > 0
+    assert rep.stage_in_bytes_saved == pytest.approx(rep.pool.stage_in_bytes_saved)
+    # staged once per residency, not once per job
+    assert rep.staged_in_bytes < sum(s.stage_in_bytes + s.dataset_bytes
+                                     for s in specs)
+    assert "hit rate" in format_report(rep)
+    mgr.check_invariants()
+
+
+def test_job_arriving_at_draining_pool_fails_fast_not_stranded():
+    """feasible() must not count DRAINING pools: they never grant again, so
+    a job relying on one would queue forever (run_campaign's terminal-state
+    guarantee)."""
+    orch, mgr = _pooled_orch()
+    pool = mgr.create_pool(nodes=2)
+    d = DatasetRef("d", 10 * GB)
+    holder = orch.submit(WorkflowSpec("holder", 1, use_pool=True, datasets=(d,),
+                                      run_time_s=100.0))
+    orch.engine.run(until=50.0)                       # holder mid-run
+    mgr.retire(pool)                                  # draining under a live lease
+    late = orch.submit(WorkflowSpec("late", 1, use_pool=True, datasets=(d,)))
+    orch.engine.run()
+    assert holder.state is JobState.DONE
+    assert late.state is JobState.FAILED              # terminal, not stranded
+    assert late.failure_phase == "infeasible"
+    assert pool.state is PoolState.RETIRED
+
+
+def test_queued_pool_job_fails_fast_when_last_pool_retires():
+    orch, mgr = _pooled_orch()
+    pool = mgr.create_pool(nodes=2, cap_bytes=50 * GB)
+    d = DatasetRef("d", 40 * GB)
+    holder = orch.submit(WorkflowSpec("holder", 1, use_pool=True, datasets=(d,),
+                                      run_time_s=100.0))
+    queued = orch.submit(WorkflowSpec("queued", 1, use_pool=True,
+                                      datasets=(DatasetRef("e", 40 * GB),)))
+    orch.engine.run(until=50.0)
+    assert queued.state is JobState.QUEUED            # no room while holder runs
+    mgr.retire(pool)                                  # user retires mid-campaign
+    orch.engine.run()
+    assert holder.state is JobState.DONE
+    assert queued.state is JobState.FAILED
+    assert queued.failure_phase == "infeasible"
+
+
+def test_ttl_reap_waits_for_future_arrivals():
+    """A lease release between two widely-spaced arrivals must not reap the
+    pool out from under the not-yet-arrived job."""
+    orch, mgr = _pooled_orch(ttl_s=50.0)
+    mgr.create_pool(nodes=2)
+    d = DatasetRef("d", 10 * GB)
+    spec = WorkflowSpec("a", 1, use_pool=True, datasets=(d,), run_time_s=10.0)
+    spec_b = WorkflowSpec("b", 1, use_pool=True, datasets=(d,), run_time_s=10.0)
+    jobs = orch.run_campaign([spec, spec_b], submit_times=[0.0, 500.0])
+    assert all(j.state is JobState.DONE for j in jobs)
+    assert jobs[1].dataset_hits == 1                  # pool survived the gap
+    # with every pool job done the TTL finally applies
+    assert orch.engine.now >= 500.0
+    orch.engine.run()
+    assert len(mgr.live_pools) == 0
+
+
+def test_pool_created_midcampaign_gets_engine_time():
+    orch, mgr = _pooled_orch(ttl_s=1000.0)
+    mgr.create_pool(nodes=2)
+    made = []
+    orch.engine.at(300.0, lambda: made.append(mgr.create_pool(nodes=2)))
+    orch.submit(WorkflowSpec("j", 1, use_pool=True,
+                             datasets=(DatasetRef("d", GB),), run_time_s=400.0))
+    orch.engine.run()
+    assert made[0].created_at == 300.0                # engine clock, not 0.0
+    assert made[0].idle_since == 300.0
+
+
+def test_duplicate_dataset_names_rejected_at_spec():
+    with pytest.raises(ValueError):
+        WorkflowSpec("dup", 1, use_pool=True,
+                     datasets=(DatasetRef("a", GB), DatasetRef("a", 2 * GB)))
+
+
+def test_mixed_campaign_pool_and_jobscoped_coexist():
+    orch, mgr = _pooled_orch()
+    mgr.create_pool(nodes=2)                            # 2 nodes left for jobs
+    d = DatasetRef("d", 20 * GB)
+    specs = [
+        WorkflowSpec("pooled", 2, use_pool=True, datasets=(d,), run_time_s=20.0),
+        WorkflowSpec("scoped", 2, storage=StorageRequest(nodes=2),
+                     stage_in_bytes=5 * GB, run_time_s=20.0),
+        WorkflowSpec("compute", 1, run_time_s=5.0),
+    ]
+    jobs = orch.run_campaign(specs)
+    assert all(j.state is JobState.DONE for j in jobs)
+    assert orch.scheduler.free_counts() == (8, 2)       # pool still holds 2
+    mgr.check_invariants()

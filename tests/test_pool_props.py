@@ -1,0 +1,128 @@
+"""Property tests for the pool subsystem's acceptance invariants:
+
+* the capacity ledger is never oversubscribed;
+* a node is never in two live pools;
+* last-lease release (or TTL expiry) is the only path to pool teardown;
+* evicted datasets are re-staged (a miss), never served stale.
+
+Driven by hypothesis-generated operation sequences; the same invariants are
+also soaked deterministically in test_pool.py for hypothesis-less installs.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import AllocationError, Scheduler, dom_cluster
+from repro.pool import DatasetRef, PoolManager, PoolState
+
+GB = 1e9
+
+DATASETS = [DatasetRef(f"d{i}", (5 + 10 * (i % 7)) * GB) for i in range(10)]
+
+# one operation = (kind, a, b) with kind-specific interpretation
+ops_strategy = st.lists(
+    st.tuples(
+        st.sampled_from(["create", "acquire", "release", "retire", "reap"]),
+        st.integers(0, 9),
+        st.integers(0, 9),
+    ),
+    max_size=60,
+)
+
+
+@settings(max_examples=100, deadline=None)
+@given(ops_strategy)
+def test_pool_invariants_under_random_ops(ops):
+    mgr = PoolManager(Scheduler(dom_cluster()), ttl_s=200.0)
+    live_leases = []
+    staged_resident: set[str] = set()     # names completed at least once
+    now = 0.0
+    teardowns_observed = 0
+
+    for kind, a, b in ops:
+        now += 1.0 + a
+        if kind == "create":
+            try:
+                mgr.create_pool(nodes=1 + b % 2,
+                                cap_bytes=(60 + 80 * (a % 3)) * GB, now=now)
+            except AllocationError:
+                pass                       # inventory exhausted: fine
+        elif kind == "acquire":
+            refs = DATASETS[a % len(DATASETS):][: 1 + b % 3]
+            lease = mgr.try_acquire(f"job-{a}-{b}", refs,
+                                    scratch_bytes=float(b) * GB, now=now)
+            if lease is not None:
+                live_leases.append(lease)
+        elif kind == "release" and live_leases:
+            lease = live_leases.pop(a % len(live_leases))
+            if b % 2:                      # stage-in completed before release
+                mgr.on_stage_in_complete(lease, now)
+            torn = mgr.release(lease, now)
+            if torn:
+                teardowns_observed += 1
+        elif kind == "retire" and mgr.active_pools:
+            pool = mgr.active_pools[a % len(mgr.active_pools)]
+            if pool.n_leases == 0:
+                assert mgr.retire(pool, now) is True    # drained: immediate
+                teardowns_observed += 1
+            else:
+                assert mgr.retire(pool, now) is False   # draining, NOT torn down
+                assert pool.state is PoolState.DRAINING
+        elif kind == "reap":
+            teardowns_observed += len(mgr.reap_idle(now))
+
+        # ledger never oversubscribed + node-disjointness + catalog sync
+        mgr.check_invariants()
+        # teardown discipline: every RETIRED pool got there through one of
+        # the counted paths (retire-drained, last-lease release, TTL reap)
+        n_retired = sum(p.state is PoolState.RETIRED for p in mgr.pools)
+        assert n_retired == teardowns_observed == mgr.stats.pools_retired
+        # retired pools hold nothing
+        for p in mgr.pools:
+            if p.state is PoolState.RETIRED:
+                assert p.n_leases == 0 and p.used_bytes == 0.0
+
+    # drain everything: inventory must be conserved
+    for lease in live_leases:
+        mgr.release(lease, now + 1)
+        mgr.check_invariants()
+    free_c, free_s = mgr.scheduler.free_counts()
+    held = sum(len(p.allocation.storage_nodes) for p in mgr.live_pools)
+    assert free_s + held == 4 and free_c == 8
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(0, 9), min_size=1, max_size=20))
+def test_eviction_means_restage_never_stale(refs):
+    """Whatever the reference string, a dataset reported as a hit is RESIDENT
+    in the catalog at grant time, and an evicted dataset's next reference is
+    a miss that re-stages it."""
+    mgr = PoolManager(Scheduler(dom_cluster()))
+    mgr.create_pool(nodes=1, cap_bytes=90 * GB, now=0.0)
+    evicted_since_touch: set[str] = set()
+    now = 0.0
+    for i, r in enumerate(refs):
+        now += 1.0
+        d = DATASETS[r]
+        before = mgr.evictor.evictions
+        lease = mgr.try_acquire(f"j{i}", [d], now=now)
+        if lease is None:
+            continue
+        if d.name in evicted_since_touch:
+            # invariant: evicted data is never served from the pool
+            assert lease.misses == 1 and d in lease.missing
+            evicted_since_touch.discard(d.name)
+        if lease.hits:
+            assert mgr.catalog.resident(lease.pool_id, d.name)
+        mgr.on_stage_in_complete(lease, now)
+        mgr.release(lease, now)
+        if mgr.evictor.evictions > before:
+            # something was pushed out; track names no longer resident
+            for other in DATASETS:
+                if not mgr.catalog.resident(lease.pool_id, other.name):
+                    evicted_since_touch.add(other.name)
+            evicted_since_touch.discard(d.name)   # just (re)staged
+        mgr.check_invariants()

@@ -110,6 +110,71 @@ def test_can_allocate_and_feasible():
         s.demand(JobRequest("bad", 1, storage=StorageRequest(nodes=1), constraint="mc"))
 
 
+def _hetero_cluster():
+    """Two big storage nodes (2x10 TB disks) listed FIRST, one small node
+    (2x2 TB): the old prototype sizing (``storage_nodes[0]``) measured only
+    the big node."""
+    from repro.core import ClusterSpec, ComputeNode
+    from repro.core.resources import ARIES, Disk, DiskSpec, StorageNode
+
+    big = DiskSpec("big-nvme", 10 * TB, read_bw=6 * GB, write_bw=4 * GB)
+    small = DiskSpec("small-nvme", 2 * TB, read_bw=3 * GB, write_bw=1 * GB)
+
+    def node(nid, spec):
+        return StorageNode(nid, tuple(Disk(nid, d, spec) for d in range(2)))
+
+    return ClusterSpec(
+        name="hetero",
+        compute_nodes=(ComputeNode("c0"),),
+        storage_nodes=(node("big0", big), node("big1", big), node("small0", small)),
+        interconnect=ARIES,
+    )
+
+
+def test_heterogeneous_capacity_sizing_never_underprovisions():
+    """Regression: sizing from the node-0 prototype requested 1 node for
+    8 TB (big node holds 20 TB) — but the allocator is free to grant the
+    4 TB small node. Min-across-nodes sizing guarantees any granted subset
+    delivers the requested capacity."""
+    s = Scheduler(_hetero_cluster())
+    req = StorageRequest(capacity_bytes=8 * TB)
+    n = s.resolve_storage_nodes(req)
+    assert n == 2                                  # min per-node is 4 TB
+    a = s.submit(JobRequest("j", 0, storage=req))
+    granted = sum(
+        s.policy.node_capacity_bytes(node) for node in a.storage_nodes
+    )
+    assert granted >= 8 * TB
+    s.release(a)
+
+
+def test_heterogeneous_capability_sizing_uses_min_bandwidth():
+    s = Scheduler(_hetero_cluster())
+    # min per-node write bw is the small node's 2x1 GB/s
+    assert s.resolve_storage_nodes(StorageRequest(capability_bw=4 * GB)) == 2
+    assert s.resolve_storage_nodes(StorageRequest(capability_bw=2 * GB)) == 1
+
+
+def test_heterogeneous_sizing_follows_free_pool():
+    """Once the small node is busy, the free pool is homogeneous-big and the
+    same request resolves to fewer nodes; feasibility keeps using the
+    conservative empty-cluster (all-nodes) sizing throughout."""
+    s = Scheduler(_hetero_cluster())
+    req = StorageRequest(capacity_bytes=8 * TB)
+    assert s.resolve_storage_nodes(req) == 2       # min over {big,big,small}
+    # occupy the two big nodes (allocator picks lowest ids: big0, big1)
+    held = s.submit(JobRequest("big-eater", 0, storage=StorageRequest(nodes=2)))
+    assert {n.node_id for n in held.storage_nodes} == {"big0", "big1"}
+    # only the 4 TB small node is free: the same request now needs 2 of it
+    assert s.resolve_storage_nodes(req) == 2
+    smaller = StorageRequest(capacity_bytes=3 * TB)
+    assert s.resolve_storage_nodes(smaller) == 1   # still fits one small node
+    # empty-cluster feasibility is unchanged by occupancy
+    assert s.demand(JobRequest("q", 0, storage=req), assume_empty=True)[1] == 2
+    s.release(held)
+    assert s.resolve_storage_nodes(smaller) == 1   # big nodes back: 1 suffices
+
+
 def test_provisioner_explicit_zero_md_disks_not_replaced_by_default(tmp_path):
     """The falsy-zero fix: md_disks_per_node=0 must survive plan_for."""
     from repro.core import Provisioner

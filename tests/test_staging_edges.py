@@ -1,0 +1,86 @@
+"""`stage_tree` / `modeled_stage_time` edge cases: empty source directories,
+deeply nested trees, zero-byte transfers, and the n_streams guard."""
+
+import pytest
+
+from repro.core import FSClient, GlobalFS, dom_efs, dom_lustre, modeled_stage_time
+from repro.core.staging import stage, stage_tree
+
+
+@pytest.fixture
+def gfs(tmp_path):
+    fs = GlobalFS(str(tmp_path / "lustre"))
+    yield fs
+    fs.teardown()
+
+
+@pytest.fixture
+def efs(tmp_path):
+    fs = GlobalFS(str(tmp_path / "burst"))     # any DataManager works as dst
+    yield fs
+    fs.teardown()
+
+
+def test_stage_tree_empty_source_dir_is_noop(gfs, efs):
+    FSClient(gfs).makedirs("/proj/empty")
+    rep = stage_tree(gfs, efs, "/proj/empty", "/in",
+                     src_model=dom_lustre(), dst_model=dom_efs())
+    assert rep.files == 0
+    assert rep.bytes == 0
+    assert rep.modeled_time_s == 0.0           # no setup ramp for zero bytes
+    assert not FSClient(efs).exists("/in")     # nothing was created
+
+
+def test_stage_tree_deeply_nested(gfs, efs):
+    c = FSClient(gfs)
+    depth = 12
+    path = "/proj"
+    for d in range(depth):
+        path += f"/lvl{d}"
+    c.makedirs(path)
+    c.write_file(f"{path}/leaf.bin", b"x" * 1024)
+    c.write_file("/proj/lvl0/shallow.bin", b"y" * 256)
+    rep = stage_tree(gfs, efs, "/proj", "/dst")
+    assert rep.files == 2
+    assert rep.bytes == 1024 + 256
+    dst = FSClient(efs)
+    nested = "/dst" + path[len("/proj"):] + "/leaf.bin"
+    assert dst.read_file(nested) == b"x" * 1024
+    assert dst.read_file("/dst/lvl0/shallow.bin") == b"y" * 256
+
+
+def test_stage_empty_pair_list(gfs, efs):
+    rep = stage(gfs, efs, [], src_model=dom_lustre(), dst_model=dom_efs())
+    assert rep.files == 0 and rep.bytes == 0 and rep.modeled_time_s == 0.0
+
+
+def test_modeled_stage_time_zero_bytes_is_zero():
+    assert modeled_stage_time(0, dom_lustre(), dom_efs()) == 0.0
+    assert modeled_stage_time(-5.0, dom_lustre(), dom_efs()) == 0.0
+    assert modeled_stage_time(0, None, None) == 0.0
+
+
+def test_modeled_stage_time_n_streams_zero_guard():
+    """n_streams <= 0 must not divide by zero; it clamps to one stream."""
+    t0 = modeled_stage_time(1e9, dom_lustre(), dom_efs(), n_streams=0)
+    t1 = modeled_stage_time(1e9, dom_lustre(), dom_efs(), n_streams=1)
+    tneg = modeled_stage_time(1e9, dom_lustre(), dom_efs(), n_streams=-3)
+    assert t0 == t1 == tneg
+    assert t0 > 0
+
+
+def test_modeled_stage_time_monotone_in_bytes():
+    times = [
+        modeled_stage_time(nb, dom_lustre(), dom_efs())
+        for nb in (1e6, 1e9, 1e12)
+    ]
+    assert times == sorted(times)
+    assert all(t > 0 for t in times)
+
+
+def test_modeled_stage_time_one_sided_models():
+    """Missing src or dst model degrades to the other side's path alone."""
+    both = modeled_stage_time(1e10, dom_lustre(), dom_efs())
+    read_only = modeled_stage_time(1e10, dom_lustre(), None)
+    write_only = modeled_stage_time(1e10, None, dom_efs())
+    assert both == pytest.approx(max(read_only, write_only))
