@@ -1,42 +1,31 @@
 """§IV-A1 / §IV-B1: deployment time of the containerized on-demand FS.
 
 5.37 s over 2 DataWarp nodes (Shifter); 4.6 s fresh / 1.2 s warm over the
-8 Ault disks (local docker) — C8. Functional deploy wallclock measured too.
+8 Ault disks (local docker) — C8. The functional wallclock measured is a
+full materialized `StorageSession` open/release cycle (negotiate, allocate,
+deploy, tear down) through the unified storage API.
 """
 
 from __future__ import annotations
 
 import tempfile
 
-from repro.core import (
-    JobRequest,
-    Provisioner,
-    Scheduler,
-    StorageRequest,
-    dom_cluster,
-    predict_deploy_time,
-)
+from repro.core import dom_cluster, predict_deploy_time
+from repro.provision import ProvisioningService, StorageSpec
 
 from .common import time_us
 
 
 def rows():
-    cluster = dom_cluster()
-    sched = Scheduler(cluster)
-    alloc = sched.submit(JobRequest("bench", 1, storage=StorageRequest(nodes=2)))
-    prov = Provisioner(cluster)
-    plan = prov.plan_for(alloc)
+    svc = ProvisioningService(dom_cluster())
+    spec = StorageSpec("bench", nodes=2, managers=("ephemeralfs",))
     base = tempfile.mkdtemp(prefix="bench-deploy-")
 
-    deps = []
+    def deploy_cycle():
+        # release tears the tree down, so every cycle pays the fresh path
+        svc.open_session(spec, materialize=True, base_dir=base).release()
 
-    def deploy():
-        deps.append(prov.deploy(plan, base))
-
-    us = time_us(deploy, repeat=2)
-    for d in deps:
-        d.teardown()
-    sched.release(alloc)
+    us = time_us(deploy_cycle, repeat=2)
     return [
         ("deploy/dom-2dw-shifter", us,
          f"{predict_deploy_time(3, runtime='shifter'):.2f}s"),

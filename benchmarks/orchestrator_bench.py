@@ -1,15 +1,16 @@
 """Campaign benchmark: the orchestrator under queue pressure.
 
 200 jobs with more aggregate storage demand than the 4 DataWarp nodes can
-hold at once, pushed through each queueing policy. ``us_per_call`` is the
-wallclock of simulating the whole campaign (the event engine's job is to
-make this milliseconds); ``derived`` reports virtual makespan and
-storage-node utilization.
+hold at once, pushed through each queueing policy — every job's demand a
+declarative `StorageSpec` negotiated by the orchestrator's
+`ProvisioningService`. ``us_per_call`` is the wallclock of simulating the
+whole campaign (the event engine's job is to make this milliseconds);
+``derived`` reports virtual makespan and storage-node utilization.
 """
 
 from __future__ import annotations
 
-from repro.core import StorageRequest, dom_cluster
+from repro.core import dom_cluster
 from repro.orchestrator import (
     BackfillPolicy,
     FIFOPolicy,
@@ -18,6 +19,7 @@ from repro.orchestrator import (
     summarize,
 )
 from repro.orchestrator.lifecycle import WorkflowSpec
+from repro.provision import StorageSpec
 
 from .common import time_us
 
@@ -30,9 +32,13 @@ def _specs() -> list[WorkflowSpec]:
         WorkflowSpec(
             name=f"job{i:03d}",
             n_compute=1 + i % 4,
-            storage=StorageRequest(nodes=1 + i % 3),
-            stage_in_bytes=(8 + 24 * (i % 5)) * GB,
-            stage_out_bytes=(2 + 6 * (i % 3)) * GB,
+            storage_spec=StorageSpec(
+                f"job{i:03d}",
+                nodes=1 + i % 3,
+                managers=("ephemeralfs",),
+                stage_in_bytes=(8 + 24 * (i % 5)) * GB,
+                stage_out_bytes=(2 + 6 * (i % 3)) * GB,
+            ),
             run_time_s=20.0 + 15.0 * (i % 7),
         )
         for i in range(N_JOBS)

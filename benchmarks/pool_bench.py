@@ -1,14 +1,16 @@
 """Persistent pools vs per-job provisioning on a shared-dataset campaign.
 
 The acceptance scenario for the pool subsystem: >= 100 jobs sharing <= 10
-datasets on an oversubscribed cluster (dom: 4 DataWarp nodes). The baseline
-provisions a job-scoped file system per job and re-stages every shared
-dataset from the global FS each time (the paper's mechanism, PR 1's
-orchestrator); the pooled mode pins the storage nodes under two persistent
-pools, routes jobs to their data with ``DataAwarePolicy``, and stages each
-dataset once per residency — later references are cache hits. Pool ledgers
-are capped below hardware capacity so the LRU eviction engine sees real
-pressure.
+datasets on an oversubscribed cluster (dom: 4 DataWarp nodes), both modes
+expressed through the unified StorageSession API. The baseline campaign
+carries EPHEMERAL `StorageSpec`s — negotiation grants a job-scoped file
+system per job and re-stages every shared dataset from the global FS each
+time (the paper's mechanism). The pooled mode opens two PERSISTENT sessions
+(pinning the storage nodes under long-lived pools), gives every job a
+POOLED spec so negotiation resolves it to a capacity lease, routes jobs to
+their data with ``DataAwarePolicy``, and stages each dataset once per
+residency — later references are cache hits. Pool ledgers are capped below
+hardware capacity so the LRU eviction engine sees real pressure.
 
 ``derived`` reports both modes' virtual makespan, the stage-in bytes saved,
 the dataset hit rate, and eviction counts. The pooled mode must beat the
@@ -19,7 +21,7 @@ fails loudly if the subsystem regresses.
 
 from __future__ import annotations
 
-from repro.core import StorageRequest, dom_cluster
+from repro.core import dom_cluster
 from repro.orchestrator import (
     BackfillPolicy,
     DataAwarePolicy,
@@ -29,6 +31,7 @@ from repro.orchestrator import (
 )
 from repro.orchestrator.lifecycle import WorkflowSpec
 from repro.pool import DatasetRef
+from repro.provision import LifetimeClass, StorageSpec
 
 from .common import time_us
 
@@ -53,19 +56,35 @@ def _refs(i: int, ds: list[DatasetRef]) -> tuple[DatasetRef, ...]:
 
 
 def _specs(ds: list[DatasetRef], *, pooled: bool) -> list[WorkflowSpec]:
-    return [
-        WorkflowSpec(
-            name=f"job{i:03d}",
-            n_compute=1 + i % 3,
-            storage=None if pooled else StorageRequest(nodes=1 + i % 2),
-            datasets=_refs(i, ds),
-            use_pool=pooled,
-            stage_in_bytes=2 * GB,
-            stage_out_bytes=1 * GB,
-            run_time_s=20.0 + 5.0 * (i % 6),
+    specs = []
+    for i in range(N_JOBS):
+        name = f"job{i:03d}"
+        if pooled:
+            storage = StorageSpec(
+                name,
+                lifetime=LifetimeClass.POOLED,
+                datasets=_refs(i, ds),
+                stage_in_bytes=2 * GB,
+                stage_out_bytes=1 * GB,
+            )
+        else:
+            storage = StorageSpec(
+                name,
+                nodes=1 + i % 2,
+                managers=("ephemeralfs",),
+                datasets=_refs(i, ds),
+                stage_in_bytes=2 * GB,
+                stage_out_bytes=1 * GB,
+            )
+        specs.append(
+            WorkflowSpec(
+                name=name,
+                n_compute=1 + i % 3,
+                storage_spec=storage,
+                run_time_s=20.0 + 5.0 * (i % 6),
+            )
         )
-        for i in range(N_JOBS)
-    ]
+    return specs
 
 
 def run_baseline():
@@ -79,14 +98,23 @@ def run_baseline():
 def run_pooled():
     ds = _datasets()
     orch = Orchestrator(dom_cluster(), policy=BackfillPolicy())
-    pools = orch.enable_pools(ttl_s=None)
-    p1 = pools.create_pool(nodes=2, cap_bytes=POOL_CAP_GB * GB)
-    p2 = pools.create_pool(nodes=2, cap_bytes=POOL_CAP_GB * GB)
-    orch.policy = DataAwarePolicy(pools)
+    orch.enable_pools(ttl_s=None)
+    sessions = [
+        orch.provision.open_session(
+            StorageSpec(
+                f"pool{k}",
+                nodes=2,
+                lifetime=LifetimeClass.PERSISTENT,
+                capacity_cap_bytes=POOL_CAP_GB * GB,
+            )
+        )
+        for k in range(2)
+    ]
+    orch.policy = DataAwarePolicy(orch.provision)
     jobs = orch.run_campaign(_specs(ds, pooled=True))
     assert all(j.state is JobState.DONE for j in jobs)
-    rep = summarize(jobs, n_storage_nodes=4, pools=pools)
-    setup_s = p1.deploy_time_s + p2.deploy_time_s
+    rep = summarize(jobs, n_storage_nodes=4, pools=orch.pools)
+    setup_s = sum(s.provision_time_s for s in sessions)
     return rep, setup_s
 
 

@@ -1,0 +1,130 @@
+"""Negotiation overhead + backend sweep for the unified StorageSession API.
+
+Sweeps campaigns of mixed `StorageSpec`s — node-, capacity-, and
+bandwidth-sized ephemeral FS requests, QoS-driven globalfs fallbacks,
+KV-store grants, and pool leases — through the orchestrator, so every
+session passes the `ProvisioningService` negotiation path. For each mix it
+reports the virtual makespan, the per-backend session split, and the
+cumulative wallclock spent inside ``negotiate()``.
+
+Acceptance (asserted): negotiation overhead stays **under 5% of campaign
+makespan** for every mix — the declarative facade must cost noise, not
+schedule time. Results are also emitted as JSON
+(``benchmarks/out/provision_bench.json``) for the bench trajectory.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core import dom_cluster
+from repro.orchestrator import BackfillPolicy, JobState, Orchestrator, summarize
+from repro.orchestrator.lifecycle import WorkflowSpec
+from repro.pool import DatasetRef
+from repro.provision import LifetimeClass, QoS, StorageSpec
+
+from .common import time_us
+
+GB = 1e9
+N_JOBS = 120
+OVERHEAD_BUDGET = 0.05      # negotiation wallclock / virtual makespan
+OUT_PATH = os.path.join(os.path.dirname(__file__), "out", "provision_bench.json")
+
+
+def _ephemeral_mix(i: int) -> StorageSpec:
+    """Rotating node / capacity / bandwidth sizing, ephemeralfs only."""
+    name = f"efs{i:03d}"
+    sizing = i % 3
+    if sizing == 0:
+        return StorageSpec(name, nodes=1 + i % 2, managers=("ephemeralfs",),
+                           stage_in_bytes=8 * GB, stage_out_bytes=2 * GB)
+    if sizing == 1:
+        return StorageSpec(name, capacity_bytes=12e12, managers=("ephemeralfs",),
+                           stage_in_bytes=20 * GB, stage_out_bytes=4 * GB)
+    return StorageSpec(name, bandwidth=10 * GB, managers=("ephemeralfs",),
+                       qos=QoS(min_bandwidth=10 * GB),
+                       stage_in_bytes=30 * GB, stage_out_bytes=8 * GB)
+
+
+def _negotiated_mix(i: int, ds: list[DatasetRef]) -> StorageSpec:
+    """Multi-backend mix: fallback chains, KV access, zero-deploy QoS,
+    pool leases — the negotiation-heavy case."""
+    name = f"mix{i:03d}"
+    kind = i % 5
+    if kind == 0:
+        return StorageSpec(name, nodes=1, managers=("ephemeralfs", "globalfs"),
+                           stage_in_bytes=6 * GB, stage_out_bytes=1 * GB)
+    if kind == 1:
+        return StorageSpec(name, capacity_bytes=1e12,
+                           managers=("globalfs", "ephemeralfs"),
+                           qos=QoS(max_provision_s=1.0),
+                           stage_in_bytes=2 * GB, stage_out_bytes=1 * GB)
+    if kind == 2:
+        return StorageSpec(name, nodes=1, access="kv", stage_in_bytes=4 * GB)
+    return StorageSpec(name, lifetime=LifetimeClass.POOLED,
+                       datasets=(ds[i % len(ds)],),
+                       stage_in_bytes=2 * GB, stage_out_bytes=1 * GB)
+
+
+def _run(mix: str) -> dict:
+    ds = [DatasetRef(f"d{k}", (10.0 + 4.0 * k) * GB) for k in range(6)]
+    orch = Orchestrator(dom_cluster(), policy=BackfillPolicy())
+    if mix == "negotiated":
+        orch.enable_pools(ttl_s=None)
+        orch.provision.open_session(
+            StorageSpec("bench-pool", nodes=2, lifetime=LifetimeClass.PERSISTENT)
+        )
+        specs = [_negotiated_mix(i, ds) for i in range(N_JOBS)]
+    else:
+        specs = [_ephemeral_mix(i) for i in range(N_JOBS)]
+    jobs = orch.run_campaign(
+        [
+            WorkflowSpec(name=s.name, n_compute=1 + i % 3, storage_spec=s,
+                         run_time_s=15.0 + 5.0 * (i % 4))
+            for i, s in enumerate(specs)
+        ]
+    )
+    assert all(j.state is JobState.DONE for j in jobs), f"{mix}: jobs failed"
+    rep = summarize(jobs, n_storage_nodes=4, pools=orch.pools)
+    stats = orch.provision.stats
+    overhead = stats.negotiation_wall_s / rep.makespan_s
+    assert overhead < OVERHEAD_BUDGET, (
+        f"{mix}: negotiation overhead {overhead:.2%} of makespan "
+        f"exceeds the {OVERHEAD_BUDGET:.0%} budget"
+    )
+    return {
+        "mix": mix,
+        "n_jobs": N_JOBS,
+        "makespan_s": rep.makespan_s,
+        "negotiations": stats.negotiations,
+        "negotiation_wall_s": stats.negotiation_wall_s,
+        "overhead_frac": overhead,
+        "sessions_by_backend": dict(sorted(stats.sessions_opened.items())),
+        "failed_negotiations": stats.failed_negotiations,
+    }
+
+
+def rows():
+    results, out = [], []
+    for mix in ("ephemeral", "negotiated"):
+        runs = []
+        us = time_us(lambda m=mix: runs.append(_run(m)), repeat=2)
+        r = runs[-1]           # keep the final run per mix in the JSON
+        results.append(r)
+        backends = ",".join(f"{k}:{v}" for k, v in r["sessions_by_backend"].items())
+        out.append(
+            (
+                f"provision/{mix}-{N_JOBS}jobs",
+                us,
+                f"makespan={r['makespan_s']:.0f}s "
+                f"negotiations={r['negotiations']} "
+                f"overhead={r['overhead_frac']:.4%} "
+                f"backends={backends}",
+            )
+        )
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump({"benchmark": "provision_bench", "results": results}, f, indent=2)
+    out.append(("provision/json", 0.0, f"written={OUT_PATH}"))
+    return out

@@ -22,6 +22,7 @@ def main() -> None:
         mdtest,
         orchestrator_bench,
         pool_bench,
+        provision_bench,
         roofline,
         scalability,
     )
@@ -37,6 +38,7 @@ def main() -> None:
         ("checkpoint_io", checkpoint_io),  # beyond-paper (§III-B use-case)
         ("orchestrator", orchestrator_bench),  # beyond-paper campaign pipeline
         ("pool", pool_bench),              # beyond-paper persistent pools
+        ("provision", provision_bench),    # StorageSession API negotiation
         ("kernels", kernels_bench),
         ("roofline", roofline),            # §Roofline (reads dry-run artifacts)
     ]

@@ -10,9 +10,10 @@ import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_smoke
-from repro.core import JobRequest, Provisioner, Scheduler, StorageRequest, dom_cluster
+from repro.core import dom_cluster
 from repro.models import build_model
 from repro.optim import AdamWConfig
+from repro.provision import Placement, ProvisioningService, StorageSpec
 from repro.runtime import (
     HeartbeatMonitor,
     RuntimeConfig,
@@ -23,11 +24,15 @@ from repro.runtime import (
 )
 
 # -- job setup (mirrored storage: survives a storage-node loss) -------------
-cluster = dom_cluster()
-sched = Scheduler(cluster)
-alloc = sched.submit(JobRequest("elastic", 8, storage=StorageRequest(nodes=2)))
-prov = Provisioner(cluster)
-dep = prov.deploy(prov.plan_for(alloc, mirror=True))
+svc = ProvisioningService(dom_cluster())
+session = svc.open_session(
+    StorageSpec("elastic", nodes=2, managers=("ephemeralfs",),
+                placement=Placement(mirror=True)),
+    n_compute=8,
+    materialize=True,
+)
+alloc = session.allocation
+dep = session.deployment
 mgr = CheckpointManager(dep.fs)
 
 cfg = get_smoke("phi4-mini-3.8b")
@@ -52,7 +57,7 @@ for step in range(6):
 print("straggler detection:", mon.stragglers())
 
 # -- storage node dies mid-run ------------------------------------------------
-victim = alloc.storage_nodes[1].node_id
+victim = session.storage_nodes[1].node_id
 dep.fs.kill_node(victim)
 print(f"killed {victim}; FS degraded={dep.fs.degraded()} "
       f"(mirrored chunks keep serving)")
@@ -73,6 +78,5 @@ state2 = TrainState(restored["params"], restored["opt"], ())
 state2, m = step_fn(state2, batch)
 print(f"resumed from step {rstep}; next loss {float(m['loss']):.4f}")
 
-dep.teardown()
-sched.release(alloc)
+session.release()
 print("OK")

@@ -1,24 +1,26 @@
 """Shared-dataset campaign: persistent pools vs per-job provisioning.
 
 An oversubscribed campaign — 120 jobs over 8 shared datasets on dom's 4
-DataWarp nodes, arriving as a Poisson process — run twice:
+DataWarp nodes, arriving as a Poisson process — run twice, both through the
+unified StorageSession API (`StorageSpec` -> `ProvisioningService`):
 
-* **per-job** (the paper's mechanism): every job allocates storage nodes,
-  deploys a fresh BeeGFS, stages *all* of its input datasets from Lustre,
-  and tears everything down at job end. Shared data crosses the wire once
-  per referencing job.
-* **pooled + data-aware** (``repro.pool``): two persistent pools pin the
-  storage nodes once; jobs lease capacity, `DataAwarePolicy` routes them to
-  the pool already holding their inputs, and stage-in moves only cache
-  misses. Capped pool ledgers put the LRU eviction engine under pressure;
-  idle pools are reaped after a TTL once the queue drains.
+* **per-job** (the paper's mechanism): every job's spec has EPHEMERAL
+  lifetime — negotiation grants fresh storage nodes, deploys a BeeGFS,
+  stages *all* of its input datasets from Lustre, and tears everything down
+  at job end. Shared data crosses the wire once per referencing job.
+* **pooled + data-aware**: two PERSISTENT sessions create long-lived pools
+  that pin the storage nodes once; jobs carry POOLED specs, so negotiation
+  resolves them to capacity *leases*, `DataAwarePolicy` routes them to the
+  pool already holding their inputs, and stage-in moves only cache misses.
+  Capped pool ledgers put the LRU eviction engine under pressure; idle
+  pools are reaped after a TTL once the queue drains.
 
 Run:  PYTHONPATH=src python examples/shared_dataset_campaign.py
 """
 
 import time
 
-from repro.core import StorageRequest, dom_cluster
+from repro.core import dom_cluster
 from repro.orchestrator import (
     BackfillPolicy,
     DataAwarePolicy,
@@ -29,6 +31,7 @@ from repro.orchestrator import (
     summarize,
 )
 from repro.pool import DatasetRef
+from repro.provision import LifetimeClass, StorageSpec
 
 GB = 1e9
 N_JOBS = 120
@@ -47,15 +50,29 @@ def make_specs(datasets: list[DatasetRef], *, pooled: bool) -> list[WorkflowSpec
     specs = []
     for i in range(N_JOBS):
         picks = sorted({i % N_DATASETS, (i * i + 1) % (N_DATASETS // 2)})
-        specs.append(
-            WorkflowSpec(
-                name=f"analysis{i:03d}",
-                n_compute=1 + i % 3,
-                storage=None if pooled else StorageRequest(nodes=1 + i % 2),
+        name = f"analysis{i:03d}"
+        if pooled:
+            storage = StorageSpec(
+                name,
+                lifetime=LifetimeClass.POOLED,
                 datasets=tuple(datasets[k] for k in picks),
-                use_pool=pooled,
                 stage_in_bytes=2 * GB,     # private inputs
                 stage_out_bytes=1 * GB,    # results
+            )
+        else:
+            storage = StorageSpec(
+                name,
+                nodes=1 + i % 2,
+                managers=("ephemeralfs",),
+                datasets=tuple(datasets[k] for k in picks),
+                stage_in_bytes=2 * GB,
+                stage_out_bytes=1 * GB,
+            )
+        specs.append(
+            WorkflowSpec(
+                name=name,
+                n_compute=1 + i % 3,
+                storage_spec=storage,
                 run_time_s=25.0 + 5.0 * (i % 5),
             )
         )
@@ -82,15 +99,24 @@ def main() -> None:
 
     # --- persistent pools + data-aware routing -------------------------------
     orch = Orchestrator(cluster)
-    pools = orch.enable_pools(ttl_s=2000.0)     # idle pools reaped after TTL
-    for _ in range(2):
-        pools.create_pool(nodes=2, cap_bytes=110.0 * GB)
-    orch.policy = DataAwarePolicy(pools)
+    orch.enable_pools(ttl_s=2000.0)     # idle pools reaped after TTL
+    svc = orch.provision
+    for k in range(2):
+        svc.open_session(
+            StorageSpec(
+                f"tile-pool{k}",
+                nodes=2,
+                lifetime=LifetimeClass.PERSISTENT,
+                capacity_cap_bytes=110.0 * GB,
+            )
+        )
+    orch.policy = DataAwarePolicy(svc)
     t0 = time.perf_counter()
     jobs = orch.run_campaign(make_specs(datasets, pooled=True),
                              submit_times=arrivals)
     wall = time.perf_counter() - t0
-    rep = summarize(jobs, n_storage_nodes=len(cluster.storage_nodes), pools=pools)
+    rep = summarize(jobs, n_storage_nodes=len(cluster.storage_nodes),
+                    pools=orch.pools)
     print(f"=== pooled + data-aware (simulated {rep.makespan_s:,.0f} s "
           f"in {wall * 1e3:.0f} ms) ===")
     print(format_report(rep, top_n=3))
@@ -102,7 +128,7 @@ def main() -> None:
           f"({saved / base_rep.staged_in_bytes:.0%} of baseline saved)")
     print(f"makespan: {base_rep.makespan_s:,.0f} s per-job vs "
           f"{rep.makespan_s:,.0f} s pooled")
-    print(f"pools left live after TTL reap: {len(pools.live_pools)}")
+    print(f"pools left live after TTL reap: {len(orch.pools.live_pools)}")
 
 
 if __name__ == "__main__":

@@ -1,19 +1,24 @@
 """Workflow campaign: 150 jobs through the event-driven orchestrator.
 
 The paper's pipeline — allocate compute+storage, deploy the on-demand FS,
-stage in, run, stage out, tear down — executed as a *campaign*: far more
-storage demand than the 4 DataWarp nodes can serve at once, so jobs queue
-and backfill instead of failing; a fault injector trips some provisioning
-and staging attempts, which requeue and retry with a warm redeploy.
-Virtual time advances by perfmodel predictions (deploy C8, staging
-bandwidth, run time); wallclock stays in milliseconds.
+stage in, run, stage out, tear down — executed as a *campaign* over the
+unified StorageSession API: every job states its storage demand as a
+declarative `StorageSpec` (sizing by nodes, capacity, or bandwidth;
+preferred data managers with ordered fallbacks; QoS floors), and the
+orchestrator's `ProvisioningService` negotiates each one onto the best
+feasible backend — the BeeGFS-analogue ephemeral FS, the always-on global
+FS (zero deploy latency, shared bandwidth), or the KV store. Jobs queue and
+backfill when the 4 DataWarp nodes are busy; a fault injector trips some
+provisioning and staging attempts, which requeue and retry with a warm
+redeploy. Virtual time advances by perfmodel predictions; wallclock stays
+in milliseconds.
 
 Run:  PYTHONPATH=src python examples/workflow_campaign.py
 """
 
 import time
 
-from repro.core import StorageRequest, dom_cluster
+from repro.core import dom_cluster
 from repro.orchestrator import (
     BackfillPolicy,
     FIFOPolicy,
@@ -23,42 +28,83 @@ from repro.orchestrator import (
     format_report,
     summarize,
 )
+from repro.provision import QoS, StorageSpec
 from repro.runtime import FaultInjector, FaultSpec
 
 GB = 1e9
 
 
 def make_specs(n_jobs: int = 150) -> list[WorkflowSpec]:
-    """A mixed campaign: small analysis jobs, mid-size simulations, and a
-    few storage-hungry checkpoint-heavy runs."""
+    """A mixed campaign: small analysis jobs, zero-deploy postprocessing,
+    KV-backed feature extraction, mid-size simulations, and a few
+    storage-hungry checkpoint-heavy runs."""
     specs = []
     for i in range(n_jobs):
         kind = i % 10
-        if kind < 6:        # small: 1 storage node, light staging
-            spec = WorkflowSpec(
+        if kind < 4:        # small: capacity-sized with a real global-FS
+            spec = WorkflowSpec(  # fallback (capacity fits either backend)
                 name=f"analysis{i:03d}",
                 n_compute=1 + i % 2,
-                storage=StorageRequest(nodes=1),
-                stage_in_bytes=4 * GB,
-                stage_out_bytes=1 * GB,
+                storage_spec=StorageSpec(
+                    f"analysis{i:03d}",
+                    capacity_bytes=5e12,                      # -> 1 node
+                    managers=("ephemeralfs", "globalfs"),
+                    stage_in_bytes=4 * GB,
+                    stage_out_bytes=1 * GB,
+                ),
                 run_time_s=30.0 + 10.0 * (i % 4),
+            )
+        elif kind < 6:      # postprocessing: needs storage *now* -> the
+            spec = WorkflowSpec(  # zero-deploy shared FS wins negotiation
+                name=f"post{i:03d}",
+                n_compute=1,
+                storage_spec=StorageSpec(
+                    f"post{i:03d}",
+                    capacity_bytes=1e12,
+                    managers=("globalfs", "ephemeralfs"),
+                    qos=QoS(max_provision_s=1.0),
+                    stage_in_bytes=2 * GB,
+                    stage_out_bytes=1 * GB,
+                ),
+                run_time_s=20.0 + 5.0 * (i % 3),
+            )
+        elif kind < 7:      # feature extraction into an ephemeral KV store
+            spec = WorkflowSpec(
+                name=f"features{i:03d}",
+                n_compute=2,
+                storage_spec=StorageSpec(
+                    f"features{i:03d}",
+                    nodes=1,
+                    access="kv",
+                    stage_in_bytes=8 * GB,
+                ),
+                run_time_s=40.0,
             )
         elif kind < 9:      # medium: capacity-sized request (paper §V)
             spec = WorkflowSpec(
                 name=f"sim{i:03d}",
                 n_compute=4,
-                storage=StorageRequest(capacity_bytes=14e12),   # -> 2 nodes
-                stage_in_bytes=60 * GB,
-                stage_out_bytes=20 * GB,
+                storage_spec=StorageSpec(
+                    f"sim{i:03d}",
+                    capacity_bytes=14e12,                     # -> 2 nodes
+                    managers=("ephemeralfs",),
+                    stage_in_bytes=60 * GB,
+                    stage_out_bytes=20 * GB,
+                ),
                 run_time_s=120.0,
             )
-        else:               # large: capability-sized, most of the pool
+        else:               # large: bandwidth-sized with a QoS floor
             spec = WorkflowSpec(
                 name=f"ckpt{i:03d}",
                 n_compute=8,
-                storage=StorageRequest(capability_bw=18e9),     # -> 3 nodes
-                stage_in_bytes=200 * GB,
-                stage_out_bytes=120 * GB,
+                storage_spec=StorageSpec(
+                    f"ckpt{i:03d}",
+                    bandwidth=18e9,                           # -> 3 nodes
+                    managers=("ephemeralfs",),
+                    qos=QoS(min_bandwidth=18e9),
+                    stage_in_bytes=200 * GB,
+                    stage_out_bytes=120 * GB,
+                ),
                 run_time_s=300.0,
             )
         specs.append(spec)
@@ -77,9 +123,16 @@ def main() -> None:
         jobs = orch.run_campaign(make_specs())
         wall = time.perf_counter() - t0
         rep = summarize(jobs, n_storage_nodes=len(cluster.storage_nodes))
+        stats = orch.provision.stats
         print(f"=== policy: {policy.name} "
               f"(simulated {rep.makespan_s:,.0f} s in {wall * 1e3:.0f} ms) ===")
         print(format_report(rep, top_n=5))
+        by_backend = ", ".join(
+            f"{k}={v}" for k, v in sorted(stats.sessions_opened.items())
+        )
+        print(f"negotiated sessions: {by_backend} "
+              f"({stats.negotiations} negotiations, "
+              f"{stats.negotiation_wall_s * 1e3:.1f} ms total)")
         print()
 
 

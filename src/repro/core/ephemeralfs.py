@@ -386,7 +386,10 @@ class EphemeralFS(DataManager):
                 info.alive = svc.alive
         return infos
 
-    def teardown(self) -> None:
+    def teardown(self, *, keep_data: bool = False) -> None:
+        """Kill all services; delete every byte unless ``keep_data`` (the
+        warm-redeploy scenario: services stop but the tree survives, so the
+        next deploy over the same base_dir pays the §IV-B1 warm cost)."""
         self._torn_down = True
         for s in self.md_services:
             s.alive = False
@@ -396,7 +399,8 @@ class EphemeralFS(DataManager):
             s.alive = False
         self.mgmt.alive = False
         self.monitor.alive = False
-        shutil.rmtree(self.base_dir, ignore_errors=True)
+        if not keep_data:
+            shutil.rmtree(self.base_dir, ignore_errors=True)
 
     # -- DataManager: namespace --------------------------------------------
     def _require_parent(self, path: str) -> None:

@@ -85,12 +85,25 @@ class Deployment:
     deploy_time_s: float             # modeled (C8)
     wallclock_deploy_s: float        # actual in-container time (functional)
     base_dir: str
+    provisioner: Optional["Provisioner"] = None   # owner of the tree registry
 
     def mount(self, client_id: str = "client0") -> FSClient:
         return FSClient(self.fs, client_id)
 
     def teardown(self) -> None:
+        """Kill services and delete the tree; the base_dir becomes claimable
+        (and cold) again."""
         self.fs.teardown()
+        if self.provisioner is not None:
+            self.provisioner.release_tree(self.base_dir)
+
+    def release(self, *, keep_tree: bool = False) -> None:
+        """Stop the data manager; with ``keep_tree`` the on-disk tree stays,
+        so the next deploy into the same base_dir takes the warm (§IV-B1
+        1.2 s) path instead of the fresh one."""
+        self.fs.teardown(keep_data=keep_tree)
+        if self.provisioner is not None:
+            self.provisioner.release_tree(self.base_dir)
 
 
 class Provisioner:
@@ -102,6 +115,29 @@ class Provisioner:
         # warm-tree cache: base dirs we have deployed into before (paper
         # §IV-B1: re-deploying over an existing tree takes 1.2 s vs 4.6 s).
         self._seen_trees: set[str] = set()
+        # collision guard: base dirs currently owned by a live deployment or
+        # pool. Two live sessions must never share a tree (they would
+        # silently serve each other's data as a "warm" cache).
+        self._live_dirs: dict[str, str] = {}
+
+    # -- base_dir ownership ---------------------------------------------------
+    def claim_tree(self, base_dir: str, owner: str = "deployment") -> None:
+        """Register ``base_dir`` as owned by a live deployment/pool; raises
+        :class:`FSError` on collision instead of silently sharing the tree."""
+        holder = self._live_dirs.get(base_dir)
+        if holder is not None:
+            raise FSError(
+                f"base_dir {base_dir!r} is already in use by live "
+                f"deployment {holder!r}; release it before redeploying"
+            )
+        self._live_dirs[base_dir] = owner
+
+    def release_tree(self, base_dir: str) -> None:
+        """Drop live ownership of ``base_dir`` (teardown/retire path)."""
+        self._live_dirs.pop(base_dir, None)
+
+    def tree_owner(self, base_dir: str) -> Optional[str]:
+        return self._live_dirs.get(base_dir)
 
     def plan_for(
         self,
@@ -188,17 +224,25 @@ class Provisioner:
 
     def deploy(self, plan: DeploymentPlan, base_dir: Optional[str] = None) -> Deployment:
         base_dir = base_dir or tempfile.mkdtemp(prefix="efs-")
+        self.claim_tree(base_dir)
         fresh = base_dir not in self._seen_trees or not os.path.isdir(base_dir)
         t0 = time.perf_counter()
-        plan.render_service_config()      # the entrypoint work
-        fs = EphemeralFS(
-            plan.storage_nodes,
-            base_dir,
-            md_disks_per_node=plan.md_disks_per_node,
-            storage_disks_per_node=plan.storage_disks_per_node,
-            stripe_size=plan.stripe_size,
-            mirror=plan.mirror,
-        )
+        try:
+            plan.render_service_config()      # the entrypoint work
+            fs = EphemeralFS(
+                plan.storage_nodes,
+                base_dir,
+                md_disks_per_node=plan.md_disks_per_node,
+                storage_disks_per_node=plan.storage_disks_per_node,
+                stripe_size=plan.stripe_size,
+                mirror=plan.mirror,
+            )
+        except Exception:
+            # a failed deploy never produced a Deployment whose teardown
+            # could release the claim — drop it here or the dir is
+            # undeployable forever
+            self.release_tree(base_dir)
+            raise
         wall = time.perf_counter() - t0
         self._seen_trees.add(base_dir)
         model = self.model_for(plan)
@@ -212,4 +256,5 @@ class Provisioner:
             deploy_time_s=t_model,
             wallclock_deploy_s=wall,
             base_dir=base_dir,
+            provisioner=self,
         )

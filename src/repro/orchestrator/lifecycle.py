@@ -2,29 +2,31 @@
 
 The paper's mechanism is a workflow — allocate compute+storage, deploy the
 on-demand file system, stage in, run, stage out, tear down — and this module
-wires the repo's pieces (`Scheduler`, `Provisioner`, staging model, fault
-injection) into one event-driven pipeline:
+drives it as one event-driven pipeline:
 
     QUEUED -> ALLOCATED -> PROVISIONING -> STAGING_IN -> RUNNING
            -> STAGING_OUT -> TEARDOWN -> DONE
                                  \\-> (fault) -> requeue or FAILED
 
-Every phase duration comes from the calibrated perfmodel: deployment time
-is C8 (`predict_deploy_time`, warm on retries over the same tree), staging
-time is the slower of the global-FS read and ephemeral-FS write paths
-(`modeled_stage_time`), and the run phase is the job's own compute time.
-A `FaultInjector` may trip any phase; a tripped job releases its nodes and
-requeues (up to ``max_retries``) — the retry pays a *warm* redeploy, the
-paper's §IV-B1 1.2 s vs 4.6 s observation.
+Storage is obtained through exactly one path: every job's demands become a
+declarative `StorageSpec`, the orchestrator's `ProvisioningService`
+negotiates a backend (ephemeral FS, global FS, KV store, dry-run) and
+grants a `StorageSession`, and the lifecycle advances its virtual clock by
+the session's modeled costs (`provision_time_s` — C8 deploy, warm on
+retries over the same nodes; `stage_in_time_s` — the slower of the
+global-FS read and backend write paths; `teardown_time_s`). Releasing a
+session returns whatever it held — nodes + file system for a job-scoped
+grant, a pool lease for a pooled one — so teardown-vs-lease-drain is
+session policy, not lifecycle code. A `FaultInjector` may trip any phase;
+a tripped job releases its session and requeues (up to ``max_retries``),
+the retry paying a *warm* redeploy when it lands on the same nodes (§IV-B1).
 
-**Pool-backed jobs** (``WorkflowSpec.use_pool`` with a `PoolManager` attached
-via :meth:`Orchestrator.enable_pools`) ride the same state machine but swap
-the expensive edges for persistent-pool ones: instead of allocating storage
-nodes and deploying a fresh file system, they acquire a *lease* on a
-long-lived pool — the PROVISIONING slot costs only the lease attach, the
-TEARDOWN slot is free (the pool outlives the job), and STAGING_IN moves only
-the dataset bytes *not already resident* on the granted pool (plus the job's
-private scratch). Datasets staged by one job are cache hits for the next.
+**Pool-backed jobs** (a POOLED `StorageSpec`, or the legacy
+``WorkflowSpec(use_pool=True)``) ride the same state machine: negotiation
+resolves them to a lease on a live persistent pool, the PROVISIONING slot
+costs only the lease attach, TEARDOWN is free (the pool outlives the job),
+and STAGING_IN moves only the dataset bytes *not already resident* on the
+granted pool. Datasets staged by one job are cache hits for the next.
 """
 
 from __future__ import annotations
@@ -34,19 +36,19 @@ import enum
 import itertools
 from typing import Optional
 
-from ..core.perfmodel import FSDeployment, dom_lustre, predict_deploy_time
-from ..core.provisioner import Provisioner
-from ..core.scheduler import (
-    Allocation,
-    AllocationError,
-    JobRequest,
-    Scheduler,
-    StorageRequest,
-)
-from ..core.staging import modeled_stage_time
+from ..core.perfmodel import FSDeployment, dom_lustre
+from ..core.scheduler import Allocation, JobRequest, StorageRequest
 from ..pool.catalog import DatasetRef, total_bytes
 from ..pool.manager import PoolManager
 from ..pool.pool import Lease
+from ..provision import (
+    LifetimeClass,
+    NegotiationError,
+    Offer,
+    ProvisioningService,
+    StorageSession,
+    StorageSpec,
+)
 from ..runtime.fault import FaultInjector
 from .engine import SimEngine
 from .policies import FIFOPolicy, QueuePolicy
@@ -79,10 +81,12 @@ _FAULT_PHASE = {
 class WorkflowSpec:
     """One job's demands on the provisioning pipeline.
 
-    ``datasets`` are *shared* inputs by reference (`DatasetRef`): a pool-backed
-    job (``use_pool=True``) only stages the ones not already resident on its
-    granted pool, while a job-scoped job re-stages all of them every time.
-    ``stage_in_bytes``/``stage_out_bytes`` remain the job's private traffic.
+    Storage demands are best stated as a declarative ``storage_spec``
+    (:class:`~repro.provision.StorageSpec`): preferred data managers with
+    fallbacks, lifetime class, datasets, QoS. The legacy fields
+    (``storage=StorageRequest(...)``, ``use_pool``, ``datasets``) remain
+    supported and are translated into an equivalent spec pinned to the
+    ``ephemeralfs`` backend — they cannot be mixed with ``storage_spec``.
     """
 
     name: str
@@ -96,6 +100,7 @@ class WorkflowSpec:
     runtime: str = "shifter"
     datasets: tuple = ()              # tuple[DatasetRef, ...] shared inputs
     use_pool: bool = False
+    storage_spec: Optional[StorageSpec] = None
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "datasets", tuple(self.datasets))
@@ -103,6 +108,22 @@ class WorkflowSpec:
             raise ValueError(f"negative duration/bytes in spec {self.name!r}")
         if self.max_retries < 0:
             raise ValueError("max_retries must be >= 0")
+        if self.storage_spec is not None:
+            if (
+                self.storage is not None
+                or self.use_pool
+                or self.datasets
+                or self.stage_in_bytes
+                or self.stage_out_bytes
+                or self.n_streams != 8
+                or self.runtime != "shifter"
+            ):
+                raise ValueError(
+                    f"{self.name!r}: storage_spec replaces the legacy storage/"
+                    "use_pool/datasets/stage_*_bytes/n_streams/runtime fields "
+                    "(they all belong on the StorageSpec); set one or the other"
+                )
+            return
         if any(not isinstance(d, DatasetRef) for d in self.datasets):
             raise ValueError(f"{self.name!r}: datasets must be DatasetRef instances")
         if len({d.name for d in self.datasets}) != len(self.datasets):
@@ -119,13 +140,61 @@ class WorkflowSpec:
         ):
             raise ValueError(f"{self.name!r}: staging bytes without a storage request")
 
+    # -- the one storage path -------------------------------------------------
+    def session_spec(self) -> Optional[StorageSpec]:
+        """The declarative spec this job presents to the ProvisioningService
+        (None for jobs with no storage demand at all). Legacy fields pin the
+        ``ephemeralfs`` backend, preserving their original semantics."""
+        if self.storage_spec is not None:
+            return self.storage_spec
+        if self.use_pool:
+            return StorageSpec(
+                name=self.name,
+                lifetime=LifetimeClass.POOLED,
+                managers=("ephemeralfs",),
+                datasets=self.datasets,
+                stage_in_bytes=self.stage_in_bytes,
+                stage_out_bytes=self.stage_out_bytes,
+                n_streams=self.n_streams,
+                runtime=self.runtime,  # type: ignore[arg-type]
+            )
+        if self.storage is not None:
+            return StorageSpec(
+                name=self.name,
+                nodes=self.storage.nodes,
+                capacity_bytes=self.storage.capacity_bytes,
+                bandwidth=self.storage.capability_bw,
+                managers=("ephemeralfs",),
+                datasets=self.datasets,
+                stage_in_bytes=self.stage_in_bytes,
+                stage_out_bytes=self.stage_out_bytes,
+                n_streams=self.n_streams,
+                runtime=self.runtime,  # type: ignore[arg-type]
+            )
+        return None
+
+    @property
+    def wants_pool(self) -> bool:
+        return self.use_pool or (
+            self.storage_spec is not None
+            and self.storage_spec.lifetime is LifetimeClass.POOLED
+        )
+
+    @property
+    def all_datasets(self) -> tuple:
+        if self.storage_spec is not None:
+            return self.storage_spec.datasets
+        return self.datasets
+
     @property
     def dataset_bytes(self) -> float:
-        return total_bytes(self.datasets)
+        return total_bytes(self.all_datasets)
 
     @property
     def scratch_bytes(self) -> float:
         """Private pool capacity a lease must reserve on top of datasets."""
+        if self.storage_spec is not None:
+            return self.storage_spec.scratch_bytes
         return self.stage_in_bytes + self.stage_out_bytes
 
 
@@ -138,10 +207,14 @@ class JobRecord:
     submit_time: float
     state: JobState = JobState.QUEUED
     attempt: int = 0
+    sspec: Optional[StorageSpec] = None          # resolved once at submit
+    offer: Optional[Offer] = None                # cached non-POOLED negotiation
+    session: Optional[StorageSession] = None     # live negotiated grant
     allocation: Optional[Allocation] = None
     alloc_started: Optional[float] = None
     fs_model: Optional[FSDeployment] = None
     failure_phase: Optional[str] = None
+    backend: Optional[str] = None                # negotiated data manager
     # storage nodes holding a fully-deployed tree of this job's FS: a retry
     # landing on these nodes redeploys warm (paper §IV-B1)
     warm_nodes: frozenset = frozenset()
@@ -161,8 +234,11 @@ class JobRecord:
 
     @property
     def request(self) -> JobRequest:
-        # pool-backed jobs draw storage from a lease, not the scheduler
-        storage = None if self.spec.use_pool else self.spec.storage
+        """Scheduler-level view of the job's demand (policies rank by it).
+        Pool-backed jobs draw storage from a lease, not the allocator."""
+        storage = None
+        if self.sspec is not None and self.sspec.lifetime is not LifetimeClass.POOLED:
+            storage = self.sspec.to_request()
         return JobRequest(self.spec.name, self.spec.n_compute, storage=storage)
 
     @property
@@ -172,7 +248,8 @@ class JobRecord:
 
 class Orchestrator:
     """Runs provisioning campaigns: many jobs through one cluster, queued
-    by policy, timed by the perfmodel, perturbed by fault injection."""
+    by policy, timed by the perfmodel, perturbed by fault injection. All
+    storage flows through one `ProvisioningService` (``self.provision``)."""
 
     def __init__(
         self,
@@ -182,53 +259,88 @@ class Orchestrator:
         faults: FaultInjector | None = None,
         engine: SimEngine | None = None,
         globalfs_model: FSDeployment | None = None,
-        teardown_time_s: float = 0.5,
+        teardown_time_s: float | None = None,
+        provision: ProvisioningService | None = None,
     ):
         self.engine = engine or SimEngine()
-        self.scheduler = Scheduler(cluster)
-        self.provisioner = Provisioner(cluster)
+        if provision is None:
+            provision = ProvisioningService(
+                cluster,
+                globalfs_model=globalfs_model or dom_lustre(),
+                teardown_time_s=0.5 if teardown_time_s is None else teardown_time_s,
+                clock=lambda: self.engine.now,
+            )
+        elif globalfs_model is not None or teardown_time_s is not None:
+            raise ValueError(
+                "globalfs_model/teardown_time_s are service knobs: configure "
+                "them on the ProvisioningService you pass in"
+            )
+        self.provision = provision
+        # sessions price TEARDOWN and staging from the service; mirror its
+        # values so the orchestrator attributes never disagree with behavior
+        self.teardown_time_s = self.provision.teardown_time_s
+        self.globalfs_model = self.provision.globalfs_model
+        self.scheduler = self.provision.scheduler
+        self.provisioner = self.provision.provisioner
         self.policy = policy or FIFOPolicy()
         self.faults = faults or FaultInjector()
-        self.globalfs_model = globalfs_model or dom_lustre()
-        self.teardown_time_s = teardown_time_s
-        self.pools: Optional[PoolManager] = None
         self.queue: list[JobRecord] = []
         self.jobs: list[JobRecord] = []
         self._ids = itertools.count(1)
 
     # -- pools ----------------------------------------------------------------
+    @property
+    def pools(self) -> Optional[PoolManager]:
+        """The service's pool subsystem (None until attached/first use)."""
+        return self.provision.pool_manager
+
     def enable_pools(self, **kwargs) -> PoolManager:
-        """Attach a persistent-pool subsystem over this orchestrator's own
-        scheduler/provisioner. Create pools on the returned manager before
-        (or during) the campaign; ``use_pool`` jobs lease from them."""
+        """Attach a persistent-pool subsystem over this orchestrator's
+        provisioning service. Pools themselves are best created through the
+        service (a PERSISTENT `StorageSpec`); ``use_pool``/POOLED jobs lease
+        from them. A no-argument call returns the existing manager."""
+        if self.provision.pool_manager is not None and not kwargs:
+            return self.provision.pool_manager
         kwargs.setdefault("clock", lambda: self.engine.now)
-        self.pools = PoolManager(self.scheduler, self.provisioner, **kwargs)
-        return self.pools
+        return self.provision.ensure_pools(**kwargs)
 
     # -- submission ----------------------------------------------------------
     def submit(self, spec: WorkflowSpec, at: Optional[float] = None) -> JobRecord:
         """Enqueue a job at virtual time ``at`` (default: now)."""
-        if spec.use_pool and self.pools is None:
+        if spec.wants_pool and self.provision.pool_manager is None:
             raise ValueError(
-                f"{spec.name!r}: use_pool requires enable_pools() first"
+                f"{spec.name!r}: pooled storage requires enable_pools() (or a "
+                "PERSISTENT session) first"
             )
         t = self.engine.now if at is None else at
-        job = JobRecord(spec=spec, job_id=next(self._ids), submit_time=t)
+        sspec = spec.session_spec()
+        if sspec is None:
+            # no storage demand: a dry-run session still co-allocates compute
+            sspec = StorageSpec(name=spec.name, managers=("null",))
+        job = JobRecord(
+            spec=spec,
+            job_id=next(self._ids),
+            submit_time=t,
+            sspec=sspec,
+        )
         self.jobs.append(job)
         self.engine.at(t, lambda: self._arrive(job))
         return job
 
     def _arrive(self, job: JobRecord) -> None:
-        try:
-            feasible = self.scheduler.feasible(job.request)
-        except AllocationError:
-            feasible = False
-        if feasible and job.spec.use_pool:
-            # no pool could ever hold the working set -> fail fast
-            feasible = self.pools.feasible(job.spec.datasets, job.spec.scratch_bytes)
+        feasible = job.spec.n_compute <= len(self.scheduler.cluster.compute_nodes)
+        if feasible:
+            try:
+                offer = self.provision.negotiate(job.sspec)
+            except NegotiationError:
+                feasible = False
+            else:
+                if job.sspec.lifetime is not LifetimeClass.POOLED:
+                    job.offer = offer   # static over the campaign: reuse at dispatch
         if not feasible:
-            # Never satisfiable on this cluster: fail fast instead of letting
-            # an AllocationError escape the campaign (or queueing forever).
+            # No backend can ever serve this spec on this cluster: fail fast
+            # instead of letting an error escape the campaign (or queueing
+            # forever).
             job.failure_phase = "infeasible"
             self._transition(job, JobState.QUEUED)
             self._transition(job, JobState.FAILED)
@@ -244,78 +356,60 @@ class Orchestrator:
         while started and self.queue:
             started = False
             for job in self.policy.order(self.queue, self.scheduler, self.engine.now):
-                lease = None
-                if job.spec.use_pool:
-                    if not self.pools.feasible(
-                        job.spec.datasets, job.spec.scratch_bytes
-                    ):
-                        # every pool that could have held this working set is
-                        # gone (retired/reaped): fail fast instead of
-                        # stranding the job in the queue forever
-                        self.queue.remove(job)
-                        job.failure_phase = "infeasible"
-                        self._transition(job, JobState.FAILED)
-                        started = True
-                        break
-                    # check compute first (side-effect free), then lease: a
-                    # failed compute fit must not evict datasets for nothing
-                    if not self.scheduler.can_allocate(job.request):
-                        if self.policy.head_blocking:
-                            break
-                        continue
-                    lease = self.pools.try_acquire(
-                        job.spec.name,
-                        job.spec.datasets,
-                        job.spec.scratch_bytes,
-                        now=self.engine.now,
-                    )
-                    if lease is None:
-                        if self.policy.head_blocking:
-                            break
-                        continue
-                alloc = self.scheduler.try_submit(job.request)
-                if alloc is None:
-                    if lease is not None:
-                        self.pools.release(lease, self.engine.now)
+                try:
+                    session = self._try_open(job)
+                except NegotiationError:
+                    # what was feasible at arrival no longer is (e.g. every
+                    # pool that could hold the working set was retired):
+                    # fail fast instead of stranding the job in the queue
+                    self.queue.remove(job)
+                    job.failure_phase = "infeasible"
+                    self._transition(job, JobState.FAILED)
+                    started = True
+                    break
+                if session is None:
                     if self.policy.head_blocking:
                         break
                     continue
                 self.queue.remove(job)
-                self._start(job, alloc, lease)
+                self._start(job, session)
                 started = True
                 break                 # re-ask the policy: free pool changed
 
-    def _start(
-        self, job: JobRecord, alloc: Allocation, lease: Optional[Lease] = None
-    ) -> None:
-        job.allocation = alloc
+    def _try_open(self, job: JobRecord) -> Optional[StorageSession]:
+        """One declarative call grants everything the job holds: compute
+        nodes co-allocated with whatever storage the negotiated backend
+        needs (nodes + deploy, a pool lease, or nothing)."""
+        sspec = job.sspec
+        offer = job.offer
+        if offer is None:
+            offer = self.provision.negotiate(sspec)   # may raise NegotiationError
+            if sspec.lifetime is not LifetimeClass.POOLED:
+                # EPHEMERAL/PERSISTENT feasibility is static over a campaign;
+                # POOLED offers go stale as pools retire/drain, so those
+                # re-negotiate on every dispatch attempt
+                job.offer = offer
+        return self.provision.try_open_session(
+            sspec,
+            n_compute=job.spec.n_compute,
+            warm_nodes=job.warm_nodes,
+            now=self.engine.now,
+            offer=offer,
+        )
+
+    def _start(self, job: JobRecord, session: StorageSession) -> None:
+        job.session = session
+        job.allocation = session.allocation
         job.alloc_started = self.engine.now
+        job.backend = session.backend
         self._transition(job, JobState.ALLOCATED)
-        if lease is not None:
-            # pool-backed: the file system is already running; the
-            # PROVISIONING slot costs only the lease attach (no C8 deploy)
-            job.lease = lease
-            job.pool_id = lease.pool_id
-            job.dataset_hits += lease.hits
-            job.dataset_misses += lease.misses
-            job.fs_model = self.pools.get(lease.pool_id).fs_model
-            t_prov = self.pools.lease_attach_s
-        elif alloc.storage_nodes:
-            plan = self.provisioner.plan_for(alloc, runtime=job.spec.runtime)
-            job.fs_model = self.provisioner.model_for(plan)
-            # warm only when every granted node already holds this job's
-            # fully-deployed tree from an earlier attempt; a retry placed on
-            # different nodes (or after a provisioning fault) deploys fresh
-            ids = frozenset(n.node_id for n in alloc.storage_nodes)
-            t_prov = predict_deploy_time(
-                plan.targets_per_node,
-                runtime=job.spec.runtime,
-                fresh=not ids <= job.warm_nodes,
-            )
-        else:
-            job.fs_model = None
-            t_prov = 0.0
-        self._enter_phase(job, JobState.PROVISIONING, t_prov)
+        job.lease = session.lease
+        if session.lease is not None:
+            job.pool_id = session.lease.pool_id
+            job.dataset_hits += session.lease.hits
+            job.dataset_misses += session.lease.misses
+        job.fs_model = session.fs_model
+        self._enter_phase(job, JobState.PROVISIONING, session.provision_time_s)
 
     # -- phase machinery -----------------------------------------------------
     def _enter_phase(self, job: JobRecord, state: JobState, duration: float) -> None:
@@ -327,54 +421,32 @@ class Orchestrator:
         if fault_phase is not None and self.faults.trip(job.spec.name, fault_phase):
             self._fail_attempt(job, fault_phase)
             return
+        session = job.session
         if state is JobState.PROVISIONING:
-            if job.lease is None and job.allocation is not None:
+            if session.lease is None and job.allocation is not None:
                 job.warm_nodes = job.warm_nodes | frozenset(
                     n.node_id for n in job.allocation.storage_nodes
                 )
-            self._enter_phase(job, JobState.STAGING_IN, self._stage_time(job, "in"))
+            self._enter_phase(job, JobState.STAGING_IN, session.stage_in_time_s)
         elif state is JobState.STAGING_IN:
-            job.staged_in_bytes += self._stage_in_bytes(job)
-            if job.lease is not None:
-                # saved bytes count only when the stage-in actually completed
-                # (a faulted attempt neither staged nor saved anything)
-                job.stage_in_saved_bytes += job.lease.resident_bytes
-                # missing datasets are now resident: hits for every later job
-                self.pools.on_stage_in_complete(job.lease, self.engine.now)
+            job.staged_in_bytes += session.stage_in_bytes
+            # saved bytes count only when the stage-in actually completed
+            # (a faulted attempt neither staged nor saved anything)
+            job.stage_in_saved_bytes += session.saved_bytes
+            # lease misses are now resident: hits for every later job
+            session.mark_staged(self.engine.now)
             self._enter_phase(job, JobState.RUNNING, job.spec.run_time_s)
         elif state is JobState.RUNNING:
-            self._enter_phase(job, JobState.STAGING_OUT, self._stage_time(job, "out"))
+            self._enter_phase(job, JobState.STAGING_OUT, session.stage_out_time_s)
         elif state is JobState.STAGING_OUT:
-            job.staged_out_bytes += job.spec.stage_out_bytes
-            # pool-backed jobs release a lease, not a file system: teardown
-            # costs nothing (the pool outlives the job)
-            t_down = 0.0 if job.lease is not None else self.teardown_time_s
-            self._enter_phase(job, JobState.TEARDOWN, t_down)
+            job.staged_out_bytes += session.stage_out_bytes
+            # pool-backed / always-on backends release for free (the data
+            # manager outlives the job); only job-scoped deploys pay teardown
+            self._enter_phase(job, JobState.TEARDOWN, session.teardown_time_s)
         elif state is JobState.TEARDOWN:
             self._release(job)
             self._transition(job, JobState.DONE)
             self._dispatch()
-
-    def _stage_in_bytes(self, job: JobRecord) -> float:
-        """Bytes STAGING_IN actually moves: private traffic plus the shared
-        datasets this attempt must fetch (all of them for a job-scoped FS;
-        only the lease's cache misses for a pool-backed one)."""
-        if job.lease is not None:
-            return job.spec.stage_in_bytes + total_bytes(job.lease.missing)
-        return job.spec.stage_in_bytes + job.spec.dataset_bytes
-
-    def _stage_time(self, job: JobRecord, direction: str) -> float:
-        if direction == "in":
-            nbytes = self._stage_in_bytes(job)
-        else:
-            nbytes = job.spec.stage_out_bytes
-        if nbytes <= 0 or job.fs_model is None:
-            return 0.0
-        if direction == "in":       # global FS read feeds ephemeral FS write
-            src, dst = self.globalfs_model, job.fs_model
-        else:                       # drain back to the global store
-            src, dst = job.fs_model, self.globalfs_model
-        return modeled_stage_time(nbytes, src, dst, job.spec.n_streams)
 
     def _fail_attempt(self, job: JobRecord, phase: str) -> None:
         job.failure_phase = phase
@@ -388,21 +460,23 @@ class Orchestrator:
         self._dispatch()
 
     def _release(self, job: JobRecord) -> None:
-        if job.lease is not None:
-            self.pools.release(job.lease, self.engine.now)
-            job.lease = None
-            if self.pools.ttl_s is not None:
-                self.engine.after(self.pools.ttl_s, self._reap_pools)
-        if job.allocation is None:
+        session = job.session
+        if session is None:
             return
-        t0 = job.alloc_started if job.alloc_started is not None else self.engine.now
-        job.storage_intervals.append(
-            (t0, self.engine.now, len(job.allocation.storage_nodes))
-        )
-        self.scheduler.release(job.allocation)
+        if job.allocation is not None:
+            t0 = job.alloc_started if job.alloc_started is not None else self.engine.now
+            job.storage_intervals.append(
+                (t0, self.engine.now, len(job.allocation.storage_nodes))
+            )
+        pooled = session.lease is not None
+        session.release(self.engine.now)
+        job.session = None
+        job.lease = None
         job.allocation = None
         job.alloc_started = None
         job.fs_model = None
+        if pooled and self.pools is not None and self.pools.ttl_s is not None:
+            self.engine.after(self.pools.ttl_s, self._reap_pools)
 
     def _reap_pools(self) -> None:
         """TTL check scheduled after each lease release. Never reaps while
@@ -412,7 +486,7 @@ class Orchestrator:
         if self.pools is None:
             return
         if any(
-            j.spec.use_pool and not j.done and j.lease is None
+            j.spec.wants_pool and not j.done and j.lease is None
             for j in self.jobs
         ):
             return

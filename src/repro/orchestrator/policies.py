@@ -29,7 +29,6 @@ from typing import TYPE_CHECKING, Sequence
 
 if TYPE_CHECKING:  # circular: lifecycle imports policies
     from ..core.scheduler import Scheduler
-    from ..pool.manager import PoolManager
     from .lifecycle import JobRecord
 
 
@@ -88,21 +87,28 @@ class StorageAwarePolicy(QueuePolicy):
 class DataAwarePolicy(QueuePolicy):
     """Route jobs to their data: highest resident-byte fraction first.
 
-    Needs the :class:`~repro.pool.PoolManager` whose catalog knows what is
-    warm where. A job with 100% of its datasets resident skips all shared
-    stage-in; starting it now both finishes it sooner and *keeps* those
-    datasets pinned-warm against eviction, which is the Data Diffusion
-    feedback loop (hits beget hits). Jobs with nothing warm are ordered by
-    storage demand (small first), and aging promotes starved jobs to strict
-    arrival order.
+    Takes anything exposing ``resident_fraction(datasets)`` — a
+    :class:`~repro.provision.ProvisioningService` (the preferred handle;
+    its pool catalog knows what is warm where) or a bare
+    :class:`~repro.pool.PoolManager`. A job with 100% of its datasets
+    resident skips all shared stage-in; starting it now both finishes it
+    sooner and *keeps* those datasets pinned-warm against eviction, which
+    is the Data Diffusion feedback loop (hits beget hits). Jobs with
+    nothing warm are ordered by storage demand (small first), and aging
+    promotes starved jobs to strict arrival order.
     """
 
     name = "data-aware"
     head_blocking = False
 
-    def __init__(self, pools: "PoolManager", aging_s: float = 3600.0):
+    def __init__(self, pools, aging_s: float = 3600.0):
         if aging_s <= 0:
             raise ValueError("aging_s must be positive")
+        if not hasattr(pools, "resident_fraction"):
+            raise TypeError(
+                "DataAwarePolicy needs a ProvisioningService or PoolManager "
+                "(anything with resident_fraction)"
+            )
         self.pools = pools
         self.aging_s = aging_s
 
@@ -112,8 +118,8 @@ class DataAwarePolicy(QueuePolicy):
                 return (0, job.submit_time, 0.0, job.submit_time)
             spec = job.spec
             frac = 0.0
-            if spec.use_pool and spec.datasets:
-                frac = self.pools.resident_fraction(spec.datasets)
+            if spec.wants_pool and spec.all_datasets:
+                frac = self.pools.resident_fraction(spec.all_datasets)
             _, n_storage = scheduler.demand(job.request)
             return (1, -frac, n_storage, job.submit_time)
 

@@ -104,23 +104,36 @@ class PoolManager:
         *,
         nodes: Optional[int] = None,
         capacity_bytes: Optional[float] = None,
+        capability_bw: Optional[float] = None,
         cap_bytes: Optional[float] = None,
         name: Optional[str] = None,
         runtime: str = "shifter",
+        base_dir: Optional[str] = None,
         now: Optional[float] = None,
     ) -> StoragePool:
-        """Provision a persistent pool sized by node count or capacity.
+        """Provision a persistent pool sized by node count, capacity, or
+        aggregate bandwidth.
 
         ``cap_bytes`` optionally caps the ledger below the hardware capacity
         (useful to model a quota, or to create cache pressure in benchmarks).
         Raises :class:`AllocationError` when the nodes aren't free — pools
-        are deliberate, capital allocations, not opportunistic ones.
+        are deliberate, capital allocations, not opportunistic ones — and
+        :class:`FSError` when ``base_dir`` is already owned by another live
+        deployment or pool (two pools must never share a warm tree).
         """
         now = self._now(now)
         pool_id = next(self._pool_ids)
         name = name or f"pool{pool_id}"
-        req = StorageRequest(nodes=nodes, capacity_bytes=capacity_bytes)
-        alloc = self.scheduler.submit(JobRequest(name, 0, storage=req))
+        base_dir = base_dir or f"pool://{name}"
+        self.provisioner.claim_tree(base_dir, owner=f"pool:{name}")
+        req = StorageRequest(
+            nodes=nodes, capacity_bytes=capacity_bytes, capability_bw=capability_bw
+        )
+        try:
+            alloc = self.scheduler.submit(JobRequest(name, 0, storage=req))
+        except AllocationError:
+            self.provisioner.release_tree(base_dir)
+            raise
         plan = self.provisioner.plan_for_nodes(alloc.storage_nodes, runtime=runtime)
         hw_capacity = sum(
             self.scheduler.policy.node_capacity_bytes(n) for n in alloc.storage_nodes
@@ -137,6 +150,7 @@ class PoolManager:
             ),
             created_at=now,
             idle_since=now,        # born idle: TTL applies until the first lease
+            base_dir=base_dir,
         )
         self._pools[pool_id] = pool
         self.catalog.register_pool(pool_id)
@@ -175,6 +189,9 @@ class PoolManager:
     def _teardown(self, pool: StoragePool, now: float) -> None:
         assert pool.n_leases == 0, "teardown with live leases"
         self.scheduler.release(pool.allocation)
+        if pool.base_dir is not None:
+            self.provisioner.release_tree(pool.base_dir)
+            self.provisioner.forget_tree(pool.base_dir)
         self.catalog.drop_pool(pool.pool_id)
         pool.dataset_bytes.clear()
         pool.scratch_bytes = 0.0

@@ -83,6 +83,7 @@ class StoragePool:
     deploy_time_s: float                  # one-time fresh deploy (C8)
     created_at: float
     state: PoolState = PoolState.ACTIVE
+    base_dir: Optional[str] = None        # claimed tree (collision-guarded)
     idle_since: Optional[float] = None    # set while zero leases are live
     retired_at: Optional[float] = None
     leases: dict = dataclasses.field(default_factory=dict)       # id -> Lease

@@ -1,0 +1,434 @@
+"""Unified StorageSession API: spec validation, negotiation, sessions."""
+
+import pytest
+
+from repro.core import AllocationError, FSError, dom_cluster
+from repro.pool import DatasetRef
+from repro.provision import (
+    BackendRegistry,
+    EphemeralFSBackend,
+    LifetimeClass,
+    NegotiationError,
+    ProvisioningService,
+    QoS,
+    SessionError,
+    StorageSpec,
+)
+
+GB = 1e9
+TB = 1e12
+
+
+@pytest.fixture
+def svc():
+    return ProvisioningService(dom_cluster())
+
+
+# -- spec validation ----------------------------------------------------------
+
+def test_spec_exclusive_sizing():
+    with pytest.raises(ValueError, match="at most one"):
+        StorageSpec("s", nodes=1, capacity_bytes=1 * TB)
+    with pytest.raises(ValueError, match="POOLED"):
+        StorageSpec("s", nodes=1, lifetime=LifetimeClass.POOLED)
+    with pytest.raises(ValueError, match="PERSISTENT"):
+        StorageSpec("s", lifetime=LifetimeClass.PERSISTENT)
+    with pytest.raises(ValueError):
+        StorageSpec("")
+    with pytest.raises(ValueError):
+        StorageSpec("s", nodes=1, qos=QoS(min_bandwidth=-1.0))
+
+
+def test_spec_dataset_validation():
+    with pytest.raises(ValueError, match="DatasetRef"):
+        StorageSpec("s", nodes=1, datasets=("d",))
+    d = DatasetRef("d", GB)
+    with pytest.raises(ValueError, match="duplicate"):
+        StorageSpec("s", nodes=1, datasets=(d, d))
+
+
+# -- negotiation --------------------------------------------------------------
+
+def test_negotiate_prefers_first_feasible_manager(svc):
+    offer = svc.negotiate(StorageSpec("j", nodes=2, managers=("ephemeralfs", "globalfs")))
+    assert offer.backend == "ephemeralfs"
+    assert offer.n_storage_nodes == 2
+    assert offer.provision_time_s > 0
+
+
+def test_negotiate_falls_back_in_preference_order(svc):
+    # node-sized specs are impossible on the always-on global FS, so the
+    # ordered fallback is the only feasible candidate
+    offer = svc.negotiate(StorageSpec("j", nodes=1, managers=("globalfs", "ephemeralfs")))
+    assert offer.backend == "ephemeralfs"
+    assert any(r.backend == "globalfs" for r in offer.rejections)
+    reason = next(r for r in offer.rejections if r.backend == "globalfs").reason
+    assert "dedicated" in reason
+
+
+def test_negotiate_no_backend_structured_reasons(svc):
+    # 100 TB exceeds dom's 4 DataWarp nodes AND a bandwidth floor no backend
+    # delivers -> every candidate must explain itself
+    spec = StorageSpec(
+        "hopeless",
+        capacity_bytes=100 * TB,
+        qos=QoS(min_bandwidth=1e15),
+        managers=("ephemeralfs", "globalfs", "kvstore"),
+    )
+    with pytest.raises(NegotiationError) as ei:
+        svc.negotiate(spec)
+    err = ei.value
+    assert err.spec_name == "hopeless"
+    assert {r.backend for r in err.rejections} == {"ephemeralfs", "globalfs", "kvstore"}
+    assert err.reason_for("kvstore") is not None
+    assert "no backend can serve" in str(err)
+
+
+def test_negotiate_qos_bandwidth_infeasible(svc):
+    # 2 nodes deliver 2 x 6.4 GB/s; a 100 GB/s floor cannot be met
+    with pytest.raises(NegotiationError) as ei:
+        svc.negotiate(
+            StorageSpec("q", nodes=2, managers=("ephemeralfs",),
+                        qos=QoS(min_bandwidth=100 * GB))
+        )
+    assert "QoS floor" in ei.value.reason_for("ephemeralfs")
+    # sized by bandwidth instead, the same floor is satisfiable
+    offer = svc.negotiate(
+        StorageSpec("q2", bandwidth=12 * GB, managers=("ephemeralfs",),
+                    qos=QoS(min_bandwidth=12 * GB))
+    )
+    assert offer.n_storage_nodes == 2
+
+
+def test_negotiate_qos_provision_latency(svc):
+    with pytest.raises(NegotiationError) as ei:
+        svc.negotiate(
+            StorageSpec("fast", nodes=1, managers=("ephemeralfs",),
+                        qos=QoS(max_provision_s=1.0))
+        )
+    assert "ceiling" in ei.value.reason_for("ephemeralfs")
+    # the zero-deploy global FS satisfies the same latency ceiling
+    offer = svc.negotiate(
+        StorageSpec("fast2", capacity_bytes=1 * TB,
+                    managers=("ephemeralfs", "globalfs"),
+                    qos=QoS(max_provision_s=1.0))
+    )
+    assert offer.backend == "globalfs"
+
+
+def test_negotiate_kv_access_routes_to_kvstore(svc):
+    offer = svc.negotiate(StorageSpec("kv", nodes=1, access="kv"))
+    assert offer.backend == "kvstore"
+    # posix spec never lands on the KV store
+    with pytest.raises(NegotiationError):
+        svc.negotiate(StorageSpec("p", nodes=1, access="posix", managers=("kvstore",)))
+
+
+def test_negotiate_unknown_manager_rejected(svc):
+    with pytest.raises(NegotiationError) as ei:
+        svc.negotiate(StorageSpec("x", nodes=1, managers=("hdf5-cloud",)))
+    assert "not registered" in ei.value.reason_for("hdf5-cloud")
+
+
+def test_null_backend_needs_explicit_request(svc):
+    # never wins an open negotiation...
+    offer = svc.negotiate(StorageSpec("open", nodes=1))
+    assert offer.backend != "null"
+    # ...but serves anything when named
+    assert svc.negotiate(StorageSpec("dry", nodes=1, managers=("null",))).backend == "null"
+
+
+def test_registry_rejects_duplicates():
+    reg = BackendRegistry([EphemeralFSBackend()])
+    with pytest.raises(ValueError):
+        reg.register(EphemeralFSBackend())
+
+
+# -- sessions: lifecycle + release-on-exception -------------------------------
+
+def test_session_lifecycle_releases_nodes(svc):
+    spec = StorageSpec("job", nodes=2, managers=("ephemeralfs",))
+    with svc.open_session(spec, n_compute=3) as sess:
+        assert svc.scheduler.free_counts() == (5, 2)
+        assert sess.backend == "ephemeralfs"
+        assert len(sess.storage_nodes) == 2
+        assert sess.provision_time_s == pytest.approx(5.37, abs=0.05)
+        assert sess.stage_in_time_s == 0.0       # nothing to stage
+    assert sess.released
+    assert svc.scheduler.free_counts() == (8, 4)
+    sess.release()                               # idempotent
+    assert svc.scheduler.free_counts() == (8, 4)
+
+
+def test_session_exit_releases_on_exception(svc):
+    spec = StorageSpec("boom", nodes=2, managers=("ephemeralfs",))
+    with pytest.raises(RuntimeError, match="mid-session fault"):
+        with svc.open_session(spec, n_compute=1):
+            assert svc.scheduler.free_counts() == (7, 2)
+            raise RuntimeError("mid-session fault")
+    assert svc.scheduler.free_counts() == (8, 4)   # no leaked allocation
+
+
+def test_pooled_session_exit_releases_lease_on_exception(svc):
+    d = DatasetRef("d", 10 * GB)
+    svc.ensure_pools()
+    pool_sess = svc.open_session(
+        StorageSpec("pool", nodes=2, lifetime=LifetimeClass.PERSISTENT)
+    )
+    assert svc.scheduler.free_counts() == (8, 2)
+    with pytest.raises(RuntimeError):
+        with svc.open_session(
+            StorageSpec("leaser", lifetime=LifetimeClass.POOLED, datasets=(d,),
+                        stage_in_bytes=1 * GB)
+        ) as sess:
+            assert sess.lease is not None
+            assert pool_sess.pool.n_leases == 1
+            raise RuntimeError("fault while leased")
+    assert pool_sess.pool.n_leases == 0            # lease drained, pool alive
+    assert svc.scheduler.free_counts() == (8, 2)   # pool still pins its nodes
+    # retire through the session handle -> nodes return to the scheduler
+    assert pool_sess.retire() is True
+    assert svc.scheduler.free_counts() == (8, 4)
+
+
+def test_pooled_spec_without_pools_is_negotiation_error(svc):
+    d = DatasetRef("d", GB)
+    with pytest.raises(NegotiationError) as ei:
+        svc.negotiate(StorageSpec("l", lifetime=LifetimeClass.POOLED, datasets=(d,)))
+    assert "pool" in ei.value.reason_for("ephemeralfs")
+
+
+def test_pooled_cache_hit_halves_stage_plan(svc):
+    d = DatasetRef("shared", 20 * GB)
+    svc.ensure_pools()
+    svc.open_session(StorageSpec("p", nodes=2, lifetime=LifetimeClass.PERSISTENT))
+    s1 = svc.open_session(
+        StorageSpec("first", lifetime=LifetimeClass.POOLED, datasets=(d,))
+    )
+    assert s1.stage_in_bytes == 20 * GB and s1.saved_bytes == 0.0
+    s1.mark_staged()
+    s1.release()
+    s2 = svc.open_session(
+        StorageSpec("second", lifetime=LifetimeClass.POOLED, datasets=(d,))
+    )
+    assert s2.stage_in_bytes == 0.0 and s2.saved_bytes == 20 * GB
+    s2.release()
+
+
+def test_globalfs_session_zero_cost_datasets(svc):
+    d = DatasetRef("already-there", 30 * GB)
+    spec = StorageSpec("g", managers=("globalfs",), datasets=(d,),
+                       stage_in_bytes=2 * GB)
+    with svc.open_session(spec) as sess:
+        assert sess.provision_time_s == 0.0
+        assert sess.stage_in_bytes == 2 * GB       # private traffic only
+        assert sess.saved_bytes == 30 * GB         # datasets never move
+        assert len(sess.storage_nodes) == 0
+    assert svc.scheduler.free_counts() == (8, 4)
+
+
+def test_open_session_busy_raises_try_open_returns_none(svc):
+    spec = StorageSpec("big", nodes=4, managers=("ephemeralfs",))
+    hold = svc.open_session(spec)
+    again = StorageSpec("big2", nodes=1, managers=("ephemeralfs",))
+    assert svc.try_open_session(again) is None
+    with pytest.raises(AllocationError, match="cannot grant now"):
+        svc.open_session(again)
+    hold.release()
+    assert svc.open_session(again).backend == "ephemeralfs"
+
+
+def test_materialized_session_roundtrip(svc, tmp_path):
+    spec = StorageSpec("io", nodes=2, managers=("ephemeralfs",))
+    with svc.open_session(spec, materialize=True, base_dir=str(tmp_path / "efs")) as sess:
+        c = sess.mount("rank0")
+        c.makedirs("/out")
+        c.write_file("/out/a.bin", b"payload")
+        assert c.read_file("/out/a.bin") == b"payload"
+    assert svc.scheduler.free_counts() == (8, 4)
+
+
+def test_materialized_kv_session(svc, tmp_path):
+    spec = StorageSpec("cache", nodes=1, access="kv", managers=("kvstore",))
+    with svc.open_session(spec, materialize=True, base_dir=str(tmp_path / "kv")) as sess:
+        kv = sess.mount()
+        kv.put(b"k", b"v")
+        assert kv.get(b"k") == b"v"
+    assert svc.scheduler.free_counts() == (8, 4)
+
+
+def test_modeled_session_mount_raises(svc):
+    with svc.open_session(StorageSpec("m", nodes=1, managers=("ephemeralfs",))) as sess:
+        with pytest.raises(SessionError, match="materialize"):
+            sess.mount()
+
+
+def test_service_stats_track_backends(svc):
+    svc.open_session(StorageSpec("a", nodes=1, managers=("ephemeralfs",))).release()
+    svc.open_session(StorageSpec("b", managers=("globalfs",))).release()
+    with pytest.raises(NegotiationError):
+        svc.negotiate(StorageSpec("c", nodes=99, managers=("ephemeralfs",)))
+    assert svc.stats.sessions_opened == {"ephemeralfs": 1, "globalfs": 1}
+    assert svc.stats.sessions_released == 2
+    assert svc.stats.failed_negotiations == 1
+    assert svc.stats.negotiations >= 3
+    assert svc.stats.negotiation_wall_s > 0
+
+
+def test_pool_base_dir_collision(svc):
+    pools = svc.ensure_pools()
+    pools.create_pool(nodes=1, name="a", base_dir="/trees/shared")
+    with pytest.raises(FSError, match="already in use"):
+        pools.create_pool(nodes=1, name="b", base_dir="/trees/shared")
+    # the failed create must not leak its scheduler allocation
+    assert svc.scheduler.free_counts() == (8, 3)
+    # retiring the owner frees the tree for reuse
+    pools.retire(pools.pools[0])
+    pools.create_pool(nodes=1, name="c", base_dir="/trees/shared")
+    assert svc.scheduler.free_counts() == (8, 3)
+
+
+# -- regressions from review --------------------------------------------------
+
+def test_materialize_collision_does_not_leak_nodes(svc, tmp_path):
+    base = str(tmp_path / "shared")
+    spec1 = StorageSpec("one", nodes=2, managers=("ephemeralfs",))
+    spec2 = StorageSpec("two", nodes=2, managers=("ephemeralfs",))
+    s1 = svc.open_session(spec1, materialize=True, base_dir=base)
+    with pytest.raises(FSError, match="already in use"):
+        svc.open_session(spec2, materialize=True, base_dir=base)
+    # the failed open released its grant; only s1 still holds nodes
+    assert svc.scheduler.free_counts() == (8, 2)
+    s1.release()
+    assert svc.scheduler.free_counts() == (8, 4)
+
+
+def test_persistent_session_reattaches_by_name(svc):
+    spec = StorageSpec("mkpool", nodes=2, lifetime=LifetimeClass.PERSISTENT)
+    s1 = svc.open_session(spec)
+    s2 = svc.open_session(spec)          # idempotent: same pool, no collision
+    assert s2.pool is s1.pool
+    assert s2.provision_time_s == 0.0    # already provisioned
+    assert svc.scheduler.free_counts() == (8, 2)
+    s1.retire()
+    assert svc.scheduler.free_counts() == (8, 4)
+
+
+def test_retried_persistent_job_survives_campaign():
+    from repro.orchestrator import JobState, Orchestrator, WorkflowSpec
+
+    class OneProvisionFault:
+        """Trips exactly the first provision phase, then stays quiet."""
+
+        def __init__(self):
+            self.tripped = False
+
+        def trip(self, job_name, phase):
+            if phase == "provision" and not self.tripped:
+                self.tripped = True
+                return True
+            return False
+
+    orch = Orchestrator(dom_cluster(), faults=OneProvisionFault())
+    spec = WorkflowSpec(
+        "mk", 1, max_retries=2,
+        storage_spec=StorageSpec("mk", nodes=2, lifetime=LifetimeClass.PERSISTENT),
+    )
+    jobs = orch.run_campaign([spec])     # must not raise FSError
+    assert jobs[0].state is JobState.DONE
+    assert jobs[0].attempt == 1          # one fault, one successful retry
+    assert len(orch.pools.live_pools) == 1   # pool persisted, not duplicated
+
+
+def test_ensure_pools_refuses_to_orphan_live_pools(svc):
+    svc.open_session(StorageSpec("p", nodes=2, lifetime=LifetimeClass.PERSISTENT))
+    with pytest.raises(ValueError, match="live"):
+        svc.ensure_pools(ttl_s=100.0)
+    assert len(svc.pool_manager.live_pools) == 1   # untouched
+
+
+def test_failed_deploy_releases_tree_claim(svc, tmp_path):
+    """A deploy that raises must not leave the base_dir claimed forever."""
+    import pytest as _pytest
+
+    spec = StorageSpec("claim", nodes=2, managers=("ephemeralfs",))
+    target = tmp_path / "efs"
+    target.write_text("a file, not a dir")    # EphemeralFS mkdir will fail
+    with _pytest.raises(Exception):
+        svc.open_session(spec, materialize=True, base_dir=str(target))
+    assert svc.provisioner.tree_owner(str(target)) is None
+    assert svc.scheduler.free_counts() == (8, 4)
+
+
+def test_persistent_reattach_rejects_sizing_mismatch(svc):
+    svc.open_session(StorageSpec("cache", nodes=2, lifetime=LifetimeClass.PERSISTENT))
+    with pytest.raises(AllocationError, match="spans 2 nodes"):
+        svc.open_session(StorageSpec("cache", nodes=1, lifetime=LifetimeClass.PERSISTENT))
+
+
+def test_workflowspec_rejects_mixed_legacy_and_spec_fields():
+    from repro.orchestrator import WorkflowSpec
+
+    with pytest.raises(ValueError, match="storage_spec replaces"):
+        WorkflowSpec(
+            "j", 1,
+            storage_spec=StorageSpec("j", nodes=1, managers=("ephemeralfs",)),
+            stage_in_bytes=8 * GB,
+        )
+
+
+def test_enable_pools_no_args_returns_existing_manager():
+    from repro.orchestrator import Orchestrator
+
+    orch = Orchestrator(dom_cluster())
+    mgr = orch.enable_pools(ttl_s=None)
+    orch.provision.open_session(
+        StorageSpec("p", nodes=2, lifetime=LifetimeClass.PERSISTENT)
+    )
+    assert orch.enable_pools() is mgr      # fetch idiom, not reconfiguration
+
+
+def test_persistent_session_co_allocates_compute(svc):
+    spec = StorageSpec("p", nodes=2, lifetime=LifetimeClass.PERSISTENT)
+    sess = svc.open_session(spec, n_compute=8)
+    assert sess.allocation is not None
+    assert svc.scheduler.free_counts() == (0, 2)   # 8 compute + pool's 2 storage
+    sess.release()                                 # compute back, pool persists
+    assert svc.scheduler.free_counts() == (8, 2)
+    # a busy compute pool is a clean None, not a half-created pool
+    hold = svc.open_session(StorageSpec("h", nodes=1, managers=("ephemeralfs",)),
+                            n_compute=8)
+    assert svc.try_open_session(
+        StorageSpec("p2", nodes=1, lifetime=LifetimeClass.PERSISTENT), n_compute=1
+    ) is None
+    assert len(svc.pool_manager.live_pools) == 1   # no p2 pool created
+    hold.release()
+
+
+def test_pooled_qos_bandwidth_floor_enforced(svc):
+    d = DatasetRef("d", GB)
+    svc.ensure_pools()
+    svc.open_session(StorageSpec("p", nodes=2, lifetime=LifetimeClass.PERSISTENT))
+    with pytest.raises(NegotiationError) as ei:
+        svc.negotiate(
+            StorageSpec("l", lifetime=LifetimeClass.POOLED, datasets=(d,),
+                        qos=QoS(min_bandwidth=1e18))
+        )
+    assert "QoS" in ei.value.reason_for("ephemeralfs")
+    # a satisfiable floor still negotiates onto the pool
+    offer = svc.negotiate(
+        StorageSpec("l2", lifetime=LifetimeClass.POOLED, datasets=(d,),
+                    qos=QoS(min_bandwidth=1 * GB))
+    )
+    assert offer.backend == "ephemeralfs"
+
+
+def test_workflowspec_rejects_mixed_runtime_and_streams():
+    from repro.orchestrator import WorkflowSpec
+
+    with pytest.raises(ValueError, match="storage_spec replaces"):
+        WorkflowSpec("j", 1, runtime="docker",
+                     storage_spec=StorageSpec("j", nodes=1))
+    with pytest.raises(ValueError, match="storage_spec replaces"):
+        WorkflowSpec("j", 1, n_streams=16,
+                     storage_spec=StorageSpec("j", nodes=1))

@@ -53,11 +53,39 @@ def test_warm_redeploy_faster(tmp_path):
     plan = prov.plan_for(alloc, runtime="docker")
     d1 = prov.deploy(plan, str(tmp_path / "x"))
     t_fresh = d1.deploy_time_s
-    # re-deploy over the existing tree (paper §IV-B1: 1.2 s vs 4.6 s)
+    # stop services but keep the tree, then re-deploy over it (paper §IV-B1:
+    # 1.2 s warm vs 4.6 s fresh)
+    d1.release(keep_tree=True)
     d2 = prov.deploy(plan, str(tmp_path / "x"))
     assert d2.deploy_time_s < t_fresh
     d2.teardown()
+
+
+def test_base_dir_collision_raises(tmp_path):
+    """Two live deployments must never share a base_dir (they would silently
+    serve each other's data as a warm tree)."""
+    from repro.core import FSError
+
+    cluster = dom_cluster()
+    prov = Provisioner(cluster)
+    sched = Scheduler(cluster)
+    alloc = sched.submit(JobRequest("t", 1, storage=StorageRequest(nodes=2)))
+    plan = prov.plan_for(alloc, runtime="docker")
+    d1 = prov.deploy(plan, str(tmp_path / "x"))
+    with pytest.raises(FSError, match="already in use"):
+        prov.deploy(plan, str(tmp_path / "x"))
     d1.teardown()
+    # teardown releases ownership: the dir is claimable (and cold) again
+    d3 = prov.deploy(plan, str(tmp_path / "x"))
+    assert d3.deploy_time_s == pytest.approx(t_fresh_docker(plan), abs=0.05)
+    d3.teardown()
+    sched.release(alloc)
+
+
+def t_fresh_docker(plan):
+    from repro.core import predict_deploy_time
+
+    return predict_deploy_time(plan.targets_per_node, runtime="docker", fresh=True)
 
 
 def test_render_service_config(deployment):
