@@ -1,0 +1,435 @@
+"""Campaign-scale benchmark: 50k-job campaigns on a 2,000-node cluster.
+
+The PR 4 tentpole — indexed allocation ledgers in the `Scheduler`,
+incremental (bucketed) dispatch in the `Orchestrator`, and negotiation
+caching in the `ProvisioningService` — exists so that the arbitration
+machinery stays cheap at scale. This bench is the proof: it sweeps
+(jobs x cluster shape x policy) campaigns through the orchestrator and
+holds two floors on the full-size configuration:
+
+* **throughput** — the engine must sustain ``EVENTS_PER_CPU_S_FLOOR``
+  events per CPU-second (CPU time, not wallclock, so a noisy CI neighbor
+  cannot flake the gate; both rates are reported). Rates are best-of-
+  ``repeat`` (the repo's min-timing convention), and the floor is scaled
+  by ``min(1, machine_score / REFERENCE_MACHINE_SCORE)``, where
+  ``machine_score`` is the throughput of a *miniature reference campaign*
+  sampled around every measured run — campaigns are memory-bound, so a
+  synthetic spin loop would not track container memory/cache throttling —
+  and the reference constant is a nominal full-speed machine. A throttled
+  container therefore lowers the gate proportionally; on full-speed
+  hardware the floor is the absolute 50k events/s (there, the speedup
+  floor and the CI CPU budget are the regression backstops);
+* **speedup** — >= ``SPEEDUP_FLOOR`` over the pre-PR engine. The legacy
+  sort-everything dispatcher (``Orchestrator(..., incremental=False)``,
+  kept precisely as the reference implementation) is quadratic in campaign
+  size, so running it at 50k jobs would take tens of minutes; the
+  comparison harness measures it at two smaller sizes on the same cluster,
+  fits the power law ``t = a * n^b``, and extrapolates to the full size
+  (the direct same-size ratio at the largest measured legacy size is also
+  reported and asserted > 1).
+
+Results are written as a JSON trajectory point to
+``benchmarks/out/campaign_scale.json`` and to the repo-root
+``BENCH_campaign.json`` (the perf-trajectory file).
+
+Run the full 50k x 2,000-node sweep:
+
+    PYTHONPATH=src python -m benchmarks.campaign_scale_bench
+
+CI perf-smoke (reduced size, CPU budget asserted):
+
+    PYTHONPATH=src python -m benchmarks.campaign_scale_bench \
+        --jobs 2000 --compute 400 --storage 100 --budget-cpu-s 60
+"""
+
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import math
+import os
+import time
+
+from repro.core import synthetic_cluster
+from repro.orchestrator import (
+    BackfillPolicy,
+    FIFOPolicy,
+    Orchestrator,
+    StorageAwarePolicy,
+    summarize,
+)
+from repro.orchestrator.lifecycle import WorkflowSpec
+from repro.provision import StorageSpec
+
+GB = 1e9
+TB = 1e12
+
+# Full-size configuration: 50,000 jobs on a 2,000-node cluster.
+N_JOBS = 50_000
+N_COMPUTE = 1_600
+N_STORAGE = 400
+
+EVENTS_PER_CPU_S_FLOOR = 50_000     # full-size config only
+SPEEDUP_FLOOR = 10.0                # vs extrapolated pre-PR engine
+# Power-law fit points for the old engine, measured under the *backfill*
+# policy — the representative case for the old dispatcher's quadratic cost
+# (a full-queue probe per admission; 85 CPU-s at just 4k jobs). FIFO is
+# legacy's best case (head-of-line blocking caps each scan at one probe)
+# and is still slower than the indexed engine at equal size.
+COMPARISON_POLICY = "backfill"
+LEGACY_SIZES = (1_000, 2_000)
+
+# Reference-campaign events/cpu-s of a nominal full-speed machine; the
+# floor scales down with min(1, measured/REFERENCE) on throttled containers
+# (shared VMs measure at ~50-75% of this, bare metal at or above it).
+REFERENCE_MACHINE_SCORE = 75_000
+#: attempts per measured config — the gate passes on the first attempt that
+#: crosses its floor (shared containers shift speed between 6-second runs)
+FLOOR_ATTEMPTS = 4
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "out", "campaign_scale.json")
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_campaign.json")
+
+POLICIES = {
+    "fifo": FIFOPolicy,
+    "backfill": BackfillPolicy,
+    "storage-aware": StorageAwarePolicy,
+}
+
+
+def serving_specs(n_jobs: int) -> list[WorkflowSpec]:
+    """The serving-scale shape the ROADMAP points at: many small jobs from
+    a handful of spec shapes (exactly what negotiation caching and
+    admission bucketing exploit — and what a many-users workload looks
+    like: thousands of requests, few request *kinds*)."""
+    specs = []
+    for i in range(n_jobs):
+        name = f"job{i:05d}"
+        kind = i % 6
+        if kind < 3:
+            storage = StorageSpec(
+                name,
+                nodes=1 + (kind & 1),
+                managers=("ephemeralfs",),
+                stage_in_bytes=8 * GB,
+                stage_out_bytes=2 * GB,
+            )
+        elif kind < 5:
+            storage = StorageSpec(
+                name,
+                capacity_bytes=(8 + 8 * (kind - 3)) * TB,
+                managers=("ephemeralfs",),
+                stage_in_bytes=8 * GB,
+            )
+        else:
+            storage = StorageSpec(
+                name, bandwidth=10 * GB, managers=("ephemeralfs",),
+                stage_in_bytes=4 * GB,
+            )
+        specs.append(
+            WorkflowSpec(
+                name,
+                n_compute=1 + (i % 2),
+                storage_spec=storage,
+                run_time_s=20.0 + 10.0 * (i % 5),
+            )
+        )
+    return specs
+
+
+def machine_score(repeat: int = 3) -> float:
+    """Events/cpu-s of a miniature (2k-job) reference campaign, best of
+    ``repeat`` — the machine-speed reference the throughput floor is
+    normalized by. It exercises the exact measured code path, so it tracks
+    memory/cache throttling that a synthetic spin loop would miss."""
+    return max(
+        _run_once(2_000, 400, 100, "fifo", True)["events_per_cpu_s"]
+        for _ in range(max(1, repeat))
+    )
+
+
+def _run_once(
+    n_jobs: int, n_compute: int, n_storage: int, policy_name: str, incremental: bool
+) -> dict:
+    specs = serving_specs(n_jobs)
+    orch = Orchestrator(
+        synthetic_cluster(n_compute, n_storage),
+        policy=POLICIES[policy_name](),
+        incremental=incremental,
+        record_allocations=False,      # measured campaigns: keep memory lean
+    )
+    gc_was_enabled = gc.isenabled()
+    gc.collect()
+    gc.freeze()
+    gc.disable()
+    try:
+        wall0 = time.perf_counter()
+        cpu0 = time.process_time()
+        jobs = orch.run_campaign(specs)
+        cpu_s = time.process_time() - cpu0
+        wall_s = time.perf_counter() - wall0
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+        gc.unfreeze()
+        gc.collect()
+    report = summarize(jobs, n_storage_nodes=n_storage)
+    assert report.n_done == n_jobs, (
+        f"{policy_name}: {report.n_failed} of {n_jobs} jobs failed"
+    )
+    events = orch.engine.events_processed
+    stats = orch.provision.stats
+    return {
+        "policy": policy_name,
+        "engine": "indexed" if incremental else "legacy",
+        "n_jobs": n_jobs,
+        "n_compute": n_compute,
+        "n_storage": n_storage,
+        "wall_s": round(wall_s, 3),
+        "cpu_s": round(cpu_s, 3),
+        "events": events,
+        "events_per_wall_s": round(events / wall_s),
+        "events_per_cpu_s": round(events / cpu_s),
+        "virtual_makespan_s": round(report.makespan_s, 1),
+        "storage_node_utilization": round(report.storage_node_utilization, 4),
+        "negotiations": stats.negotiations,
+        "negotiations_cached": stats.negotiations_cached,
+        "negotiation_wall_s": round(stats.negotiation_wall_s, 4),
+    }
+
+
+def run_config(
+    n_jobs: int,
+    n_compute: int,
+    n_storage: int,
+    policy_name: str,
+    *,
+    incremental: bool = True,
+    repeat: int = 1,
+    events_floor: float | None = None,
+) -> dict:
+    """One measured campaign (best of up to ``repeat`` identical runs —
+    the repo's min-timing convention); returns the JSON-ready result row.
+
+    With ``events_floor`` set, a reference-campaign machine score is
+    sampled before and after every run (each row carries the max of its
+    window — shared containers shift speed between runs, so the floor must
+    be normalized by the machine's speed *while that row was measured*),
+    and attempts stop early at the first row crossing its scaled floor."""
+    with_score = events_floor is not None
+    rows = []
+    score_prev = machine_score(repeat=1) if with_score else None
+    for _ in range(max(1, repeat)):
+        row = _run_once(n_jobs, n_compute, n_storage, policy_name, incremental)
+        if with_score:
+            score_next = machine_score(repeat=1)
+            row["machine_score"] = round(max(score_prev, score_next))
+            row["floor_scale"] = round(
+                min(1.0, row["machine_score"] / REFERENCE_MACHINE_SCORE), 3
+            )
+            score_prev = score_next
+        rows.append(row)
+        if (
+            with_score
+            and row["events_per_cpu_s"] >= events_floor * row["floor_scale"]
+        ):
+            break
+    if with_score:
+        best = max(
+            rows, key=lambda r: r["events_per_cpu_s"] / max(r["floor_scale"], 1e-9)
+        )
+    else:
+        best = min(rows, key=lambda r: r["cpu_s"])
+    best["repeats"] = len(rows)
+    return best
+
+
+def legacy_comparison(
+    n_jobs_full: int,
+    n_compute: int,
+    n_storage: int,
+    policy_name: str,
+    full_row: dict,
+    legacy_sizes: tuple = LEGACY_SIZES,
+) -> dict:
+    """Measure the pre-PR engine at ``legacy_sizes``, fit ``t = a * n^b``,
+    extrapolate its cost at the full size, and compare."""
+    rows = [
+        run_config(n, n_compute, n_storage, policy_name, incremental=False)
+        for n in legacy_sizes
+    ]
+    (n1, t1), (n2, t2) = [(r["n_jobs"], max(r["cpu_s"], 1e-6)) for r in rows]
+    b = math.log(t2 / t1) / math.log(n2 / n1) if n2 != n1 else 1.0
+    legacy_full_cpu_s = t2 * (n_jobs_full / n2) ** b
+    new_same_size = run_config(n2, n_compute, n_storage, policy_name)
+    return {
+        "policy": policy_name,
+        "legacy_points": rows,
+        "fitted_exponent": round(b, 3),
+        "legacy_cpu_s_extrapolated_full": round(legacy_full_cpu_s, 1),
+        "indexed_cpu_s_full": full_row["cpu_s"],
+        "speedup_extrapolated": round(legacy_full_cpu_s / full_row["cpu_s"], 1),
+        "same_size_n_jobs": n2,
+        "same_size_ratio": round(t2 / max(new_same_size["cpu_s"], 1e-6), 2),
+    }
+
+
+def write_trajectory(payload: dict) -> None:
+    """Every run refreshes the (gitignored) benchmarks/out/ copy; only a
+    full-size sweep may overwrite the *committed* repo-root trajectory
+    point — otherwise a CI smoke or reduced rows() run would silently
+    replace the 50k-job record with a 2k-job payload."""
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    cfg = payload["config"]
+    full_size = (
+        cfg["n_jobs"] >= N_JOBS
+        and cfg["n_compute"] >= N_COMPUTE
+        and cfg["n_storage"] >= N_STORAGE
+    )
+    paths = (OUT_PATH, BENCH_PATH) if full_size else (OUT_PATH,)
+    for path in paths:
+        with open(path, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+
+
+def run_sweep(
+    n_jobs: int,
+    n_compute: int,
+    n_storage: int,
+    *,
+    policies: tuple = tuple(POLICIES),
+    legacy_sizes: tuple = LEGACY_SIZES,
+    events_floor: float | None = None,
+    speedup_floor: float | None = None,
+    budget_cpu_s: float | None = None,
+) -> dict:
+    with_floors = events_floor is not None
+    results = [
+        run_config(
+            n_jobs, n_compute, n_storage, p,
+            repeat=FLOOR_ATTEMPTS if with_floors else 1,
+            events_floor=events_floor,
+        )
+        for p in policies
+    ]
+    comparison = None
+    if legacy_sizes:
+        sizes = tuple(min(s, n_jobs) for s in legacy_sizes)
+        cmp_policy = (
+            COMPARISON_POLICY if COMPARISON_POLICY in policies else policies[0]
+        )
+        full_row = results[list(policies).index(cmp_policy)]
+        comparison = legacy_comparison(
+            n_jobs, n_compute, n_storage, cmp_policy, full_row, sizes
+        )
+        assert comparison["same_size_ratio"] > 1.0, (
+            "indexed engine is not faster than the legacy engine at "
+            f"{comparison['same_size_n_jobs']} jobs: {comparison}"
+        )
+        if speedup_floor is not None:
+            assert comparison["speedup_extrapolated"] >= speedup_floor, (
+                f"speedup {comparison['speedup_extrapolated']}x below the "
+                f"{speedup_floor}x floor over the pre-PR engine"
+            )
+    for row in results:
+        if events_floor is not None:
+            scaled_floor = events_floor * row["floor_scale"]
+            assert row["events_per_cpu_s"] >= scaled_floor, (
+                f"{row['policy']}: {row['events_per_cpu_s']} events/cpu-s "
+                f"below the floor ({events_floor} x machine scale "
+                f"{row['floor_scale']:.2f} = {scaled_floor:.0f})"
+            )
+        if budget_cpu_s is not None:
+            assert row["cpu_s"] <= budget_cpu_s, (
+                f"{row['policy']}: campaign took {row['cpu_s']} CPU-s, "
+                f"budget {budget_cpu_s}"
+            )
+    payload = {
+        "bench": "campaign_scale",
+        "config": {
+            "n_jobs": n_jobs,
+            "n_compute": n_compute,
+            "n_storage": n_storage,
+            "events_per_cpu_s_floor": events_floor,
+            "reference_machine_score": REFERENCE_MACHINE_SCORE,
+            "speedup_floor": speedup_floor,
+        },
+        "results": results,
+        "legacy_comparison": comparison,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+    }
+    write_trajectory(payload)
+    return payload
+
+
+def rows():
+    """Registered entry point for ``benchmarks.run`` — a reduced-size sweep
+    (the full 50k config is the module's __main__)."""
+    payload = run_sweep(
+        4_000,
+        400,
+        100,
+        legacy_sizes=(300, 600),
+        events_floor=20_000,
+    )
+    out = []
+    for r in payload["results"]:
+        out.append(
+            (
+                f"campaign_scale/{r['policy']}-{r['n_jobs']}jobs",
+                r["wall_s"] * 1e6,
+                f"ev/cpu-s={r['events_per_cpu_s']} "
+                f"makespan={r['virtual_makespan_s']:.0f}s "
+                f"negot-cached={r['negotiations_cached']}/{r['negotiations']}",
+            )
+        )
+    cmp_row = payload["legacy_comparison"]
+    out.append(
+        (
+            "campaign_scale/speedup-vs-legacy",
+            0.0,
+            f"extrapolated={cmp_row['speedup_extrapolated']}x "
+            f"same-size@{cmp_row['same_size_n_jobs']}={cmp_row['same_size_ratio']}x "
+            f"exponent={cmp_row['fitted_exponent']}",
+        )
+    )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--jobs", type=int, default=N_JOBS)
+    ap.add_argument("--compute", type=int, default=N_COMPUTE)
+    ap.add_argument("--storage", type=int, default=N_STORAGE)
+    ap.add_argument(
+        "--legacy-jobs", type=int, nargs="*", default=list(LEGACY_SIZES),
+        help="sizes to measure the pre-PR engine at (empty disables)",
+    )
+    ap.add_argument(
+        "--budget-cpu-s", type=float, default=None,
+        help="assert each campaign stays under this CPU-second budget",
+    )
+    ap.add_argument(
+        "--no-floors", action="store_true",
+        help="skip the events/sec and speedup floor assertions",
+    )
+    args = ap.parse_args()
+    full_size = args.jobs >= N_JOBS and not args.no_floors
+    payload = run_sweep(
+        args.jobs,
+        args.compute,
+        args.storage,
+        legacy_sizes=tuple(args.legacy_jobs),
+        events_floor=EVENTS_PER_CPU_S_FLOOR if full_size else None,
+        speedup_floor=(
+            SPEEDUP_FLOOR if full_size and args.legacy_jobs else None
+        ),
+        budget_cpu_s=args.budget_cpu_s,
+    )
+    print(json.dumps(payload, indent=2, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

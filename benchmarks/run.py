@@ -13,6 +13,7 @@ import traceback
 def main() -> None:
     from . import (
         ault,
+        campaign_scale_bench,
         checkpoint_io,
         deployment,
         haccio,
@@ -39,6 +40,7 @@ def main() -> None:
         ("orchestrator", orchestrator_bench),  # beyond-paper campaign pipeline
         ("pool", pool_bench),              # beyond-paper persistent pools
         ("provision", provision_bench),    # StorageSession API negotiation
+        ("campaign_scale", campaign_scale_bench),  # 50k-job engine scaling
         ("kernels", kernels_bench),
         ("roofline", roofline),            # §Roofline (reads dry-run artifacts)
     ]

@@ -32,6 +32,7 @@ from .resources import (
     StorageNode,
     ault_cluster,
     dom_cluster,
+    synthetic_cluster,
     tpu_pod_cluster,
 )
 from .scheduler import (
@@ -54,7 +55,8 @@ __all__ = [
     "predict", "predict_deploy_time", "predict_mdtest", "predict_read", "predict_write",
     "Deployment", "DeploymentPlan", "Provisioner",
     "ClusterSpec", "ComputeNode", "Disk", "DiskSpec", "InterconnectSpec",
-    "StorageNode", "ault_cluster", "dom_cluster", "tpu_pod_cluster",
+    "StorageNode", "ault_cluster", "dom_cluster", "synthetic_cluster",
+    "tpu_pod_cluster",
     "Allocation", "AllocationError", "JobRequest", "Scheduler", "SizingPolicy",
     "StorageRequest", "size_for_checkpoint",
     "StageReport", "modeled_stage_time", "stage", "stage_tree",

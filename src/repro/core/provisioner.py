@@ -119,6 +119,9 @@ class Provisioner:
         # pool. Two live sessions must never share a tree (they would
         # silently serve each other's data as a "warm" cache).
         self._live_dirs: dict[str, str] = {}
+        # analytic models are pure functions of a plan's shape; campaigns
+        # re-plan the same shapes thousands of times, so canonicalize
+        self._model_cache: dict[tuple, FSDeployment] = {}
 
     # -- base_dir ownership ---------------------------------------------------
     def claim_tree(self, base_dir: str, owner: str = "deployment") -> None:
@@ -208,10 +211,22 @@ class Provisioner:
         """The analytic (perfmodel) view of a plan -- no disk I/O.
 
         Used by the workflow orchestrator's event-driven engine, which runs
-        whole provisioning campaigns against modeled time only.
+        whole provisioning campaigns against modeled time only. Models are
+        canonicalized (one shared frozen instance per plan shape), so
+        same-shape deployments across a campaign hit one cache entry.
         """
         node0 = plan.storage_nodes[0]
-        return FSDeployment(
+        key = (
+            len(plan.storage_nodes),
+            plan.n_storage_targets,
+            plan.md_disks_per_node,
+            node0.disks[plan.md_disks_per_node].spec,
+            node0.dram_bytes,
+        )
+        cached = self._model_cache.get(key)
+        if cached is not None:
+            return cached
+        self._model_cache[key] = model = FSDeployment(
             kind="ephemeral",
             n_nodes=len(plan.storage_nodes),
             storage_targets=plan.n_storage_targets,
@@ -221,6 +236,7 @@ class Provisioner:
             net=self.cluster.interconnect,
             local_client=self.cluster.name == "ault",
         )
+        return model
 
     def deploy(self, plan: DeploymentPlan, base_dir: Optional[str] = None) -> Deployment:
         base_dir = base_dir or tempfile.mkdtemp(prefix="efs-")

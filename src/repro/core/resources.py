@@ -161,6 +161,33 @@ def tpu_pod_cluster(n_hosts: int = 64, n_storage: int = 16) -> ClusterSpec:
     )
 
 
+def synthetic_cluster(
+    n_compute: int,
+    n_storage: int,
+    *,
+    disks_per_node: int = 3,
+    disk: DiskSpec = NVME_GEN4,
+    name: str = "synthetic",
+) -> ClusterSpec:
+    """A parametric homogeneous inventory for scale benchmarks — e.g. the
+    2,000-node cluster the 50k-job campaign bench sweeps. Node ids are
+    zero-padded to five digits so lexicographic order (what the allocator
+    grants by) equals numeric order at any size."""
+    if n_compute <= 0 or n_storage <= 0:
+        raise ValueError("synthetic_cluster needs positive node counts")
+    storage = []
+    for i in range(n_storage):
+        nid = f"sn{i:05d}"
+        disks = tuple(Disk(nid, d, disk) for d in range(disks_per_node))
+        storage.append(StorageNode(nid, disks, dram_bytes=64 * GiB))
+    return ClusterSpec(
+        name=name,
+        compute_nodes=tuple(ComputeNode(f"cn{i:05d}") for i in range(n_compute)),
+        storage_nodes=tuple(storage),
+        interconnect=DCN_100G,
+    )
+
+
 def aggregate_write_bw(nodes: Sequence[StorageNode], storage_disks_per_node: int) -> float:
     """Raw aggregate write bandwidth of the *storage-role* disks (paper's
     12.8 GB/s = 4 disks x 3.2 on two DataWarp nodes)."""

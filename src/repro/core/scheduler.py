@@ -15,6 +15,7 @@ disks per node take the storage role).
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import itertools
 import math
 from typing import Optional
@@ -26,7 +27,7 @@ class AllocationError(RuntimeError):
     pass
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class StorageRequest:
     """Exactly one of ``nodes`` / ``capacity_bytes`` / ``capability_bw`` must
     be set (the paper's §V: users target either quantity of bytes or speed)."""
@@ -47,7 +48,7 @@ class StorageRequest:
             raise ValueError(f"capability_bw must be positive, got {self.capability_bw}")
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class JobRequest:
     job_name: str
     n_compute: int
@@ -59,7 +60,7 @@ class JobRequest:
             raise ValueError(f"n_compute must be >= 0, got {self.n_compute}")
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class Allocation:
     job_id: int
     job_name: str
@@ -102,6 +103,17 @@ class Scheduler:
       * ``release`` returns every node of the allocation to the free pool;
       * storage nodes are only granted to requests carrying the storage
         constraint (the paper's access-control mechanism).
+
+    The free pools are *indexed*: a min-heap of node ids carries exactly one
+    entry per free node (grants pop, releases push), so handing out the
+    lowest-id nodes is O(log M) per node and bit-for-bit the order of the
+    old full-sort path. Two lazy-deletion heaps keyed by each node's static
+    capacity / bandwidth contribution answer the weakest-free-node question
+    that capacity- and bandwidth-sized requests resolve against, making
+    ``resolve_storage_nodes`` / ``demand`` / ``can_allocate`` O(1) amortized
+    instead of O(M) scans per admission. ``epoch`` counts grant/release
+    batches; anything cached off the free pool upstream (queue-policy keys,
+    negotiated offers) invalidates against it.
     """
 
     def __init__(self, cluster: ClusterSpec, policy: SizingPolicy | None = None):
@@ -111,6 +123,70 @@ class Scheduler:
         self._free_storage = {n.node_id: n for n in cluster.storage_nodes}
         self._live: dict[int, Allocation] = {}
         self._next_id = itertools.count(1)
+        #: bumped on every grant/release batch (cache-invalidation signal)
+        self.epoch = 0
+        # -- indexed ledger ---------------------------------------------------
+        # a sorted list is a valid min-heap; one entry per free node
+        self._compute_ids = sorted(self._free_compute)
+        self._storage_ids = sorted(self._free_storage)
+        # per-node contributions are static under the (frozen) sizing policy
+        self._node_cap = {
+            n.node_id: self.policy.node_capacity_bytes(n)
+            for n in cluster.storage_nodes
+        }
+        self._node_bw = {
+            n.node_id: self.policy.node_capability_bw(n)
+            for n in cluster.storage_nodes
+        }
+        self._free_cap_heap = [(c, nid) for nid, c in self._node_cap.items()]
+        self._free_bw_heap = [(b, nid) for nid, b in self._node_bw.items()]
+        heapq.heapify(self._free_cap_heap)
+        heapq.heapify(self._free_bw_heap)
+        # weakest node over the whole inventory (the assume_empty candidates)
+        if cluster.storage_nodes:
+            self._empty_weakest_cap = min(
+                cluster.storage_nodes, key=self.policy.node_capacity_bytes
+            )
+            self._empty_weakest_bw = min(
+                cluster.storage_nodes, key=self.policy.node_capability_bw
+            )
+            self._empty_cap_min = min(self._node_cap.values())
+            self._empty_bw_min = min(self._node_bw.values())
+        # sizing with the stock SizingPolicy arithmetic is pure
+        # ceil(request / weakest-contribution): resolve it from the cached
+        # per-node values instead of re-summing disk specs per call.
+        # Subclasses overriding the nodes_for_* hooks keep the node-object
+        # path.
+        self._stock_sizing = (
+            type(self.policy).nodes_for_capacity is SizingPolicy.nodes_for_capacity
+            and type(self.policy).nodes_for_capability is SizingPolicy.nodes_for_capability
+        )
+
+    def _weakest_free(self, heap: list) -> StorageNode:
+        """Lazy-deletion min: drop stale heads (granted nodes, or duplicate
+        entries left by earlier release/grant cycles of a now-busy node)."""
+        free = self._free_storage
+        while heap and heap[0][1] not in free:
+            heapq.heappop(heap)
+        assert heap, "weakest-free query on an empty free pool"
+        return free[heap[0][1]]
+
+    def _free_min(self, heap: list) -> float:
+        """Weakest free node's cached contribution (value, not node)."""
+        free = self._free_storage
+        while heap and heap[0][1] not in free:
+            heapq.heappop(heap)
+        return heap[0][0]
+
+    def free_min_capacity(self) -> Optional[float]:
+        """Weakest free node's capacity contribution (None: free pool empty).
+        With the whole-inventory min, this is the full sizing state: two
+        capacity/bandwidth requests resolve identically whenever these are
+        unchanged — what dispatchers key refusal caches on."""
+        return self._free_min(self._free_cap_heap) if self._free_storage else None
+
+    def free_min_bandwidth(self) -> Optional[float]:
+        return self._free_min(self._free_bw_heap) if self._free_storage else None
 
     # -- introspection -------------------------------------------------------
     @property
@@ -142,15 +218,34 @@ class Scheduler:
             raise AllocationError("cluster has no storage nodes")
         if req.nodes is not None:
             return req.nodes
-        if assume_empty or not self._free_storage:
-            candidates = self.cluster.storage_nodes
-        else:
-            candidates = tuple(self._free_storage.values())
+        whole_inventory = assume_empty or not self._free_storage
         if req.capacity_bytes is not None:
-            weakest = min(candidates, key=self.policy.node_capacity_bytes)
+            if self._stock_sizing:
+                cap = (
+                    self._empty_cap_min
+                    if whole_inventory
+                    else self._free_min(self._free_cap_heap)
+                )
+                return max(1, math.ceil(req.capacity_bytes / cap))
+            weakest = (
+                self._empty_weakest_cap
+                if whole_inventory
+                else self._weakest_free(self._free_cap_heap)
+            )
             return self.policy.nodes_for_capacity(weakest, req.capacity_bytes)
         assert req.capability_bw is not None
-        weakest = min(candidates, key=self.policy.node_capability_bw)
+        if self._stock_sizing:
+            bw = (
+                self._empty_bw_min
+                if whole_inventory
+                else self._free_min(self._free_bw_heap)
+            )
+            return max(1, math.ceil(req.capability_bw / bw))
+        weakest = (
+            self._empty_weakest_bw
+            if whole_inventory
+            else self._weakest_free(self._free_bw_heap)
+        )
         return self.policy.nodes_for_capability(weakest, req.capability_bw)
 
     # -- feasibility (orchestrator queueing path) ----------------------------
@@ -191,17 +286,40 @@ class Scheduler:
         an empty cluster but not the current free pool) so callers can queue
         and retry; still raises :class:`AllocationError` for requests that
         can never be satisfied.
+
+        Sizing is resolved exactly once per outcome: one empty-cluster
+        resolution for the feasibility gate and one free-pool resolution that
+        both the fit check and the grant reuse (the old path re-resolved in
+        ``feasible``, ``can_allocate``, *and* ``submit``).
         """
-        if not self.feasible(req):
+        storage = req.storage
+        n_compute = req.n_compute
+        if storage is None:
+            n_storage_empty = n_storage = 0
+        else:
+            if req.constraint != "storage":
+                raise AllocationError(
+                    f"{req.job_name}: storage request without storage constraint"
+                )
+            if storage.nodes is not None:
+                n_storage_empty = n_storage = storage.nodes
+            else:
+                n_storage_empty = self.resolve_storage_nodes(storage, assume_empty=True)
+                n_storage = -1          # resolved against the free pool below
+        if n_compute > len(self.cluster.compute_nodes) or n_storage_empty > len(
+            self.cluster.storage_nodes
+        ):
             n_compute, n_storage = self.demand(req)
             raise AllocationError(
                 f"{req.job_name}: wants {n_compute} compute / {n_storage} storage "
                 "nodes but the cluster only has "
                 f"{len(self.cluster.compute_nodes)} / {len(self.cluster.storage_nodes)}"
             )
-        if not self.can_allocate(req):
+        if n_storage < 0:
+            n_storage = self.resolve_storage_nodes(storage)
+        if n_compute > len(self._free_compute) or n_storage > len(self._free_storage):
             return None
-        return self.submit(req)
+        return self._grant(req, n_storage)
 
     # -- allocation ----------------------------------------------------------
     def submit(self, req: JobRequest) -> Allocation:
@@ -222,11 +340,23 @@ class Scheduler:
                     f"{req.job_name}: wants {n_storage} storage nodes, "
                     f"{len(self._free_storage)} free"
                 )
+        return self._grant(req, n_storage)
 
-        compute = [self._free_compute.pop(k) for k in sorted(self._free_compute)[: req.n_compute]]
-        storage = [self._free_storage.pop(k) for k in sorted(self._free_storage)[:n_storage]]
+    def _grant(self, req: JobRequest, n_storage: int) -> Allocation:
+        """Pop the lowest-id free nodes — the indexed equivalent of the old
+        ``sorted(free)[:k]`` scan — and register the allocation."""
+        pop = heapq.heappop
+        compute = [
+            self._free_compute.pop(pop(self._compute_ids))
+            for _ in range(req.n_compute)
+        ]
+        storage = [
+            self._free_storage.pop(pop(self._storage_ids))
+            for _ in range(n_storage)
+        ]
         alloc = Allocation(next(self._next_id), req.job_name, tuple(compute), tuple(storage))
         self._live[alloc.job_id] = alloc
+        self.epoch += 1
         return alloc
 
     def release(self, alloc: Allocation) -> None:
@@ -235,8 +365,14 @@ class Scheduler:
         del self._live[alloc.job_id]
         for n in alloc.compute_nodes:
             self._free_compute[n.node_id] = n
+            heapq.heappush(self._compute_ids, n.node_id)
         for n in alloc.storage_nodes:
-            self._free_storage[n.node_id] = n
+            nid = n.node_id
+            self._free_storage[nid] = n
+            heapq.heappush(self._storage_ids, nid)
+            heapq.heappush(self._free_cap_heap, (self._node_cap[nid], nid))
+            heapq.heappush(self._free_bw_heap, (self._node_bw[nid], nid))
+        self.epoch += 1
 
 
 def size_for_checkpoint(

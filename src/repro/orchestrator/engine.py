@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
-from typing import Callable, Optional
+from typing import Callable, Iterable, Optional
 
 
 class SimEngine:
@@ -48,24 +48,51 @@ class SimEngine:
             raise ValueError(f"negative delay {delay}")
         self.at(self._now + delay, fn)
 
-    def run(self, until: Optional[float] = None, max_events: int = 1_000_000) -> float:
+    def at_many(self, events: Iterable[tuple[float, Callable[[], None]]]) -> None:
+        """Bulk-schedule ``(time, fn)`` pairs: one heapify instead of a push
+        per event, for campaign submission bursts. Sequence numbers are
+        assigned in iteration order, so simultaneous events still fire FIFO
+        exactly as the equivalent sequence of :meth:`at` calls would (the
+        pop order of a heap is determined by its entries alone)."""
+        batch = []
+        for t, fn in events:
+            if t < self._now:
+                raise ValueError(f"cannot schedule at {t} < now {self._now}")
+            batch.append((t, next(self._seq), fn))
+        if not batch:
+            return
+        if len(batch) > 8 and len(batch) * 4 > len(self._heap):
+            self._heap.extend(batch)
+            heapq.heapify(self._heap)
+        else:
+            for entry in batch:
+                heapq.heappush(self._heap, entry)
+
+    def run(
+        self,
+        until: Optional[float] = None,
+        max_events: Optional[int] = 1_000_000,
+    ) -> float:
         """Drain the event heap; returns the final virtual time.
 
         ``until`` stops the clock at that time, leaving later events queued.
-        ``max_events`` guards against a pathological self-rescheduling loop.
+        ``max_events`` guards against a pathological self-rescheduling loop;
+        pass ``None`` to disable the backstop (large campaigns legitimately
+        process many millions of events).
         """
         processed = 0
-        while self._heap:
-            t, _, fn = self._heap[0]
-            if until is not None and t > until:
+        heap = self._heap
+        pop = heapq.heappop
+        while heap:
+            if until is not None and heap[0][0] > until:
                 self._now = until
                 return self._now
-            heapq.heappop(self._heap)
+            t, _, fn = pop(heap)
             self._now = t
             fn()
             processed += 1
             self._events_processed += 1
-            if processed >= max_events:
+            if max_events is not None and processed >= max_events:
                 raise RuntimeError(
                     f"engine processed {max_events} events without draining; "
                     f"likely an event loop (now={self._now})"

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import heapq
 import itertools
 from typing import Optional
 
@@ -50,6 +51,7 @@ from ..provision import (
     StorageSpec,
 )
 from ..runtime.fault import FaultInjector
+from .dispatch import DispatchQueue
 from .engine import SimEngine
 from .policies import FIFOPolicy, QueuePolicy
 
@@ -68,13 +70,8 @@ class JobState(enum.Enum):
 
 TERMINAL_STATES = frozenset({JobState.DONE, JobState.FAILED})
 
-# Lifecycle phase -> the FaultInjector phase name consulted at its end.
-_FAULT_PHASE = {
-    JobState.PROVISIONING: "provision",
-    JobState.STAGING_IN: "stage_in",
-    JobState.RUNNING: "run",
-    JobState.STAGING_OUT: "stage_out",
-}
+# The FaultInjector phase names, consulted at the end of PROVISIONING /
+# STAGING_IN / RUNNING / STAGING_OUT (see the per-phase _*_done handlers).
 
 
 @dataclasses.dataclass(frozen=True)
@@ -198,7 +195,7 @@ class WorkflowSpec:
         return self.stage_in_bytes + self.stage_out_bytes
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class JobRecord:
     """Mutable per-job bookkeeping the orchestrator and metrics share."""
 
@@ -231,15 +228,27 @@ class JobRecord:
     dataset_hits: int = 0
     dataset_misses: int = 0
     stage_in_saved_bytes: float = 0.0
+    #: mirrors ``spec.wants_pool`` (checked on every transition; precomputed)
+    wants_pool: bool = False
+    #: granted (compute ids, storage ids, pool id) per attempt — the
+    #: determinism regressions compare these across dispatch paths
+    alloc_history: list = dataclasses.field(default_factory=list)
+    _request: Optional[JobRequest] = None
+    _gating: Optional[tuple] = None              # dispatch pre-filter cache
 
     @property
     def request(self) -> JobRequest:
         """Scheduler-level view of the job's demand (policies rank by it).
-        Pool-backed jobs draw storage from a lease, not the allocator."""
-        storage = None
-        if self.sspec is not None and self.sspec.lifetime is not LifetimeClass.POOLED:
-            storage = self.sspec.to_request()
-        return JobRequest(self.spec.name, self.spec.n_compute, storage=storage)
+        Pool-backed jobs draw storage from a lease, not the allocator.
+        Cached: ``sspec`` is resolved once at submit and never changes."""
+        if self._request is None:
+            storage = None
+            if self.sspec is not None and self.sspec.lifetime is not LifetimeClass.POOLED:
+                storage = self.sspec.to_request()
+            self._request = JobRequest(
+                self.spec.name, self.spec.n_compute, storage=storage
+            )
+        return self._request
 
     @property
     def done(self) -> bool:
@@ -261,6 +270,8 @@ class Orchestrator:
         globalfs_model: FSDeployment | None = None,
         teardown_time_s: float | None = None,
         provision: ProvisioningService | None = None,
+        incremental: Optional[bool] = None,
+        record_allocations: bool = True,
     ):
         self.engine = engine or SimEngine()
         if provision is None:
@@ -282,11 +293,89 @@ class Orchestrator:
         self.globalfs_model = self.provision.globalfs_model
         self.scheduler = self.provision.scheduler
         self.provisioner = self.provision.provisioner
-        self.policy = policy or FIFOPolicy()
         self.faults = faults or FaultInjector()
-        self.queue: list[JobRecord] = []
+        # Incremental (indexed) dispatch is the default for every policy
+        # honoring the sort_key contract; custom policies fall back to the
+        # legacy sort-everything loop. ``incremental=False`` forces the
+        # legacy path (the determinism regressions replay both).
+        # per-attempt granted node ids on JobRecord.alloc_history —
+        # determinism evidence; disable for campaigns of very wide jobs
+        # where retaining every node id would dominate memory
+        self._record_allocations = record_allocations
+        self._incremental_requested = incremental
+        self._dq: Optional[DispatchQueue] = None
+        self._queue: list[JobRecord] = []      # legacy-path wait queue
+        self.policy = policy or FIFOPolicy()   # setter builds the index
         self.jobs: list[JobRecord] = []
         self._ids = itertools.count(1)
+        # pool-reap bookkeeping: #pool-wanting jobs not yet terminal and not
+        # holding a lease (maintained on every transition — replaces the old
+        # O(jobs) scan per reap event) + pending-reap coalescing by fire time
+        self._pool_wait_n = 0
+        self._reap_times: set[float] = set()
+        # last full-scan "nothing fits" conclusion: (admission state it was
+        # drawn under, and — for head-blocking policies — the blocking
+        # head's key). Lets arrival dispatches short-circuit in O(1).
+        self._noadmit_state: Optional[tuple] = None
+        self._noadmit_head_key: Optional[tuple] = None
+
+    @property
+    def faults(self) -> FaultInjector:
+        return self._faults
+
+    @faults.setter
+    def faults(self, faults: FaultInjector) -> None:
+        """To change fault behavior mid-setup, assign a new injector here
+        (mutating an installed injector's ``spec`` is not supported). Only
+        the *stock* fault-free injector is bypassed on the hot path —
+        subclasses overriding :meth:`FaultInjector.trip` always get
+        consulted, whatever their spec says."""
+        self._faults = faults
+        self._faults_passive = (
+            type(faults) is FaultInjector and not faults.any_faults
+        )
+
+    @property
+    def policy(self) -> QueuePolicy:
+        return self._policy
+
+    @policy.setter
+    def policy(self, policy: QueuePolicy) -> None:
+        """Swapping the policy re-indexes any waiting jobs (their policy
+        keys, buckets, and aging class all belong to the old policy)."""
+        use = self._incremental_requested
+        if use is None:
+            use = getattr(policy, "incremental", False)
+        elif use and not getattr(policy, "incremental", False):
+            raise ValueError(
+                f"policy {policy.name!r} does not implement the "
+                "incremental dispatch contract (QueuePolicy.sort_key)"
+            )
+        queued = self.queue
+        self._policy = policy
+        self._noadmit_state = None     # conclusions belong to the old policy
+        self._noadmit_head_key = None
+        if use:
+            self._dq = DispatchQueue(policy, self.scheduler)
+            for job in queued:
+                self._dq.add(job, self.engine.now)
+            self._queue = []
+        else:
+            self._dq = None
+            self._queue = list(queued)
+
+    @property
+    def queue(self) -> list[JobRecord]:
+        """Waiting jobs in arrival order (a snapshot under indexed dispatch)."""
+        if self._dq is not None:
+            return self._dq.jobs()
+        return self._queue
+
+    def _enqueue(self, job: JobRecord) -> None:
+        if self._dq is not None:
+            self._dq.add(job, self.engine.now)
+        else:
+            self._queue.append(job)
 
     # -- pools ----------------------------------------------------------------
     @property
@@ -305,13 +394,14 @@ class Orchestrator:
         return self.provision.ensure_pools(**kwargs)
 
     # -- submission ----------------------------------------------------------
-    def submit(self, spec: WorkflowSpec, at: Optional[float] = None) -> JobRecord:
-        """Enqueue a job at virtual time ``at`` (default: now)."""
+    def _check_spec(self, spec: WorkflowSpec) -> None:
         if spec.wants_pool and self.provision.pool_manager is None:
             raise ValueError(
                 f"{spec.name!r}: pooled storage requires enable_pools() (or a "
                 "PERSISTENT session) first"
             )
+
+    def _make_job(self, spec: WorkflowSpec, at: Optional[float]) -> JobRecord:
         t = self.engine.now if at is None else at
         sspec = spec.session_spec()
         if sspec is None:
@@ -322,9 +412,17 @@ class Orchestrator:
             job_id=next(self._ids),
             submit_time=t,
             sspec=sspec,
+            wants_pool=spec.wants_pool,
         )
         self.jobs.append(job)
-        self.engine.at(t, lambda: self._arrive(job))
+        self._pool_wait_n += self._pool_waiting(job)
+        return job
+
+    def submit(self, spec: WorkflowSpec, at: Optional[float] = None) -> JobRecord:
+        """Enqueue a job at virtual time ``at`` (default: now)."""
+        self._check_spec(spec)
+        job = self._make_job(spec, at)
+        self.engine.at(job.submit_time, lambda: self._arrive(job))
         return job
 
     def _arrive(self, job: JobRecord) -> None:
@@ -346,23 +444,160 @@ class Orchestrator:
             self._transition(job, JobState.FAILED)
             return
         self._transition(job, JobState.QUEUED)
-        self.queue.append(job)
-        self._dispatch()
+        self._enqueue(job)
+        self._dispatch(new_job=job)
 
     # -- dispatch loop -------------------------------------------------------
-    def _dispatch(self) -> None:
-        """Start every queued job the policy admits against the free pool."""
+    def _dispatch(self, new_job: Optional[JobRecord] = None) -> None:
+        """Start every queued job the policy admits against the free pool.
+        ``new_job`` marks an arrival-triggered dispatch, which the indexed
+        path can often resolve in O(1) (nothing freed since the last scan
+        concluded nothing fits, so only the arrival itself is a candidate)."""
+        if self._dq is not None:
+            self._dispatch_indexed(new_job)
+        else:
+            self._dispatch_legacy()
+
+    # admission state = everything a refusal can go stale against: the
+    # scheduler free pool (epoch) and the pool subsystem (leases, ledgers,
+    # catalog). Aging/promotion changes *order*, never admissibility.
+    def _admission_state(self) -> tuple:
+        pm = self.provision.pool_manager
+        return (self.scheduler.epoch, pm.epoch if pm is not None else -1)
+
+    def _sizing_signature(self) -> tuple:
+        """Weakest-free-node contributions: while these are unchanged, every
+        capacity/bandwidth request resolves to the same node count, so a
+        shrinking free pool can only turn fits into misfits — refusals from
+        earlier in the scan stay valid."""
+        s = self.scheduler
+        return (s.free_min_capacity(), s.free_min_bandwidth())
+
+    _ADMITTED, _REFUSED, _FAILED = "admitted", "refused", "failed"
+
+    def _probe(self, job: JobRecord) -> str:
+        """One admission attempt against the live cluster (indexed path)."""
+        if not self._admittable_now(job):
+            return self._REFUSED
+        try:
+            session = self._try_open(job)
+        except NegotiationError:
+            self._dq.remove(job)
+            job.failure_phase = "infeasible"
+            self._transition(job, JobState.FAILED)
+            return self._FAILED
+        if session is None:
+            return self._REFUSED
+        self._dq.remove(job)
+        self._start(job, session)
+        return self._ADMITTED
+
+    def _dispatch_indexed(self, new_job: Optional[JobRecord] = None) -> None:
+        """Incremental dispatch over the indexed queue.
+
+        Observably identical to :meth:`_dispatch_legacy`: same-signature
+        jobs receive identical admission answers at any instant, so probing
+        one head per bucket probes exactly the jobs whose refusal the legacy
+        scan would not have skipped; and a candidate heap merged with each
+        admitted bucket's next head reproduces the legacy restart order as
+        long as no admission changed the sizing or pool state (when one
+        does, the pass restarts from a fresh ranking, as legacy always
+        does)."""
+        dq = self._dq
+        now = self.engine.now
+        dq.promote(now)
+        state = self._admission_state()
+        if new_job is not None and self._noadmit_state == state:
+            # Nothing has been freed since a full scan concluded that
+            # nothing fits: the arrival is the only new candidate.
+            policy = self.policy
+            if policy.head_blocking:
+                blocked = self._noadmit_head_key
+                if blocked is not None:
+                    key_new = (
+                        policy.sort_key(new_job, self.scheduler, now),
+                        dq.seq_of(new_job),
+                    )
+                    if key_new >= blocked:
+                        return          # the blocked head still blocks
+            else:
+                if not dq.is_bucket_head(new_job):
+                    return              # same-signature job already refused
+                sizing = self._sizing_signature()
+                if self._probe(new_job) is not self._ADMITTED:
+                    return              # state unchanged; refusals still hold
+                if (
+                    self._sizing_signature() == sizing
+                    and self._admission_state()[1] == state[1]
+                ):
+                    # the admission only shrank the free pool: every earlier
+                    # refusal still holds, no full scan needed
+                    self._noadmit_state = self._admission_state()
+                    return
+        self._run_dispatch_scan(now)
+
+    def _run_dispatch_scan(self, now: float) -> None:
+        """One dispatch pass over the bucket heads, merged in policy order.
+
+        Head-blocking policies must probe their true first head, so they
+        skip the admissibility gate and stop at the first refusal; all
+        others gate out certain refusals before paying for policy keys and
+        keep scanning. Either way, an admitted (or failed) bucket's next
+        head re-enters the heap exactly where the departing job ranked —
+        the legacy restart order — as long as no admission moved the
+        sizing or pool state (then the pass restarts from a fresh ranking,
+        as legacy always does)."""
+        dq = self._dq
+        head_blocking = self.policy.head_blocking
+        gate = None if head_blocking else self._admittable_now
+        while True:
+            candidates = dq.candidate_heads(now, gate)
+            if not candidates:
+                self._noadmit_state = self._admission_state()
+                self._noadmit_head_key = None
+                return
+            heapq.heapify(candidates)
+            sizing = self._sizing_signature()
+            pool_epoch = self._admission_state()[1]
+            restart = False
+            while candidates:
+                key, seq, job, bucket = heapq.heappop(candidates)
+                outcome = self._probe(job)
+                if outcome is self._REFUSED:
+                    if head_blocking:
+                        self._noadmit_state = self._admission_state()
+                        self._noadmit_head_key = (key, seq)
+                        return
+                    continue            # whole bucket refused until a restart
+                if outcome is self._ADMITTED and (
+                    self._sizing_signature() != sizing
+                    or self._admission_state()[1] != pool_epoch
+                ):
+                    restart = True      # refusals/ranks may have gone stale
+                    break
+                item = dq.head_item(bucket, now, gate)
+                if item is not None:
+                    heapq.heappush(candidates, item)
+            if restart:
+                continue
+            self._noadmit_state = self._admission_state()
+            self._noadmit_head_key = None
+            return
+
+    def _dispatch_legacy(self) -> None:
+        """The pre-index dispatch loop (compatibility fallback for custom
+        policies, and the reference the determinism regressions replay)."""
         started = True
-        while started and self.queue:
+        while started and self._queue:
             started = False
-            for job in self.policy.order(self.queue, self.scheduler, self.engine.now):
+            for job in self.policy.order(self._queue, self.scheduler, self.engine.now):
                 try:
                     session = self._try_open(job)
                 except NegotiationError:
                     # what was feasible at arrival no longer is (e.g. every
                     # pool that could hold the working set was retired):
                     # fail fast instead of stranding the job in the queue
-                    self.queue.remove(job)
+                    self._queue.remove(job)
                     job.failure_phase = "infeasible"
                     self._transition(job, JobState.FAILED)
                     started = True
@@ -371,10 +606,55 @@ class Orchestrator:
                     if self.policy.head_blocking:
                         break
                     continue
-                self.queue.remove(job)
+                self._queue.remove(job)
                 self._start(job, session)
                 started = True
                 break                 # re-ask the policy: free pool changed
+
+    def _gating(self, job: JobRecord) -> tuple:
+        """Pre-filter terms for a job, computed once: ``()`` when the job
+        must always be probed for real (POOLED/PERSISTENT specs, custom
+        backends), else ``(n_compute, storage_request_or_None)``."""
+        gating = job._gating
+        if gating is None:
+            offer = job.offer
+            if offer is None or job.sspec.lifetime is not LifetimeClass.EPHEMERAL:
+                gating = ()
+            else:
+                backend = self.provision.registry.get(offer.backend)
+                if backend is None or not backend.scheduler_gated:
+                    gating = ()
+                else:
+                    storage = (
+                        job.request.storage
+                        if backend.capabilities.dedicated_nodes
+                        else None
+                    )
+                    if storage is not None and storage.nodes is not None:
+                        storage = storage.nodes      # static node count
+                    gating = (job.spec.n_compute, storage)
+            job._gating = gating
+        return gating
+
+    def _admittable_now(self, job: JobRecord) -> bool:
+        """Cheap pre-filter for indexed dispatch: False only when
+        ``_try_open`` is *certain* to return None right now (two O(1) count
+        checks against the indexed free pool). Only ``scheduler_gated``
+        backends — whose EPHEMERAL admission is exactly the scheduler
+        co-allocation fitting — are filtered; POOLED/PERSISTENT specs and
+        custom backends always probe for real."""
+        gating = self._gating(job)
+        if not gating:
+            return True
+        n_compute, storage = gating
+        sched = self.scheduler
+        if n_compute > len(sched._free_compute):
+            return False
+        if storage is None:
+            return True
+        if type(storage) is int:
+            return storage <= len(sched._free_storage)
+        return sched.resolve_storage_nodes(storage) <= len(sched._free_storage)
 
     def _try_open(self, job: JobRecord) -> Optional[StorageSession]:
         """One declarative call grants everything the job holds: compute
@@ -403,50 +683,89 @@ class Orchestrator:
         job.alloc_started = self.engine.now
         job.backend = session.backend
         self._transition(job, JobState.ALLOCATED)
+        was_waiting = self._pool_waiting(job)
         job.lease = session.lease
+        self._pool_wait_n += self._pool_waiting(job) - was_waiting
+        if self._record_allocations:
+            alloc = session.allocation
+            job.alloc_history.append(
+                (
+                    tuple(n.node_id for n in alloc.compute_nodes) if alloc else (),
+                    tuple(n.node_id for n in alloc.storage_nodes) if alloc else (),
+                    session.lease.pool_id if session.lease is not None else None,
+                )
+            )
         if session.lease is not None:
             job.pool_id = session.lease.pool_id
             job.dataset_hits += session.lease.hits
             job.dataset_misses += session.lease.misses
         job.fs_model = session.fs_model
-        self._enter_phase(job, JobState.PROVISIONING, session.provision_time_s)
+        self._transition(job, JobState.PROVISIONING)
+        eng = self.engine
+        eng.at(
+            eng.now + session.provision_time_s, lambda: self._provision_done(job)
+        )
 
     # -- phase machinery -----------------------------------------------------
-    def _enter_phase(self, job: JobRecord, state: JobState, duration: float) -> None:
-        self._transition(job, state)
-        self.engine.after(duration, lambda: self._phase_done(job, state))
+    # Each phase-completion callback schedules its successor directly: no
+    # per-event state dispatch on the hot path. A fault trip at any phase
+    # boundary routes through _fail_attempt (release + requeue-or-FAIL).
+    def _trip(self, job: JobRecord, phase: str) -> bool:
+        return not self._faults_passive and self.faults.trip(job.spec.name, phase)
 
-    def _phase_done(self, job: JobRecord, state: JobState) -> None:
-        fault_phase = _FAULT_PHASE.get(state)
-        if fault_phase is not None and self.faults.trip(job.spec.name, fault_phase):
-            self._fail_attempt(job, fault_phase)
+    def _provision_done(self, job: JobRecord) -> None:
+        if self._trip(job, "provision"):
+            self._fail_attempt(job, "provision")
             return
         session = job.session
-        if state is JobState.PROVISIONING:
-            if session.lease is None and job.allocation is not None:
-                job.warm_nodes = job.warm_nodes | frozenset(
-                    n.node_id for n in job.allocation.storage_nodes
-                )
-            self._enter_phase(job, JobState.STAGING_IN, session.stage_in_time_s)
-        elif state is JobState.STAGING_IN:
-            job.staged_in_bytes += session.stage_in_bytes
-            # saved bytes count only when the stage-in actually completed
-            # (a faulted attempt neither staged nor saved anything)
-            job.stage_in_saved_bytes += session.saved_bytes
-            # lease misses are now resident: hits for every later job
-            session.mark_staged(self.engine.now)
-            self._enter_phase(job, JobState.RUNNING, job.spec.run_time_s)
-        elif state is JobState.RUNNING:
-            self._enter_phase(job, JobState.STAGING_OUT, session.stage_out_time_s)
-        elif state is JobState.STAGING_OUT:
-            job.staged_out_bytes += session.stage_out_bytes
-            # pool-backed / always-on backends release for free (the data
-            # manager outlives the job); only job-scoped deploys pay teardown
-            self._enter_phase(job, JobState.TEARDOWN, session.teardown_time_s)
-        elif state is JobState.TEARDOWN:
-            self._release(job)
-            self._transition(job, JobState.DONE)
-            self._dispatch()
+        if session.lease is None and job.allocation is not None:
+            job.warm_nodes = job.warm_nodes | frozenset(
+                n.node_id for n in job.allocation.storage_nodes
+            )
+        self._transition(job, JobState.STAGING_IN)
+        eng = self.engine
+        eng.at(eng.now + session.stage_in_time_s, lambda: self._stage_in_done(job))
+
+    def _stage_in_done(self, job: JobRecord) -> None:
+        if self._trip(job, "stage_in"):
+            self._fail_attempt(job, "stage_in")
+            return
+        session = job.session
+        job.staged_in_bytes += session.stage_in_bytes
+        # saved bytes count only when the stage-in actually completed
+        # (a faulted attempt neither staged nor saved anything)
+        job.stage_in_saved_bytes += session.saved_bytes
+        # lease misses are now resident: hits for every later job
+        session.mark_staged(self.engine.now)
+        self._transition(job, JobState.RUNNING)
+        eng = self.engine
+        eng.at(eng.now + job.spec.run_time_s, lambda: self._run_done(job))
+
+    def _run_done(self, job: JobRecord) -> None:
+        if self._trip(job, "run"):
+            self._fail_attempt(job, "run")
+            return
+        session = job.session
+        self._transition(job, JobState.STAGING_OUT)
+        eng = self.engine
+        eng.at(eng.now + session.stage_out_time_s, lambda: self._stage_out_done(job))
+
+    def _stage_out_done(self, job: JobRecord) -> None:
+        if self._trip(job, "stage_out"):
+            self._fail_attempt(job, "stage_out")
+            return
+        session = job.session
+        job.staged_out_bytes += session.stage_out_bytes
+        # pool-backed / always-on backends release for free (the data
+        # manager outlives the job); only job-scoped deploys pay teardown
+        self._transition(job, JobState.TEARDOWN)
+        eng = self.engine
+        eng.at(eng.now + session.teardown_time_s, lambda: self._teardown_done(job))
+
+    def _teardown_done(self, job: JobRecord) -> None:
+        self._release(job)
+        self._transition(job, JobState.DONE)
+        self._dispatch()
 
     def _fail_attempt(self, job: JobRecord, phase: str) -> None:
         job.failure_phase = phase
@@ -456,7 +775,7 @@ class Orchestrator:
             self._transition(job, JobState.FAILED)
         else:
             self._transition(job, JobState.QUEUED)
-            self.queue.append(job)
+            self._enqueue(job)
         self._dispatch()
 
     def _release(self, job: JobRecord) -> None:
@@ -471,29 +790,52 @@ class Orchestrator:
         pooled = session.lease is not None
         session.release(self.engine.now)
         job.session = None
+        was_waiting = self._pool_waiting(job)
         job.lease = None
+        self._pool_wait_n += self._pool_waiting(job) - was_waiting
         job.allocation = None
         job.alloc_started = None
         job.fs_model = None
         if pooled and self.pools is not None and self.pools.ttl_s is not None:
-            self.engine.after(self.pools.ttl_s, self._reap_pools)
+            # coalesce: many leases released at one event time used to fan
+            # out into identical reap events; one per fire time suffices
+            t = self.engine.now + self.pools.ttl_s
+            if t not in self._reap_times:
+                self._reap_times.add(t)
+                self.engine.at(t, lambda: self._run_reap(t))
+
+    def _run_reap(self, t: float) -> None:
+        self._reap_times.discard(t)
+        self._reap_pools()
+
+    def _pool_waiting(self, job: JobRecord) -> bool:
+        """Is this a pool-wanting job that has yet to run (no lease, not
+        terminal)? Counted incrementally in ``_pool_wait_n`` so the TTL
+        reaper never scans the whole campaign's job list."""
+        return (
+            job.wants_pool
+            and job.lease is None
+            and job.state not in TERMINAL_STATES
+        )
 
     def _reap_pools(self) -> None:
-        """TTL check scheduled after each lease release. Never reaps while
-        any pool-backed job has yet to run — queued now, requeued after a
+        """TTL check scheduled after lease releases. Never reaps while any
+        pool-backed job has yet to run — queued now, requeued after a
         fault, or submitted with a future arrival time — because a reaped
         pool could strand it (or fail it spuriously as infeasible)."""
         if self.pools is None:
             return
-        if any(
-            j.spec.wants_pool and not j.done and j.lease is None
-            for j in self.jobs
-        ):
+        if self._pool_wait_n > 0:
             return
         self.pools.reap_idle(self.engine.now)
 
     def _transition(self, job: JobRecord, state: JobState) -> None:
-        job.state = state
+        if job.wants_pool:
+            was_waiting = self._pool_waiting(job)
+            job.state = state
+            self._pool_wait_n += self._pool_waiting(job) - was_waiting
+        else:
+            job.state = state
         job.history.append((state, self.engine.now))
 
     # -- campaign driver -----------------------------------------------------
@@ -503,6 +845,7 @@ class Orchestrator:
         *,
         submit_times: Optional[list[float]] = None,
         until: Optional[float] = None,
+        max_events: Optional[int] = None,
     ) -> list[JobRecord]:
         """Submit ``specs`` (if given), drain the event loop, return records.
 
@@ -511,19 +854,34 @@ class Orchestrator:
         trace) instead of the batch-at-now default; it must match ``specs``
         in length, and no time may predate the engine clock.
 
+        ``max_events`` sets the engine's runaway-loop backstop. The default
+        scales with campaign size — ``max(1_000_000, 40 * n_jobs)`` — so a
+        50k-job campaign no longer trips the engine's fixed 1M guard; pass
+        ``None`` explicitly through :meth:`SimEngine.run` to disable it.
+
+        Submissions are bulk-scheduled (:meth:`SimEngine.at_many`): one
+        heapify instead of one heap push per job for batch arrivals.
+
         Guarantees every job reaches a terminal state (DONE or FAILED) unless
         ``until`` cut the clock short.
         """
         specs = specs or []
-        if submit_times is not None:
-            if len(submit_times) != len(specs):
-                raise ValueError(
-                    f"{len(submit_times)} submit times for {len(specs)} specs"
-                )
-            for spec, t in zip(specs, submit_times):
-                self.submit(spec, at=t)
-        else:
-            for spec in specs:
-                self.submit(spec)
-        self.engine.run(until=until)
+        if submit_times is not None and len(submit_times) != len(specs):
+            raise ValueError(
+                f"{len(submit_times)} submit times for {len(specs)} specs"
+            )
+        for spec in specs:
+            self._check_spec(spec)
+        events = []
+        for i, spec in enumerate(specs):
+            job = self._make_job(
+                spec, None if submit_times is None else submit_times[i]
+            )
+            events.append(
+                (job.submit_time, (lambda j: lambda: self._arrive(j))(job))
+            )
+        self.engine.at_many(events)
+        if max_events is None:
+            max_events = max(1_000_000, 40 * len(self.jobs))
+        self.engine.run(until=until, max_events=max_events)
         return list(self.jobs)

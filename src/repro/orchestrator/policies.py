@@ -20,12 +20,19 @@ capacity changes. Three policies, in increasing awareness:
   ranked by resident-byte fraction; ties and pool-less jobs fall back to
   storage-aware ordering, and the same aging threshold prevents starvation
   of jobs whose data is nowhere warm.
+
+Two dispatch protocols share these policies. The legacy protocol calls
+:meth:`QueuePolicy.order` — sort the whole queue, every time — and remains
+the compatibility fallback for custom policies. The incremental protocol
+(``orchestrator.dispatch``) never sorts the queue: it keys jobs once with
+:meth:`QueuePolicy.sort_key` and re-evaluates only bucket heads, which is
+valid for any policy honoring the contract documented on ``sort_key``.
 """
 
 from __future__ import annotations
 
 import abc
-from typing import TYPE_CHECKING, Sequence
+from typing import TYPE_CHECKING, Optional, Sequence
 
 if TYPE_CHECKING:  # circular: lifecycle imports policies
     from ..core.scheduler import Scheduler
@@ -38,6 +45,10 @@ class QueuePolicy(abc.ABC):
 
     name: str = "abstract"
     head_blocking: bool = False
+    #: aging horizon in seconds; None when keys never change as jobs wait
+    aging_s: Optional[float] = None
+    #: True when ``sort_key`` honors the incremental-dispatch contract
+    incremental: bool = False
 
     @abc.abstractmethod
     def order(
@@ -45,21 +56,53 @@ class QueuePolicy(abc.ABC):
     ) -> list["JobRecord"]:
         ...
 
+    def sort_key(
+        self, job: "JobRecord", scheduler: "Scheduler", now: float
+    ) -> tuple:
+        """Key reproducing :meth:`order`: a stable sort of the queue on
+        ``sort_key`` must equal ``order(queue)``.
+
+        Incremental-dispatch contract (``orchestrator.dispatch`` relies on
+        it): the key may depend on the job only through (a) its *admission
+        signature* — the resolved `StorageSpec` minus the name, plus the
+        compute-node count — (b) its ``submit_time``, and (c) whether it has
+        waited past ``aging_s``; and aged jobs must order before all fresh
+        ones. Same-signature jobs then always order by
+        ``(aged, bucket_subkey, arrival)``, which is what lets the dispatch
+        queue maintain per-bucket order without re-sorting.
+        """
+        raise NotImplementedError
+
+    def bucket_subkey(self, job: "JobRecord") -> tuple:
+        """In-bucket ordering prefix (ahead of arrival order) for the
+        incremental protocol: ``()`` for pure arrival order; policies whose
+        ``sort_key`` orders same-signature jobs by submit time return
+        ``(job.submit_time,)``."""
+        return ()
+
 
 class FIFOPolicy(QueuePolicy):
     name = "fifo"
     head_blocking = True
+    incremental = True
 
     def order(self, queue, scheduler, now):
         return list(queue)          # queue is maintained in arrival order
+
+    def sort_key(self, job, scheduler, now):
+        return ()                   # arrival order alone
 
 
 class BackfillPolicy(QueuePolicy):
     name = "backfill"
     head_blocking = False
+    incremental = True
 
     def order(self, queue, scheduler, now):
         return list(queue)
+
+    def sort_key(self, job, scheduler, now):
+        return ()
 
 
 class StorageAwarePolicy(QueuePolicy):
@@ -67,21 +110,25 @@ class StorageAwarePolicy(QueuePolicy):
 
     name = "storage-aware"
     head_blocking = False
+    incremental = True
 
     def __init__(self, aging_s: float = 3600.0):
         if aging_s <= 0:
             raise ValueError("aging_s must be positive")
         self.aging_s = aging_s
 
-    def order(self, queue, scheduler, now):
-        def key(job):
-            aged = (now - job.submit_time) >= self.aging_s
-            if aged:
-                return (0, job.submit_time, job.submit_time)
-            _, n_storage = scheduler.demand(job.request)
-            return (1, n_storage, job.submit_time)
+    def sort_key(self, job, scheduler, now):
+        if (now - job.submit_time) >= self.aging_s:
+            return (0, job.submit_time, job.submit_time)
+        storage = job.request.storage
+        n_storage = 0 if storage is None else scheduler.resolve_storage_nodes(storage)
+        return (1, n_storage, job.submit_time)
 
-        return sorted(queue, key=key)
+    def bucket_subkey(self, job):
+        return (job.submit_time,)
+
+    def order(self, queue, scheduler, now):
+        return sorted(queue, key=lambda job: self.sort_key(job, scheduler, now))
 
 
 class DataAwarePolicy(QueuePolicy):
@@ -100,6 +147,7 @@ class DataAwarePolicy(QueuePolicy):
 
     name = "data-aware"
     head_blocking = False
+    incremental = True
 
     def __init__(self, pools, aging_s: float = 3600.0):
         if aging_s <= 0:
@@ -112,15 +160,19 @@ class DataAwarePolicy(QueuePolicy):
         self.pools = pools
         self.aging_s = aging_s
 
-    def order(self, queue, scheduler, now):
-        def key(job):
-            if (now - job.submit_time) >= self.aging_s:
-                return (0, job.submit_time, 0.0, job.submit_time)
-            spec = job.spec
-            frac = 0.0
-            if spec.wants_pool and spec.all_datasets:
-                frac = self.pools.resident_fraction(spec.all_datasets)
-            _, n_storage = scheduler.demand(job.request)
-            return (1, -frac, n_storage, job.submit_time)
+    def sort_key(self, job, scheduler, now):
+        if (now - job.submit_time) >= self.aging_s:
+            return (0, job.submit_time, 0.0, job.submit_time)
+        spec = job.spec
+        frac = 0.0
+        if spec.wants_pool and spec.all_datasets:
+            frac = self.pools.resident_fraction(spec.all_datasets)
+        storage = job.request.storage
+        n_storage = 0 if storage is None else scheduler.resolve_storage_nodes(storage)
+        return (1, -frac, n_storage, job.submit_time)
 
-        return sorted(queue, key=key)
+    def bucket_subkey(self, job):
+        return (job.submit_time,)
+
+    def order(self, queue, scheduler, now):
+        return sorted(queue, key=lambda job: self.sort_key(job, scheduler, now))

@@ -68,6 +68,12 @@ class DataCatalog:
 
     def __init__(self) -> None:
         self._by_pool: dict[int, dict[str, Residency]] = {}
+        #: bumped on every mutation that can change what is resident where
+        #: (add / mark_resident / invalidate / drop_pool — not touch or
+        #: pin, which only steer eviction). Consumers caching anything
+        #: derived from residency (negotiated offers, data-aware policy
+        #: keys) invalidate against it.
+        self.version = 0
 
     # -- pool lifecycle -------------------------------------------------------
     def register_pool(self, pool_id: int) -> None:
@@ -77,6 +83,7 @@ class DataCatalog:
 
     def drop_pool(self, pool_id: int) -> list[Residency]:
         """Pool teardown: every entry vanishes with the pool's tree."""
+        self.version += 1
         return list(self._by_pool.pop(pool_id, {}).values())
 
     # -- lookups --------------------------------------------------------------
@@ -117,6 +124,7 @@ class DataCatalog:
             raise ValueError(f"{dataset.name!r} already tracked on pool {pool_id}")
         r = Residency(dataset=dataset, pool_id=pool_id, state=state, last_touch=now)
         entries[dataset.name] = r
+        self.version += 1
         return r
 
     def mark_resident(self, pool_id: int, name: str, now: float) -> None:
@@ -124,6 +132,7 @@ class DataCatalog:
         r.state = ResidencyState.RESIDENT
         r.staged_at = now
         r.last_touch = now
+        self.version += 1
 
     def touch(self, pool_id: int, name: str, now: float) -> None:
         self._require(pool_id, name).last_touch = now
@@ -146,6 +155,7 @@ class DataCatalog:
         if r.pins > 0:
             raise ValueError(f"cannot invalidate pinned {name!r} on pool {pool_id}")
         del self._by_pool[pool_id][name]
+        self.version += 1
         return r
 
     # -- eviction support ------------------------------------------------------

@@ -92,6 +92,17 @@ class PoolManager:
         self._pools: dict[int, StoragePool] = {}
         self._pool_ids = itertools.count(1)
         self._lease_ids = itertools.count(1)
+        self._epoch = 0
+
+    @property
+    def epoch(self) -> int:
+        """Monotone counter over every observable pool-state change: pool
+        create/retire/teardown, lease grant/release, ledger charges, and
+        catalog residency changes (the catalog's own version folds in).
+        Anything cached off pool state — negotiated POOLED offers above all
+        — re-validates against this instead of re-scoring every pool on
+        every dispatch attempt."""
+        return self._epoch + self.catalog.version
 
     def _now(self, now: Optional[float]) -> float:
         if now is not None:
@@ -155,6 +166,7 @@ class PoolManager:
         self._pools[pool_id] = pool
         self.catalog.register_pool(pool_id)
         self.stats.pools_created += 1
+        self._epoch += 1
         return pool
 
     def retire(self, pool: StoragePool, now: Optional[float] = None) -> bool:
@@ -164,6 +176,7 @@ class PoolManager:
         if pool.state is PoolState.RETIRED:
             raise AllocationError(f"pool {pool.name!r} is already retired")
         pool.state = PoolState.DRAINING
+        self._epoch += 1
         if pool.n_leases == 0:
             self._teardown(pool, now)
             return True
@@ -198,6 +211,7 @@ class PoolManager:
         pool.state = PoolState.RETIRED
         pool.retired_at = now
         self.stats.pools_retired += 1
+        self._epoch += 1
 
     # -- introspection -----------------------------------------------------------
     @property
@@ -320,6 +334,7 @@ class PoolManager:
         self.stats.leases_granted += 1
         self.stats.dataset_hits += len(hits)
         self.stats.dataset_misses += len(missing)
+        self._epoch += 1
         return lease
 
     def on_stage_in_complete(self, lease: Lease, now: Optional[float] = None) -> None:
@@ -357,6 +372,7 @@ class PoolManager:
                 pool.uncharge_dataset(d.name)
         pool.release_scratch(lease.scratch_bytes)
         pool.detach(lease.lease_id, now)
+        self._epoch += 1
         if pool.state is PoolState.DRAINING and pool.n_leases == 0:
             self._teardown(pool, now)
             return True

@@ -60,6 +60,13 @@ class DataManagerBackend(abc.ABC):
 
     name: str = "abstract"
     capabilities: BackendCapabilities
+    #: True when, for EPHEMERAL specs, ``try_open`` returns None *iff* the
+    #: scheduler co-allocation (n_compute, plus the resolved storage demand
+    #: when ``capabilities.dedicated_nodes``) does not fit the free pool —
+    #: i.e. admission is gated by the scheduler alone. Lets dispatchers
+    #: pre-filter hopeless probes with two O(1) count checks. Custom
+    #: backends with extra admission conditions must leave this False.
+    scheduler_gated: bool = False
 
     # -- negotiation -----------------------------------------------------------
     def check(self, spec: StorageSpec, svc: "ProvisioningService") -> Optional[str]:
@@ -151,6 +158,7 @@ class EphemeralFSBackend(_NodeBackend):
     """BeeGFS-analogue on granted nodes; the paper's own data manager."""
 
     name = "ephemeralfs"
+    scheduler_gated = True
     capabilities = BackendCapabilities(
         access=("posix",),
         lifetimes=frozenset(LifetimeClass),
@@ -360,6 +368,7 @@ class GlobalFSBackend(DataManagerBackend):
     """The always-on Lustre-analogue: zero deploy, shared bandwidth."""
 
     name = "globalfs"
+    scheduler_gated = True
     capabilities = BackendCapabilities(
         access=("posix",),
         lifetimes=frozenset({LifetimeClass.EPHEMERAL}),
@@ -426,6 +435,7 @@ class KVStoreBackend(_NodeBackend):
     """Hash-partitioned KV store on granted nodes (``access="kv"``)."""
 
     name = "kvstore"
+    scheduler_gated = True
     capabilities = BackendCapabilities(
         access=("kv",),
         lifetimes=frozenset({LifetimeClass.EPHEMERAL}),
@@ -494,6 +504,7 @@ class NullBackend(DataManagerBackend):
     """Dry-run backend: accepts anything at zero cost, by explicit request."""
 
     name = "null"
+    scheduler_gated = True
     capabilities = BackendCapabilities(
         access=("posix", "kv"),
         lifetimes=frozenset(LifetimeClass),
@@ -527,6 +538,8 @@ class BackendRegistry:
 
     def __init__(self, backends: Optional[list[DataManagerBackend]] = None):
         self._backends: dict[str, DataManagerBackend] = {}
+        #: bumped on registration; offers cached against the old set go stale
+        self.version = 0
         for b in backends or []:
             self.register(b)
 
@@ -534,6 +547,7 @@ class BackendRegistry:
         if backend.name in self._backends:
             raise ValueError(f"backend {backend.name!r} already registered")
         self._backends[backend.name] = backend
+        self.version += 1
 
     def get(self, name: str) -> Optional[DataManagerBackend]:
         return self._backends.get(name)

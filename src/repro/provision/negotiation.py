@@ -104,3 +104,38 @@ def enumerate_same_rank(registry: "BackendRegistry"):
     """All registered backends at equal preference: score alone decides."""
     for backend in registry:
         yield 0, backend
+
+
+class OfferCache:
+    """Memoized :func:`negotiate`, keyed by spec *signature* + state epoch.
+
+    Negotiation is name-blind (see :meth:`StorageSpec.signature`), so a
+    campaign of 50k jobs sharing a handful of spec shapes scores backends a
+    handful of times, not 50k. Staleness is epoch-based: the caller passes
+    whatever state its spec's offers can depend on — for EPHEMERAL and
+    PERSISTENT specs that is static over a campaign (sizing and QoS are
+    checked against the whole inventory), for POOLED specs it is the
+    PoolManager epoch, so those re-score exactly when a pool, its lease
+    ledger, or the catalog actually changed. Failures are cached as their
+    rejection tuple and re-raised under the asking spec's name.
+    """
+
+    def __init__(self) -> None:
+        # signature -> (epoch, Offer | tuple[Rejection, ...])
+        self._results: dict[tuple, tuple] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def lookup(self, sig: tuple, epoch: tuple):
+        """The cached result — an :class:`Offer`, or the rejection tuple of
+        a cached failure — iff one exists for this signature at this epoch;
+        None otherwise."""
+        cached = self._results.get(sig)
+        if cached is not None and cached[0] == epoch:
+            self.hits += 1
+            return cached[1]
+        return None
+
+    def store(self, sig: tuple, epoch: tuple, result) -> None:
+        self.misses += 1
+        self._results[sig] = (epoch, result)

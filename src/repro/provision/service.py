@@ -39,9 +39,9 @@ from ..core.scheduler import AllocationError, Scheduler
 from ..pool.catalog import DatasetRef
 from ..pool.manager import PoolManager
 from .backends import BackendRegistry, default_registry
-from .negotiation import NegotiationError, Offer, negotiate
+from .negotiation import NegotiationError, Offer, OfferCache, negotiate
 from .session import StorageSession
-from .spec import StorageSpec
+from .spec import LifetimeClass, StorageSpec
 
 
 @dataclasses.dataclass
@@ -50,6 +50,7 @@ class ServiceStats:
 
     negotiations: int = 0
     negotiation_wall_s: float = 0.0        # cumulative wallclock inside negotiate()
+    negotiations_cached: int = 0           # of which served from the offer cache
     failed_negotiations: int = 0
     sessions_opened: dict = dataclasses.field(default_factory=dict)  # backend -> n
     sessions_released: int = 0
@@ -91,6 +92,11 @@ class ProvisioningService:
         self._pool_kwargs: dict = {}
         self.stats = ServiceStats()
         self._globalfs = None          # lazily materialized functional GlobalFS
+        self._offer_cache = OfferCache()
+        self._pool_gen = 0             # bumped when the pool subsystem is replaced
+        # modeled stage times repeat across same-shape sessions; keyed by
+        # (direction, bytes, streams, src-shape, dst-shape) — see session.py
+        self._stage_time_cache: dict[tuple, float] = {}
 
     def _now(self, now: Optional[float]) -> float:
         if now is not None:
@@ -115,6 +121,9 @@ class ProvisioningService:
                 )
         kwargs.setdefault("clock", self.clock)
         self.pool_manager = PoolManager(self.scheduler, self.provisioner, **kwargs)
+        # a fresh manager restarts its epoch at 0; the generation counter
+        # keeps POOLED offers cached against the old manager from matching
+        self._pool_gen += 1
         return self.pool_manager
 
     def resident_fraction(self, datasets: Sequence[DatasetRef]) -> float:
@@ -126,18 +135,49 @@ class ProvisioningService:
         return self.pool_manager.resident_fraction(datasets)
 
     # -- negotiation -----------------------------------------------------------
+    def _negotiation_epoch(self, spec: StorageSpec) -> tuple:
+        """Everything a cached offer for ``spec`` can go stale against.
+        EPHEMERAL/PERSISTENT offers are scored against the static inventory,
+        so only backend registrations invalidate them; POOLED offers track
+        the pool subsystem (manager generation + PoolManager epoch, which
+        folds in lease-ledger and catalog changes)."""
+        if spec.lifetime is LifetimeClass.POOLED:
+            pm = self.pool_manager
+            pool_state = (self._pool_gen, pm.epoch if pm is not None else -1)
+        else:
+            pool_state = ()
+        return (self.registry.version, pool_state)
+
     def negotiate(self, spec: StorageSpec) -> Offer:
         """Score candidate backends, return the best feasible offer, or raise
-        :class:`NegotiationError` with per-backend rejection reasons."""
+        :class:`NegotiationError` with per-backend rejection reasons.
+        Memoized by spec signature + state epoch (see `OfferCache`), so a
+        campaign re-scores a spec shape only when the state it negotiated
+        against actually changed. ``negotiation_wall_s`` accounts the real
+        scoring work; cache hits cost (and add) effectively nothing."""
+        stats = self.stats
+        stats.negotiations += 1
+        sig = spec.signature()
+        epoch = self._negotiation_epoch(spec)
+        cache = self._offer_cache
+        result = cache.lookup(sig, epoch)
+        if result is not None:
+            stats.negotiations_cached = cache.hits
+            if isinstance(result, Offer):
+                return result
+            stats.failed_negotiations += 1
+            raise NegotiationError(spec.name, result)
         t0 = time.perf_counter()
-        self.stats.negotiations += 1
         try:
-            return negotiate(spec, self, self.registry)
-        except NegotiationError:
-            self.stats.failed_negotiations += 1
+            offer = negotiate(spec, self, self.registry)
+        except NegotiationError as e:
+            cache.store(sig, epoch, e.rejections)
+            stats.failed_negotiations += 1
             raise
         finally:
-            self.stats.negotiation_wall_s += time.perf_counter() - t0
+            stats.negotiation_wall_s += time.perf_counter() - t0
+        cache.store(sig, epoch, offer)
+        return offer
 
     def feasible(self, spec: StorageSpec, *, n_compute: int = 0) -> bool:
         """Could some backend ever serve this spec (empty cluster)?"""

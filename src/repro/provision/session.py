@@ -47,7 +47,31 @@ class SessionError(RuntimeError):
     pass
 
 
-@dataclasses.dataclass
+def _model_key(model: FSDeployment) -> tuple:
+    """The fields :func:`modeled_stage_time` actually reads — a stable cache
+    key even when deployments are distinct (but equal-shaped) instances.
+    ``mdtest_table`` is deliberately excluded: staging never consults it
+    (and it may be an unhashable dict). Memoized on the (frozen) model —
+    deployment models are canonicalized and long-lived."""
+    try:
+        return model._stage_key_cache
+    except AttributeError:
+        pass
+    key = (
+        model.kind,
+        model.n_nodes,
+        model.storage_targets,
+        model.md_targets,
+        model.disk,
+        model.node_dram,
+        model.net,
+        model.local_client,
+    )
+    object.__setattr__(model, "_stage_key_cache", key)
+    return key
+
+
+@dataclasses.dataclass(slots=True)
 class StorageSession:
     """A live negotiated grant; mutated only by itself and its service."""
 
@@ -90,6 +114,18 @@ class StorageSession:
         return self.state is SessionState.RELEASED
 
     # -- modeled staging (virtual-clock engines) ------------------------------
+    def _staging_time(self, nbytes: float, src: FSDeployment, dst: FSDeployment) -> float:
+        """Memoized :func:`modeled_stage_time` via the service: a campaign
+        stages the same byte counts through the same deployment shapes
+        thousands of times."""
+        cache = self.service._stage_time_cache
+        key = (nbytes, self.spec.n_streams, _model_key(src), _model_key(dst))
+        t = cache.get(key)
+        if t is None:
+            t = modeled_stage_time(nbytes, src, dst, self.spec.n_streams)
+            cache[key] = t
+        return t
+
     @property
     def stage_in_time_s(self) -> float:
         """Modeled wall time for stage-in: global FS read feeding this
@@ -97,22 +133,16 @@ class StorageSession:
         the global FS — the data never leaves it)."""
         if self.stage_in_bytes <= 0 or self.fs_model is None:
             return 0.0
-        return modeled_stage_time(
-            self.stage_in_bytes,
-            self.service.globalfs_model,
-            self.fs_model,
-            self.spec.n_streams,
+        return self._staging_time(
+            self.stage_in_bytes, self.service.globalfs_model, self.fs_model
         )
 
     @property
     def stage_out_time_s(self) -> float:
         if self.stage_out_bytes <= 0 or self.fs_model is None:
             return 0.0
-        return modeled_stage_time(
-            self.stage_out_bytes,
-            self.fs_model,
-            self.service.globalfs_model,
-            self.spec.n_streams,
+        return self._staging_time(
+            self.stage_out_bytes, self.fs_model, self.service.globalfs_model
         )
 
     def mark_staged(self, now: Optional[float] = None) -> None:

@@ -135,6 +135,41 @@ class StorageSpec:
             raise ValueError(f"{self.name!r}: empty backend name in managers")
 
     # -- derived views --------------------------------------------------------
+    def signature(self) -> tuple:
+        """Hashable identity of everything negotiation and admission can
+        observe about this spec — every field except the name. Two specs
+        with equal signatures receive identical offers from ``negotiate``
+        and identical grant/deny answers from every backend at any given
+        cluster/pool state, which is what the negotiation cache and the
+        dispatch queue's admission buckets key on. (The one name-sensitive
+        path, PERSISTENT create-or-reattach, is handled by the callers:
+        they append the name for that lifetime.)
+
+        Memoized on the (frozen) instance: negotiation and dispatch consult
+        it on every admission attempt."""
+        try:
+            return self._signature_cache
+        except AttributeError:
+            pass
+        sig = (
+            self.nodes,
+            self.capacity_bytes,
+            self.bandwidth,
+            self.managers,
+            self.lifetime,
+            self.access,
+            self.datasets,
+            self.stage_in_bytes,
+            self.stage_out_bytes,
+            self.n_streams,
+            self.placement,
+            self.qos,
+            self.runtime,
+            self.capacity_cap_bytes,
+        )
+        object.__setattr__(self, "_signature_cache", sig)
+        return sig
+
     @property
     def dataset_bytes(self) -> float:
         return total_bytes(self.datasets)
@@ -147,15 +182,23 @@ class StorageSpec:
     def to_request(self) -> Optional[StorageRequest]:
         """The scheduler-level sizing request (None for POOLED specs, which
         draw capacity from a lease, and for unsized specs, which negotiate
-        onto backends that grant no dedicated nodes)."""
+        onto backends that grant no dedicated nodes). Memoized on the
+        (frozen) instance — admission paths build it per attempt."""
+        try:
+            return self._to_request_cache
+        except AttributeError:
+            pass
         if self.lifetime is LifetimeClass.POOLED or (
             self.nodes is None
             and self.capacity_bytes is None
             and self.bandwidth is None
         ):
-            return None
-        return StorageRequest(
-            nodes=self.nodes,
-            capacity_bytes=self.capacity_bytes,
-            capability_bw=self.bandwidth,
-        )
+            req = None
+        else:
+            req = StorageRequest(
+                nodes=self.nodes,
+                capacity_bytes=self.capacity_bytes,
+                capability_bw=self.bandwidth,
+            )
+        object.__setattr__(self, "_to_request_cache", req)
+        return req

@@ -145,6 +145,20 @@ class FaultInjector:
         self._rng = random.Random(self.spec.seed)
         self.trips: list[tuple[str, str]] = []     # (job_name, phase)
 
+    @property
+    def any_faults(self) -> bool:
+        """Is there any probability mass at all? Campaign engines skip the
+        per-phase coin flip for stock fault-free injectors — a zero
+        probability never consumes a random draw, so the skip is
+        behavior-identical."""
+        s = self.spec
+        return (
+            s.provision_fail_p > 0.0
+            or s.stage_in_fail_p > 0.0
+            or s.run_fail_p > 0.0
+            or s.stage_out_fail_p > 0.0
+        )
+
     def trip(self, job_name: str, phase: str) -> bool:
         """Does ``phase`` of ``job_name`` fail on this attempt?"""
         p = getattr(self.spec, self._PHASE_FIELDS[phase])

@@ -1,0 +1,541 @@
+"""PR 4 regression suite: indexed ledgers, incremental dispatch, caching.
+
+Three pillars:
+
+* a hypothesis property test driving the `Scheduler`'s indexed free-pool
+  ledger against a naive dict-of-free-nodes model under random
+  grant/release interleavings — node choice, free sets, sizing
+  resolutions, and the weakest-free aggregates must stay bit-for-bit
+  equal;
+* determinism regressions replaying identical seeded campaigns through
+  the legacy (sort-everything) dispatcher and the indexed one, across
+  FIFO / backfill / storage-aware / data-aware policies, with faults,
+  pools, retries, and Poisson arrivals — `JobRecord.history`, granted
+  node ids, attempt counts, and failure phases must match exactly;
+* unit coverage for the new machinery: `SimEngine.at_many`, the
+  configurable `max_events` backstop, negotiation caching epochs, and
+  pool-reap coalescing.
+"""
+
+import math
+import random
+
+import pytest
+
+from repro.core import (
+    AllocationError,
+    JobRequest,
+    Scheduler,
+    StorageRequest,
+    dom_cluster,
+    synthetic_cluster,
+    tpu_pod_cluster,
+)
+from repro.core.resources import (
+    ARIES,
+    ClusterSpec,
+    ComputeNode,
+    Disk,
+    DiskSpec,
+    StorageNode,
+)
+from repro.orchestrator import (
+    BackfillPolicy,
+    DataAwarePolicy,
+    FIFOPolicy,
+    Orchestrator,
+    SimEngine,
+    StorageAwarePolicy,
+    WorkflowSpec,
+)
+from repro.orchestrator.arrivals import poisson_arrivals
+from repro.pool import DatasetRef
+from repro.provision import LifetimeClass, ProvisioningService, StorageSpec
+from repro.runtime import FaultInjector, FaultSpec
+
+GB = 1e9
+TB = 1e12
+
+
+# -- naive model for the indexed ledger --------------------------------------
+class NaiveScheduler:
+    """The pre-index semantics, literally: dict free pools, full sorts and
+    min-scans per operation. The property test holds the real scheduler to
+    bit-for-bit equality with this."""
+
+    def __init__(self, cluster, policy):
+        self.cluster = cluster
+        self.policy = policy
+        self.free_compute = {n.node_id: n for n in cluster.compute_nodes}
+        self.free_storage = {n.node_id: n for n in cluster.storage_nodes}
+
+    def resolve(self, req, assume_empty=False):
+        if req.nodes is not None:
+            return req.nodes
+        if assume_empty or not self.free_storage:
+            candidates = self.cluster.storage_nodes
+        else:
+            candidates = tuple(self.free_storage.values())
+        if req.capacity_bytes is not None:
+            weakest = min(candidates, key=self.policy.node_capacity_bytes)
+            return self.policy.nodes_for_capacity(weakest, req.capacity_bytes)
+        weakest = min(candidates, key=self.policy.node_capability_bw)
+        return self.policy.nodes_for_capability(weakest, req.capability_bw)
+
+    def grant(self, n_compute, n_storage):
+        compute = [self.free_compute.pop(k) for k in sorted(self.free_compute)[:n_compute]]
+        storage = [self.free_storage.pop(k) for k in sorted(self.free_storage)[:n_storage]]
+        return compute, storage
+
+    def release(self, compute, storage):
+        for n in compute:
+            self.free_compute[n.node_id] = n
+        for n in storage:
+            self.free_storage[n.node_id] = n
+
+    def weakest_free(self):
+        if not self.free_storage:
+            return (None, None)
+        nodes = tuple(self.free_storage.values())
+        return (
+            min(self.policy.node_capacity_bytes(n) for n in nodes),
+            min(self.policy.node_capability_bw(n) for n in nodes),
+        )
+
+
+def _heterogeneous_cluster(seed: int, n_storage: int) -> ClusterSpec:
+    rng = random.Random(seed)
+    nodes = []
+    for i in range(n_storage):
+        nid = f"s{i:03d}"
+        spec = DiskSpec(
+            f"d{i}",
+            capacity_bytes=rng.choice([2, 4, 6, 10]) * TB,
+            read_bw=rng.choice([2, 4, 6]) * GB,
+            write_bw=rng.choice([1, 2, 3]) * GB,
+        )
+        disks = tuple(Disk(nid, d, spec) for d in range(rng.randint(1, 3)))
+        nodes.append(StorageNode(nid, disks))
+    return ClusterSpec(
+        name="hetero-prop",
+        compute_nodes=tuple(ComputeNode(f"c{i:03d}") for i in range(8)),
+        storage_nodes=tuple(nodes),
+        interconnect=ARIES,
+    )
+
+
+def _random_request(rng) -> StorageRequest:
+    kind = rng.randrange(3)
+    if kind == 0:
+        return StorageRequest(nodes=rng.randint(1, 3))
+    if kind == 1:
+        return StorageRequest(capacity_bytes=rng.uniform(1, 40) * TB)
+    return StorageRequest(capability_bw=rng.uniform(1, 20) * GB)
+
+
+def _ledger_trace(seed: int, n_ops: int = 120) -> None:
+    rng = random.Random(seed)
+    cluster = _heterogeneous_cluster(seed, n_storage=rng.randint(2, 9))
+    sched = Scheduler(cluster)
+    model = NaiveScheduler(cluster, sched.policy)
+    live = []          # (Allocation, model compute, model storage)
+    for _ in range(n_ops):
+        assert set(sched._free_compute) == set(model.free_compute)
+        assert set(sched._free_storage) == set(model.free_storage)
+        assert (sched.free_min_capacity(), sched.free_min_bandwidth()) == (
+            model.weakest_free()
+        )
+        req = _random_request(rng)
+        assert sched.resolve_storage_nodes(req, assume_empty=True) == model.resolve(
+            req, assume_empty=True
+        )
+        assert sched.resolve_storage_nodes(req) == model.resolve(req)
+        if live and (rng.random() < 0.45 or rng.random() < 0.1 * len(live)):
+            alloc, mc, ms = live.pop(rng.randrange(len(live)))
+            sched.release(alloc)
+            model.release(mc, ms)
+            continue
+        job = JobRequest(f"job{_}", rng.randint(0, 3), storage=req)
+        try:
+            alloc = sched.submit(job)
+        except AllocationError:
+            # the model must agree it cannot fit
+            n_storage = model.resolve(req)
+            assert (
+                job.n_compute > len(model.free_compute)
+                or n_storage > len(model.free_storage)
+            )
+            continue
+        mc, ms = model.grant(job.n_compute, model.resolve(req))
+        assert [n.node_id for n in alloc.compute_nodes] == [n.node_id for n in mc]
+        assert [n.node_id for n in alloc.storage_nodes] == [n.node_id for n in ms]
+        live.append((alloc, mc, ms))
+
+
+def test_indexed_ledger_matches_naive_model_seeded():
+    for seed in range(12):
+        _ledger_trace(seed)
+
+
+def test_indexed_ledger_matches_naive_model_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import strategies as st
+
+    @hyp.settings(max_examples=40, deadline=None)
+    @hyp.given(st.integers(min_value=0, max_value=10_000))
+    def check(seed):
+        _ledger_trace(seed, n_ops=60)
+
+    check()
+
+
+# -- determinism regressions: legacy vs indexed dispatch ---------------------
+def _mixed_specs(seed: int, n: int) -> list:
+    rng = random.Random(seed)
+    specs = []
+    for i in range(n):
+        name = f"job{i:03d}"
+        r = rng.random()
+        if r < 0.25:
+            # <= 2 storage nodes: dom keeps 4 and the campaign pool pins
+            # one, so even FIFO's blocked head can always eventually run
+            storage = StorageSpec(
+                name, nodes=rng.randint(1, 2), managers=("ephemeralfs",),
+                stage_in_bytes=rng.uniform(1, 40) * GB,
+                stage_out_bytes=rng.uniform(0, 10) * GB,
+            )
+            spec = WorkflowSpec(name, rng.randint(1, 6), storage_spec=storage,
+                                run_time_s=rng.uniform(5, 120), max_retries=2)
+        elif r < 0.45:
+            storage = StorageSpec(
+                name, capacity_bytes=rng.choice([5, 12, 20]) * TB,
+                managers=("ephemeralfs",), stage_in_bytes=8 * GB,
+            )
+            spec = WorkflowSpec(name, rng.randint(1, 4), storage_spec=storage,
+                                run_time_s=rng.uniform(5, 60))
+        elif r < 0.6:
+            storage = StorageSpec(
+                name, bandwidth=rng.choice([4, 9]) * GB,
+                managers=("ephemeralfs",), stage_in_bytes=2 * GB,
+            )
+            spec = WorkflowSpec(name, rng.randint(1, 4), storage_spec=storage,
+                                run_time_s=rng.uniform(5, 60))
+        elif r < 0.75:
+            ds = DatasetRef(f"d{rng.randint(0, 5)}", (5 + 3 * rng.randint(0, 4)) * GB)
+            spec = WorkflowSpec(name, rng.randint(1, 3), use_pool=True,
+                                datasets=(ds,), stage_in_bytes=rng.uniform(0, 5) * GB,
+                                run_time_s=rng.uniform(5, 60))
+        elif r < 0.9:
+            spec = WorkflowSpec(name, rng.randint(1, 8), run_time_s=rng.uniform(5, 60))
+        else:
+            storage = StorageSpec(
+                name, capacity_bytes=2 * TB, managers=("globalfs", "ephemeralfs"),
+                stage_in_bytes=1 * GB,
+            )
+            spec = WorkflowSpec(name, rng.randint(1, 4), storage_spec=storage,
+                                run_time_s=rng.uniform(5, 60))
+        specs.append(spec)
+    return specs
+
+
+def _campaign_fingerprint(policy_name: str, incremental: bool, seed: int,
+                          n_jobs: int, cluster_fn):
+    orch = Orchestrator(
+        cluster_fn(),
+        faults=FaultInjector(
+            FaultSpec(stage_in_fail_p=0.08, run_fail_p=0.05, seed=seed)
+        ),
+        incremental=incremental,
+    )
+    mgr = orch.enable_pools(ttl_s=500.0)
+    mgr.create_pool(nodes=1, cap_bytes=60 * GB)
+    if policy_name == "fifo":
+        orch.policy = FIFOPolicy()
+    elif policy_name == "backfill":
+        orch.policy = BackfillPolicy()
+    elif policy_name == "storage-aware":
+        orch.policy = StorageAwarePolicy(aging_s=200.0)
+    else:
+        orch.policy = DataAwarePolicy(orch.provision, aging_s=200.0)
+    specs = _mixed_specs(seed, n_jobs)
+    times = poisson_arrivals(1.0, len(specs), seed=seed)
+    jobs = orch.run_campaign(specs, submit_times=list(times))
+    assert all(j.done for j in jobs)
+    return [
+        (
+            j.spec.name,
+            tuple(j.history),              # (state, virtual time) pairs
+            tuple(j.alloc_history),        # granted node ids + pool per attempt
+            j.attempt,
+            j.failure_phase,
+        )
+        for j in jobs
+    ]
+
+
+@pytest.mark.parametrize(
+    "policy_name", ["fifo", "backfill", "storage-aware", "data-aware"]
+)
+def test_indexed_dispatch_is_bit_identical_to_legacy(policy_name):
+    """The tentpole's determinism guarantee: 500 seeded jobs (faults,
+    retries, pools, Poisson arrivals) produce identical histories and
+    allocation node-ids through both dispatchers."""
+    legacy = _campaign_fingerprint(policy_name, False, 42, 500, dom_cluster)
+    indexed = _campaign_fingerprint(policy_name, True, 42, 500, dom_cluster)
+    assert legacy == indexed
+
+
+def test_indexed_dispatch_matches_legacy_on_larger_cluster():
+    for policy_name in ("backfill", "data-aware"):
+        legacy = _campaign_fingerprint(
+            policy_name, False, 7, 200, lambda: tpu_pod_cluster(24, 8)
+        )
+        indexed = _campaign_fingerprint(
+            policy_name, True, 7, 200, lambda: tpu_pod_cluster(24, 8)
+        )
+        assert legacy == indexed
+
+
+def test_allocations_hand_out_lowest_node_ids_first():
+    orch = Orchestrator(synthetic_cluster(8, 4))
+    job = orch.submit(
+        WorkflowSpec(
+            "j", 3,
+            storage_spec=StorageSpec("j", nodes=2, managers=("ephemeralfs",)),
+        )
+    )
+    orch.engine.run()
+    compute_ids, storage_ids, pool_id = job.alloc_history[0]
+    assert compute_ids == ("cn00000", "cn00001", "cn00002")
+    assert storage_ids == ("sn00000", "sn00001")
+    assert pool_id is None
+
+
+# -- engine: at_many + configurable backstop ---------------------------------
+def test_at_many_matches_sequential_at():
+    fired_a, fired_b = [], []
+    eng_a, eng_b = SimEngine(), SimEngine()
+    events = [(5.0, "x"), (1.0, "y"), (5.0, "z"), (2.0, "w")]
+    for t, tag in events:
+        eng_a.at(t, (lambda g: lambda: fired_a.append(g))(tag))
+    eng_b.at_many(
+        (t, (lambda g: lambda: fired_b.append(g))(tag)) for t, tag in events
+    )
+    eng_a.run()
+    eng_b.run()
+    assert fired_a == fired_b == ["y", "w", "x", "z"]
+
+
+def test_at_many_rejects_past_times():
+    eng = SimEngine(start=10.0)
+    with pytest.raises(ValueError):
+        eng.at_many([(11.0, lambda: None), (9.0, lambda: None)])
+
+
+def test_run_max_events_none_disables_backstop():
+    eng = SimEngine()
+    count = [0]
+
+    def tick():
+        count[0] += 1
+        if count[0] < 2_000:
+            eng.after(1.0, tick)
+
+    eng.after(1.0, tick)
+    eng.run(max_events=None)
+    assert count[0] == 2_000
+
+
+def test_run_campaign_max_events_scales_with_jobs():
+    """A campaign bigger than the engine's fixed 1M default must not trip
+    the backstop; an explicit tiny cap still does."""
+    orch = Orchestrator(synthetic_cluster(4, 2))
+    specs = [WorkflowSpec(f"j{i}", 1, run_time_s=1.0) for i in range(40)]
+    with pytest.raises(RuntimeError):
+        Orchestrator(synthetic_cluster(4, 2)).run_campaign(
+            list(specs), max_events=10
+        )
+    jobs = orch.run_campaign(specs)
+    assert all(j.done for j in jobs)
+
+
+# -- negotiation caching -----------------------------------------------------
+def test_negotiation_cache_hits_for_repeated_spec_shapes():
+    svc = ProvisioningService(dom_cluster())
+    offers = [
+        svc.negotiate(
+            StorageSpec(f"job{i}", nodes=2, managers=("ephemeralfs",))
+        )
+        for i in range(50)
+    ]
+    assert len({o.backend for o in offers}) == 1
+    assert svc.stats.negotiations == 50
+    assert svc.stats.negotiations_cached == 49
+    assert all(o == offers[0] for o in offers)
+
+
+def test_negotiation_cache_failures_reraise_with_caller_name():
+    from repro.provision import NegotiationError
+
+    svc = ProvisioningService(dom_cluster())
+    bad = dict(nodes=100, managers=("ephemeralfs",))
+    with pytest.raises(NegotiationError, match="alpha"):
+        svc.negotiate(StorageSpec("alpha", **bad))
+    with pytest.raises(NegotiationError, match="beta"):
+        svc.negotiate(StorageSpec("beta", **bad))
+    assert svc.stats.negotiations_cached == 1
+    assert svc.stats.failed_negotiations == 2
+
+
+def test_pooled_offers_invalidate_on_pool_state_change():
+    svc = ProvisioningService(dom_cluster())
+    pools = svc.ensure_pools()
+    spec = StorageSpec(
+        "pooled", lifetime=LifetimeClass.POOLED, managers=("ephemeralfs",),
+        datasets=(DatasetRef("d", 10 * GB),),
+    )
+    from repro.provision import NegotiationError
+
+    with pytest.raises(NegotiationError):
+        svc.negotiate(spec)          # no active pool yet
+    pools.create_pool(nodes=2)
+    offer = svc.negotiate(spec)      # epoch moved: re-scored, now feasible
+    assert offer.backend == "ephemeralfs"
+    # stable pool state: the identical shape is now a cache hit
+    before = svc.stats.negotiations_cached
+    svc.negotiate(StorageSpec(
+        "pooled2", lifetime=LifetimeClass.POOLED, managers=("ephemeralfs",),
+        datasets=(DatasetRef("d", 10 * GB),),
+    ))
+    assert svc.stats.negotiations_cached == before + 1
+
+
+def test_ephemeral_offers_cached_across_free_pool_churn():
+    """EPHEMERAL offers are sized against the whole inventory, so granting
+    and releasing nodes must not invalidate them."""
+    svc = ProvisioningService(dom_cluster())
+    spec = StorageSpec("a", capacity_bytes=10 * TB, managers=("ephemeralfs",))
+    svc.negotiate(spec)
+    session = svc.open_session(
+        StorageSpec("hold", nodes=2, managers=("ephemeralfs",))
+    )
+    svc.negotiate(StorageSpec("b", capacity_bytes=10 * TB, managers=("ephemeralfs",)))
+    session.release()
+    svc.negotiate(StorageSpec("c", capacity_bytes=10 * TB, managers=("ephemeralfs",)))
+    assert svc.stats.negotiations_cached == 2
+
+
+# -- pool-reap counter + coalescing ------------------------------------------
+def test_reap_counter_tracks_pool_waiting_jobs():
+    orch = Orchestrator(dom_cluster())
+    mgr = orch.enable_pools(ttl_s=50.0)
+    mgr.create_pool(nodes=2)
+    ds = DatasetRef("d", 5 * GB)
+    specs = [
+        WorkflowSpec(f"p{i}", 1, use_pool=True, datasets=(ds,), run_time_s=10.0)
+        for i in range(4)
+    ]
+    assert orch._pool_wait_n == 0
+    for s in specs:
+        orch.submit(s)
+    orch.engine.run()
+    assert orch._pool_wait_n == 0                 # every pooled job ran
+    # TTL elapsed with nothing waiting: the pool must have been reaped
+    assert not mgr.active_pools
+    assert mgr.stats.pools_retired == 1
+
+
+def test_reap_events_coalesce_per_fire_time():
+    orch = Orchestrator(dom_cluster())
+    mgr = orch.enable_pools(ttl_s=100.0)
+    mgr.create_pool(nodes=2)
+    ds = DatasetRef("d", 5 * GB)
+    # both leases release at the same virtual instant -> one pending reap
+    specs = [
+        WorkflowSpec(f"p{i}", 1, use_pool=True, datasets=(ds,), run_time_s=10.0)
+        for i in range(2)
+    ]
+    for s in specs:
+        orch.submit(s)
+    orch.engine.run(until=30.0)
+    assert all(j.done for j in orch.jobs)
+    assert len(orch._reap_times) == len(set(orch._reap_times))
+    assert len(orch._reap_times) <= 1
+    orch.engine.run()
+    assert not mgr.active_pools
+
+
+def test_reap_holds_while_pool_job_still_queued():
+    """A future-arrival pooled job must keep the TTL reaper from tearing
+    the pool down (the old O(jobs) scan, now a counter)."""
+    orch = Orchestrator(dom_cluster())
+    mgr = orch.enable_pools(ttl_s=20.0)
+    mgr.create_pool(nodes=2)
+    ds = DatasetRef("d", 5 * GB)
+    first = orch.submit(WorkflowSpec("now", 1, use_pool=True, datasets=(ds,),
+                                     run_time_s=5.0))
+    late = orch.submit(
+        WorkflowSpec("late", 1, use_pool=True, datasets=(ds,), run_time_s=5.0),
+        at=200.0,
+    )
+    orch.engine.run()
+    assert first.done and late.done
+    assert late.state.value == "done"
+    assert late.dataset_hits == 1     # pool survived to serve the late job
+
+
+def test_custom_fault_injector_subclass_is_always_consulted():
+    """The fault-free hot-path bypass must apply only to the stock
+    injector: a subclass overriding trip() fires even with a
+    zero-probability spec."""
+
+    class ScriptedFaults(FaultInjector):
+        def trip(self, job_name, phase):
+            return phase == "run" and job_name == "victim"
+
+    orch = Orchestrator(dom_cluster(), faults=ScriptedFaults())
+    victim = orch.submit(WorkflowSpec("victim", 1, run_time_s=5.0, max_retries=0))
+    bystander = orch.submit(WorkflowSpec("ok", 1, run_time_s=5.0))
+    orch.engine.run()
+    assert victim.state.value == "failed" and victim.failure_phase == "run"
+    assert bystander.state.value == "done"
+
+
+# -- dispatch equivalence under custom (non-incremental) policies ------------
+def test_custom_policy_falls_back_to_legacy_dispatch():
+    class ReversePolicy(FIFOPolicy):
+        incremental = False
+
+        def order(self, queue, scheduler, now):
+            return list(reversed(queue))
+
+    orch = Orchestrator(dom_cluster(), policy=ReversePolicy())
+    assert orch._dq is None           # legacy path selected automatically
+    specs = [WorkflowSpec(f"j{i}", 2, run_time_s=5.0) for i in range(6)]
+    jobs = orch.run_campaign(specs)
+    assert all(j.done for j in jobs)
+
+
+def test_forcing_incremental_with_legacy_policy_raises():
+    class Custom(FIFOPolicy):
+        incremental = False
+
+    with pytest.raises(ValueError):
+        Orchestrator(dom_cluster(), policy=Custom(), incremental=True)
+
+
+def test_scheduler_epoch_bumps_on_grant_and_release():
+    sched = Scheduler(dom_cluster())
+    e0 = sched.epoch
+    alloc = sched.submit(JobRequest("j", 2, storage=StorageRequest(nodes=1)))
+    assert sched.epoch == e0 + 1
+    sched.release(alloc)
+    assert sched.epoch == e0 + 2
+
+
+def test_stock_sizing_fast_path_matches_policy_arithmetic():
+    sched = Scheduler(synthetic_cluster(4, 6))
+    node = sched.cluster.storage_nodes[0]
+    for cap in (1 * TB, 5 * TB, 23 * TB):
+        expect = max(1, math.ceil(cap / sched.policy.node_capacity_bytes(node)))
+        assert sched.resolve_storage_nodes(StorageRequest(capacity_bytes=cap)) == expect
