@@ -1,0 +1,212 @@
+"""Checkpoint-aware requeue vs restart-from-scratch on a faulty campaign.
+
+The fault-tolerance acceptance scenario: a seeded campaign where a third of
+the jobs trip a fault at the ``run`` phase. The baseline replays every
+faulted job from zero — full re-provision, full re-stage, full run — which
+is what PR 1-4 always did. The checkpointing mode gives every job a commit
+cadence (`WorkflowSpec.checkpoint_every_s`, each commit paying a modeled
+checkpoint write against the session's bandwidth): faulted jobs requeue as
+*resume* attempts that pay only the uncommitted run remainder and re-stage
+only data that was actually lost (warm-node landings skip stage-in
+entirely; cold landings re-read the checkpoint from the global FS).
+
+Faults are *scripted* per job name (seeded), so both modes fight exactly
+the same fault pattern — the comparison isolates the recovery policy.
+Asserted here (so ``benchmarks/run.py`` fails loudly on regression):
+checkpointing's makespan AND its re-staged bytes are strictly below the
+restart-from-scratch baseline. A third scenario exercises preemption: with
+a `PreemptionPolicy` installed, late high-priority arrivals
+checkpoint-and-release running victims and start strictly sooner than in
+the no-preemption replay.
+
+``derived`` reports both modes' virtual makespan, staged bytes, and the
+work-saved counters; the JSON trajectory lands in
+``benchmarks/out/fault_tolerance.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import random
+
+from repro.core import synthetic_cluster
+from repro.orchestrator import (
+    BackfillPolicy,
+    JobState,
+    Orchestrator,
+    PreemptionPolicy,
+    WorkflowSpec,
+    summarize,
+)
+from repro.provision import StorageSpec
+from repro.runtime import FaultInjector
+
+from .common import time_us
+
+GB = 1e9
+N_JOBS = 60
+SEED = 7
+FAULT_FRACTION = 0.35
+OUT_PATH = os.path.join(os.path.dirname(__file__), "out", "fault_tolerance.json")
+
+
+class ScriptedRunFaults(FaultInjector):
+    """Trips the run phase once for a fixed, seeded subset of job names —
+    identical across both campaign modes by construction."""
+
+    def __init__(self, names):
+        super().__init__()
+        self._left = {n: 1 for n in names}
+
+    def trip(self, job_name, phase):
+        if phase == "run" and self._left.get(job_name, 0) > 0:
+            self._left[job_name] -= 1
+            self.trips.append((job_name, phase))
+            return True
+        return False
+
+
+def _faulty_names():
+    rng = random.Random(SEED)
+    names = [f"job{i:03d}" for i in range(N_JOBS)]
+    return frozenset(rng.sample(names, int(N_JOBS * FAULT_FRACTION)))
+
+
+def _specs(*, checkpointing: bool, priorities: bool = False):
+    rng = random.Random(SEED + 1)
+    specs = []
+    for i in range(N_JOBS):
+        name = f"job{i:03d}"
+        specs.append(
+            WorkflowSpec(
+                name,
+                1 + i % 4,
+                storage_spec=StorageSpec(
+                    name,
+                    nodes=1 + i % 2,
+                    managers=("ephemeralfs",),
+                    stage_in_bytes=rng.uniform(5, 25) * GB,
+                    stage_out_bytes=2 * GB,
+                ),
+                run_time_s=rng.uniform(60, 180),
+                max_retries=3,
+                checkpoint_every_s=20.0 if checkpointing else None,
+                checkpoint_bytes=2 * GB if checkpointing else 0.0,
+                priority=(5 if priorities and i % 10 == 9 else 0),
+            )
+        )
+    return specs
+
+
+def _campaign(*, checkpointing: bool, priorities: bool = False,
+              preemption: bool = False):
+    orch = Orchestrator(
+        synthetic_cluster(24, 8),
+        policy=BackfillPolicy(),
+        faults=ScriptedRunFaults(_faulty_names()),
+        preemption=PreemptionPolicy() if preemption else None,
+    )
+    specs = _specs(checkpointing=checkpointing, priorities=priorities)
+    times = [i * 2.0 for i in range(len(specs))]
+    jobs = orch.run_campaign(specs, submit_times=times)
+    assert all(j.state is JobState.DONE for j in jobs), "campaign left stragglers"
+    rep = summarize(jobs, n_storage_nodes=8)
+    hi_waits = [
+        b.queue_wait_s
+        for b, j in zip(rep.breakdowns, jobs)
+        if j.spec.priority > 0
+    ]
+    return rep, hi_waits
+
+
+def rows():
+    reps = {}
+
+    def _run(key, **kw):
+        reps[key] = _campaign(**kw)
+
+    us_base = time_us(lambda: _run("base", checkpointing=False), repeat=2)
+    us_ckpt = time_us(lambda: _run("ckpt", checkpointing=True), repeat=2)
+    us_pre = time_us(
+        lambda: _run("pre", checkpointing=True, priorities=True, preemption=True),
+        repeat=2,
+    )
+    _run("pre_off", checkpointing=True, priorities=True, preemption=False)
+
+    base, _ = reps["base"]
+    ckpt, _ = reps["ckpt"]
+    pre, pre_waits = reps["pre"]
+    _, off_waits = reps["pre_off"]
+
+    # acceptance: same faults, strictly less wall time and re-staged traffic
+    assert ckpt.makespan_s < base.makespan_s, (
+        f"checkpointing makespan {ckpt.makespan_s:.0f}s not under "
+        f"restart-from-scratch {base.makespan_s:.0f}s"
+    )
+    assert ckpt.staged_in_bytes < base.staged_in_bytes, (
+        f"checkpointing re-staged {ckpt.staged_in_bytes / GB:.0f}GB, "
+        f"baseline {base.staged_in_bytes / GB:.0f}GB"
+    )
+    assert ckpt.resumes > 0 and ckpt.run_s_saved > 0
+    # preemption: the high-priority arrivals waited strictly less than in
+    # the identical campaign without a preemption policy
+    assert pre.preemptions > 0, "no preemption exercised"
+    assert sum(pre_waits) < sum(off_waits), (
+        f"priority waits {sum(pre_waits):.0f}s not under "
+        f"no-preemption {sum(off_waits):.0f}s"
+    )
+
+    saved_frac = 1.0 - ckpt.staged_in_bytes / base.staged_in_bytes
+    results = {
+        "benchmark": "fault_tolerance_bench",
+        "n_jobs": N_JOBS,
+        "fault_fraction": FAULT_FRACTION,
+        "baseline": {
+            "makespan_s": base.makespan_s,
+            "staged_in_bytes": base.staged_in_bytes,
+            "retries": base.total_retries,
+        },
+        "checkpointing": {
+            "makespan_s": ckpt.makespan_s,
+            "staged_in_bytes": ckpt.staged_in_bytes,
+            "retries": ckpt.total_retries,
+            "checkpoints_committed": ckpt.checkpoints_committed,
+            "resumes": ckpt.resumes,
+            "run_s_saved": ckpt.run_s_saved,
+            "stage_in_bytes_saved": ckpt.stage_in_bytes_saved,
+        },
+        "preemption": {
+            "preemptions": pre.preemptions,
+            "priority_wait_s": sum(pre_waits),
+            "priority_wait_s_without": sum(off_waits),
+        },
+    }
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(results, f, indent=2)
+
+    return [
+        (
+            f"fault_tol/restart-{N_JOBS}jobs",
+            us_base,
+            f"makespan={base.makespan_s:.0f}s "
+            f"staged_in={base.staged_in_bytes / GB:.0f}GB "
+            f"retries={base.total_retries}",
+        ),
+        (
+            f"fault_tol/checkpointing-{N_JOBS}jobs",
+            us_ckpt,
+            f"makespan={ckpt.makespan_s:.0f}s "
+            f"staged_in={ckpt.staged_in_bytes / GB:.0f}GB (-{saved_frac:.0%}) "
+            f"resumes={ckpt.resumes} run_saved={ckpt.run_s_saved:.0f}s "
+            f"ckpts={ckpt.checkpoints_committed}",
+        ),
+        (
+            "fault_tol/preemption",
+            us_pre,
+            f"preemptions={pre.preemptions} "
+            f"hi-pri wait {sum(pre_waits):.0f}s vs {sum(off_waits):.0f}s "
+            f"without; json={OUT_PATH}",
+        ),
+    ]

@@ -16,6 +16,7 @@ def main() -> None:
         campaign_scale_bench,
         checkpoint_io,
         deployment,
+        fault_tolerance_bench,
         haccio,
         ior_fpp,
         ior_shared,
@@ -41,6 +42,7 @@ def main() -> None:
         ("pool", pool_bench),              # beyond-paper persistent pools
         ("provision", provision_bench),    # StorageSession API negotiation
         ("campaign_scale", campaign_scale_bench),  # 50k-job engine scaling
+        ("fault_tolerance", fault_tolerance_bench),  # checkpoint resume + preemption
         ("kernels", kernels_bench),
         ("roofline", roofline),            # §Roofline (reads dry-run artifacts)
     ]

@@ -122,6 +122,12 @@ class Scheduler:
         self._free_compute = {n.node_id: n for n in cluster.compute_nodes}
         self._free_storage = {n.node_id: n for n in cluster.storage_nodes}
         self._live: dict[int, Allocation] = {}
+        # reservation ledger: live allocation id -> projected release time,
+        # reported by callers with a duration model (the orchestrator's
+        # session costs). Feeds earliest_fit/projected_free_at — the EASY
+        # backfill reservation questions. Purely advisory: never consulted
+        # by grants or releases themselves.
+        self._projected: dict[int, float] = {}
         self._next_id = itertools.count(1)
         #: bumped on every grant/release batch (cache-invalidation signal)
         self.epoch = 0
@@ -321,6 +327,48 @@ class Scheduler:
             return None
         return self._grant(req, n_storage)
 
+    # -- reservation ledger (EASY backfill substrate) ------------------------
+    def note_projected_release(self, alloc: Allocation, t: float) -> None:
+        """Record when ``alloc`` is expected to release (from the caller's
+        duration model). Overwrites any earlier projection; dropped
+        automatically on :meth:`release`. No-op for unknown allocations."""
+        if alloc.job_id in self._live:
+            self._projected[alloc.job_id] = t
+
+    def projected_release_of(self, alloc: Allocation) -> Optional[float]:
+        return self._projected.get(alloc.job_id)
+
+    def projected_free_at(self, t: float) -> tuple[int, int]:
+        """(compute, storage) node counts of live allocations projected to
+        have released by ``t``. Allocations with no projection (persistent
+        pools above all) contribute nothing — they may never release."""
+        dc = ds = 0
+        for jid, tr in self._projected.items():
+            if tr <= t:
+                a = self._live[jid]
+                dc += len(a.compute_nodes)
+                ds += len(a.storage_nodes)
+        return dc, ds
+
+    def earliest_fit(
+        self, n_compute: int, n_storage: int, now: float
+    ) -> Optional[float]:
+        """Earliest instant the demand could fit: the current free pool plus
+        live allocations returned in projected-release order. ``None`` when
+        the demand cannot fit even after every *projected* release — some
+        needed nodes are held by allocations with no release projection, so
+        no start time can be promised."""
+        fc, fs = len(self._free_compute), len(self._free_storage)
+        if fc >= n_compute and fs >= n_storage:
+            return now
+        for jid, t in sorted(self._projected.items(), key=lambda kv: (kv[1], kv[0])):
+            a = self._live[jid]
+            fc += len(a.compute_nodes)
+            fs += len(a.storage_nodes)
+            if fc >= n_compute and fs >= n_storage:
+                return max(t, now)
+        return None
+
     # -- allocation ----------------------------------------------------------
     def submit(self, req: JobRequest) -> Allocation:
         if req.n_compute > len(self._free_compute):
@@ -363,6 +411,7 @@ class Scheduler:
         if alloc.job_id not in self._live:
             raise AllocationError(f"allocation {alloc.job_id} is not live")
         del self._live[alloc.job_id]
+        self._projected.pop(alloc.job_id, None)
         for n in alloc.compute_nodes:
             self._free_compute[n.node_id] = n
             heapq.heappush(self._compute_ids, n.node_id)

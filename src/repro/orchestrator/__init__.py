@@ -7,6 +7,14 @@ campaign of hundreds of jobs simulates in milliseconds. Campaigns can draw
 arrivals from a Poisson process (`arrivals`) and, with a persistent-pool
 subsystem attached (`Orchestrator.enable_pools`, see ``repro.pool``), route
 jobs to pools already holding their input datasets via `DataAwarePolicy`.
+
+Fault tolerance is a first-class layer (README "Fault tolerance and
+reservations"): checkpointing specs resume from their last committed step
+instead of restarting, `Orchestrator.preempt` checkpoint-and-releases
+RUNNING jobs for higher-priority arrivals (`PreemptionPolicy`), and
+`EasyBackfillPolicy` guarantees the blocked head-of-queue job a reserved
+start no backfill may delay. `Orchestrator.live_report` serves O(1)
+mid-flight campaign snapshots.
 """
 
 from .arrivals import (
@@ -20,16 +28,20 @@ from .lifecycle import (
     TERMINAL_STATES,
     JobRecord,
     JobState,
+    LiveCounters,
     Orchestrator,
+    Reservation,
     WorkflowSpec,
 )
 from .metrics import (
     BREAKDOWN_STATES,
     CampaignReport,
     JobBreakdown,
+    LiveReport,
     PoolReport,
     format_report,
     job_breakdown,
+    live_report,
     pool_report,
     storage_node_utilization,
     summarize,
@@ -37,19 +49,23 @@ from .metrics import (
 from .policies import (
     BackfillPolicy,
     DataAwarePolicy,
+    EasyBackfillPolicy,
     FIFOPolicy,
+    PreemptionPolicy,
     QueuePolicy,
     StorageAwarePolicy,
+    VictimView,
 )
 
 __all__ = [
     "SimEngine",
     "TERMINAL_STATES", "JobRecord", "JobState", "Orchestrator", "WorkflowSpec",
-    "BREAKDOWN_STATES", "CampaignReport", "JobBreakdown", "PoolReport",
-    "format_report", "job_breakdown", "pool_report",
-    "storage_node_utilization", "summarize",
-    "BackfillPolicy", "DataAwarePolicy", "FIFOPolicy", "QueuePolicy",
-    "StorageAwarePolicy",
+    "LiveCounters", "Reservation",
+    "BREAKDOWN_STATES", "CampaignReport", "JobBreakdown", "LiveReport",
+    "PoolReport", "format_report", "job_breakdown", "live_report",
+    "pool_report", "storage_node_utilization", "summarize",
+    "BackfillPolicy", "DataAwarePolicy", "EasyBackfillPolicy", "FIFOPolicy",
+    "PreemptionPolicy", "QueuePolicy", "StorageAwarePolicy", "VictimView",
     "exponential_interarrivals", "mean_interarrival", "poisson_arrivals",
     "replay_trace",
 ]

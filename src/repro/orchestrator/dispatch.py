@@ -47,12 +47,23 @@ def admission_signature(job: "JobRecord") -> tuple:
     """Everything admission can observe about a queued job except its name
     (plus the name for PERSISTENT specs — pool creation is idempotent by
     name, so two PERSISTENT jobs with different names are *not*
-    interchangeable: one may reattach to a live pool the other cannot)."""
+    interchangeable: one may reattach to a live pool the other cannot).
+
+    Resume state (``committed_run_s``, ``staged_nodes``, the restore bytes
+    a cold landing re-reads) is deliberately **excluded**: it moves a
+    session's modeled *time* costs but never its grant/deny answer, so a
+    checkpoint-resuming requeue keeps the same admission-signature bucket
+    rank as a fresh attempt of the same spec — which is what keeps
+    one-probe-per-bucket dispatch sound with fault tolerance on.
+
+    ``priority`` *is* included — not because admission sees it, but because
+    every stock policy ranks it ahead of its own terms, and in-bucket order
+    is maintained priority-blind; same-priority jobs are still one bucket."""
     sspec = job.sspec
     sig = sspec.signature()
     if sspec.lifetime is LifetimeClass.PERSISTENT:
         sig = sig + (sspec.name,)
-    return (job.spec.n_compute, sig)
+    return (job.spec.n_compute, job.spec.priority, sig)
 
 
 class _Entry:

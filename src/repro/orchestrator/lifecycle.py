@@ -27,6 +27,30 @@ resolves them to a lease on a live persistent pool, the PROVISIONING slot
 costs only the lease attach, TEARDOWN is free (the pool outlives the job),
 and STAGING_IN moves only the dataset bytes *not already resident* on the
 granted pool. Datasets staged by one job are cache hits for the next.
+
+**Fault tolerance** (all opt-in; with every knob off the engine replays
+PR 4 campaigns bit-for-bit):
+
+* *Checkpoint-aware requeue* — a spec with ``checkpoint_every_s`` commits
+  run progress on that cadence, each commit paying a modeled checkpoint
+  write against the session's bandwidth (``checkpoint_bytes`` through the
+  perfmodel; the `repro.checkpoint` burst-then-drain story priced for the
+  virtual clock). A fault at the ``run`` phase then requeues a **resume
+  attempt**: it pays only the uncommitted remainder of ``run_time_s``,
+  re-reads ``checkpoint_bytes`` from the global FS when it lands cold, and
+  re-stages only inputs that were actually lost — pool leases re-attach
+  warm (the catalog knows what is still resident), and an ephemeral grant
+  landing entirely on the nodes that staged it skips stage-in outright.
+* *Preemption* — :meth:`Orchestrator.preempt` checkpoint-and-releases a
+  RUNNING victim (progress commits through a final checkpoint write) and
+  requeues it as a resume attempt that does not count against
+  ``max_retries``. With a :class:`~.policies.PreemptionPolicy` installed,
+  a blocked higher-``priority`` arrival triggers victim selection
+  automatically (lowest priority first, most progress protected).
+* *EASY reservations* — `EasyBackfillPolicy` books the blocked
+  head-of-queue job a start time from the scheduler's projected-release
+  ledger (fed by every started session's modeled span) and backfills only
+  jobs that provably cannot delay it.
 """
 
 from __future__ import annotations
@@ -35,10 +59,11 @@ import dataclasses
 import enum
 import heapq
 import itertools
+import math
 from typing import Optional
 
 from ..core.perfmodel import FSDeployment, dom_lustre
-from ..core.scheduler import Allocation, JobRequest, StorageRequest
+from ..core.scheduler import Allocation, AllocationError, JobRequest, StorageRequest
 from ..pool.catalog import DatasetRef, total_bytes
 from ..pool.manager import PoolManager
 from ..pool.pool import Lease
@@ -50,10 +75,10 @@ from ..provision import (
     StorageSession,
     StorageSpec,
 )
-from ..runtime.fault import FaultInjector
+from ..runtime.fault import FaultInjector, HeartbeatMonitor
 from .dispatch import DispatchQueue
 from .engine import SimEngine
-from .policies import FIFOPolicy, QueuePolicy
+from .policies import FIFOPolicy, PreemptionPolicy, QueuePolicy, VictimView
 
 
 class JobState(enum.Enum):
@@ -98,6 +123,16 @@ class WorkflowSpec:
     datasets: tuple = ()              # tuple[DatasetRef, ...] shared inputs
     use_pool: bool = False
     storage_spec: Optional[StorageSpec] = None
+    #: commit run progress every this many seconds of RUNNING (None: a fault
+    #: at `run` replays the whole run — the pre-checkpointing behavior)
+    checkpoint_every_s: Optional[float] = None
+    #: modeled size of one checkpoint write, charged against the session's
+    #: bandwidth at every commit (and re-read on a cold resume)
+    checkpoint_bytes: float = 0.0
+    #: preemption rank: a blocked arrival with higher priority may
+    #: checkpoint-and-release lower-priority RUNNING jobs (see preempt())
+    priority: int = 0
+    preemptible: bool = True
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "datasets", tuple(self.datasets))
@@ -105,6 +140,15 @@ class WorkflowSpec:
             raise ValueError(f"negative duration/bytes in spec {self.name!r}")
         if self.max_retries < 0:
             raise ValueError("max_retries must be >= 0")
+        if self.checkpoint_every_s is not None and self.checkpoint_every_s <= 0:
+            raise ValueError(f"{self.name!r}: checkpoint_every_s must be positive")
+        if self.checkpoint_bytes < 0:
+            raise ValueError(f"{self.name!r}: negative checkpoint_bytes")
+        if self.checkpoint_bytes and self.checkpoint_every_s is None:
+            raise ValueError(
+                f"{self.name!r}: checkpoint_bytes without checkpoint_every_s "
+                "would never be written; set a cadence"
+            )
         if self.storage_spec is not None:
             if (
                 self.storage is not None
@@ -171,6 +215,13 @@ class WorkflowSpec:
         return None
 
     @property
+    def fault_tolerant(self) -> bool:
+        """Checkpoint-aware requeue on: RUNNING commits progress on the
+        ``checkpoint_every_s`` cadence and faulted/preempted attempts
+        resume from the last committed step instead of restarting."""
+        return self.checkpoint_every_s is not None
+
+    @property
     def wants_pool(self) -> bool:
         return self.use_pool or (
             self.storage_spec is not None
@@ -233,6 +284,21 @@ class JobRecord:
     #: granted (compute ids, storage ids, pool id) per attempt — the
     #: determinism regressions compare these across dispatch paths
     alloc_history: list = dataclasses.field(default_factory=list)
+    # -- fault tolerance (checkpoint-aware requeue + preemption) -----------
+    committed_run_s: float = 0.0      # run progress durable across attempts
+    checkpoints_committed: int = 0
+    preemptions: int = 0              # checkpoint-and-release requeues
+    resume_attempts: int = 0          # attempts that started with committed work
+    run_s_saved: float = 0.0          # run seconds resumes did not replay
+    #: storage nodes still holding this job's fully staged inputs (and
+    #: checkpoints) from a completed stage-in — a resume landing entirely
+    #: on them skips stage-in (the data-plane analogue of ``warm_nodes``)
+    staged_nodes: frozenset = frozenset()
+    run_token: int = 0                # invalidates in-flight run events
+    _run_base: float = 0.0            # progress committed at segment start
+    _run_t0: float = 0.0              # virtual time current segment began
+    _run_seg_s: float = 0.0           # progress length of current segment
+    _preempt_pending: bool = False    # final checkpoint draining pre-release
     _request: Optional[JobRequest] = None
     _gating: Optional[tuple] = None              # dispatch pre-filter cache
 
@@ -255,6 +321,67 @@ class JobRecord:
         return self.state in TERMINAL_STATES
 
 
+@dataclasses.dataclass(frozen=True)
+class Reservation:
+    """EASY guarantee for a blocked head-of-queue job: its resolved node
+    demand and the promised start instant. ``start_at`` is None when no
+    start can be proven (needed nodes are held by allocations with no
+    release projection) — then nothing backfills at all."""
+
+    job_id: int
+    n_compute: int
+    n_storage: int
+    start_at: Optional[float]
+
+
+@dataclasses.dataclass(slots=True)
+class LiveCounters:
+    """Campaign rollups maintained incrementally on every transition and
+    release, so mid-flight dashboard polls are O(1) instead of the O(jobs)
+    re-scan `metrics.summarize` pays (the batch path remains the reference;
+    `tests/test_fault_tolerance.py` holds the two equal).
+
+    Open storage allocations are folded as two aggregates — node count and
+    node-weighted start-time sums — so busy node-seconds at any instant is
+    ``busy_node_s + now * open_nodes - open_node_start_s`` without walking
+    live jobs."""
+
+    n_jobs: int = 0
+    n_done: int = 0
+    n_failed: int = 0
+    retries: int = 0              # fault requeues (preemptions counted apart)
+    preemptions: int = 0
+    resumes: int = 0              # attempts that started with committed work
+    checkpoints: int = 0
+    run_s_saved: float = 0.0
+    staged_in_bytes: float = 0.0
+    staged_out_bytes: float = 0.0
+    stage_in_saved_bytes: float = 0.0
+    busy_node_s: float = 0.0      # closed storage-allocation intervals
+    open_nodes: int = 0           # sum of n_storage over open allocations
+    open_node_start_s: float = 0.0
+    t_first_submit: Optional[float] = None
+    t_last_event: float = 0.0
+
+    def note_submit(self, t: float) -> None:
+        if self.t_first_submit is None or t < self.t_first_submit:
+            self.t_first_submit = t
+
+    def busy_node_seconds(self, now: float) -> float:
+        return self.busy_node_s + now * self.open_nodes - self.open_node_start_s
+
+    def makespan_s(self, now: float) -> float:
+        if self.t_first_submit is None:
+            return 0.0
+        return max(self.t_last_event, now) - self.t_first_submit
+
+    def utilization(self, n_storage_nodes: int, now: float) -> float:
+        span = self.makespan_s(now)
+        if n_storage_nodes <= 0 or span <= 0:
+            return 0.0
+        return self.busy_node_seconds(now) / (n_storage_nodes * span)
+
+
 class Orchestrator:
     """Runs provisioning campaigns: many jobs through one cluster, queued
     by policy, timed by the perfmodel, perturbed by fault injection. All
@@ -272,6 +399,7 @@ class Orchestrator:
         provision: ProvisioningService | None = None,
         incremental: Optional[bool] = None,
         record_allocations: bool = True,
+        preemption: Optional[PreemptionPolicy] = None,
     ):
         self.engine = engine or SimEngine()
         if provision is None:
@@ -318,6 +446,14 @@ class Orchestrator:
         # head's key). Lets arrival dispatches short-circuit in O(1).
         self._noadmit_state: Optional[tuple] = None
         self._noadmit_head_key: Optional[tuple] = None
+        # fault-tolerant scheduling layer: automatic victim selection for
+        # blocked high-priority arrivals (None: preempt() is manual-only),
+        # live RUNNING index, the EASY reservation last booked by a
+        # reserving policy's scan, and the O(1) campaign counters
+        self._preemption = preemption
+        self._running: dict[int, JobRecord] = {}
+        self.reservation: Optional[Reservation] = None
+        self.counters = LiveCounters()
 
     @property
     def faults(self) -> FaultInjector:
@@ -416,6 +552,8 @@ class Orchestrator:
         )
         self.jobs.append(job)
         self._pool_wait_n += self._pool_waiting(job)
+        self.counters.n_jobs += 1
+        self.counters.note_submit(t)
         return job
 
     def submit(self, spec: WorkflowSpec, at: Optional[float] = None) -> JobRecord:
@@ -446,6 +584,12 @@ class Orchestrator:
         self._transition(job, JobState.QUEUED)
         self._enqueue(job)
         self._dispatch(new_job=job)
+        if (
+            self._preemption is not None
+            and job.state is JobState.QUEUED
+            and job.spec.priority > 0
+        ):
+            self._try_preempt(job)
 
     # -- dispatch loop -------------------------------------------------------
     def _dispatch(self, new_job: Optional[JobRecord] = None) -> None:
@@ -475,12 +619,19 @@ class Orchestrator:
 
     _ADMITTED, _REFUSED, _FAILED = "admitted", "refused", "failed"
 
-    def _probe(self, job: JobRecord) -> str:
-        """One admission attempt against the live cluster (indexed path)."""
-        if not self._admittable_now(job):
+    def _probe(self, job: JobRecord, reservation: Optional[Reservation] = None) -> str:
+        """One admission attempt against the live cluster (indexed path).
+        With a ``reservation``, admission runs under the EASY no-delay
+        proof instead of the plain open (and skips the pre-filter: the
+        proof does its own fit checks)."""
+        if reservation is None and not self._admittable_now(job):
             return self._REFUSED
         try:
-            session = self._try_open(job)
+            session = (
+                self._try_open(job)
+                if reservation is None
+                else self._reserved_try_open(job, reservation)
+            )
         except NegotiationError:
             self._dq.remove(job)
             job.failure_phase = "infeasible"
@@ -491,6 +642,57 @@ class Orchestrator:
         self._dq.remove(job)
         self._start(job, session)
         return self._ADMITTED
+
+    # -- EASY reservations ----------------------------------------------------
+    def _reserve(self, job: JobRecord) -> Reservation:
+        """Book the blocked head its start time: the earliest instant the
+        scheduler's projected-release ledger says its node demand fits."""
+        try:
+            hc, hs = self.scheduler.demand(job.request)
+        except AllocationError:
+            return Reservation(job.job_id, 0, 0, None)
+        t = self.scheduler.earliest_fit(hc, hs, self.engine.now)
+        return Reservation(job.job_id, hc, hs, t)
+
+    def _reserved_try_open(
+        self, job: JobRecord, res: Reservation
+    ) -> Optional[StorageSession]:
+        """Grant a backfill candidate only when it provably cannot delay the
+        reserved head start: either the head's node counts survive at
+        ``start_at`` even if this candidate never releases, or the
+        candidate's own modeled completion lands before the reservation
+        (checked against the live session costs — the grant is handed back
+        when the proof fails). An unprovable reservation backfills nothing."""
+        if res.start_at is None:
+            return None
+        sched = self.scheduler
+        try:
+            cc, cs = sched.demand(job.request)
+        except AllocationError:
+            return None
+        fc, fs = sched.free_counts()
+        if cc > fc or cs > fs:
+            return None                  # does not even fit right now
+        dc, ds = sched.projected_free_at(res.start_at)
+        if fc - cc + dc >= res.n_compute and fs - cs + ds >= res.n_storage:
+            return self._try_open(job)   # leaves the head whole regardless
+        if job.sspec.lifetime is not LifetimeClass.EPHEMERAL:
+            # proving completion-before-reservation needs a trial grant,
+            # and opening a POOLED/PERSISTENT session mutates pool state
+            # (pins, evictions, pool creation): refuse instead of probing
+            return None
+        session = self._try_open(job)
+        if session is None:
+            return None
+        if self.engine.now + self._session_span_s(job, session) <= res.start_at:
+            return session
+        session.release(self.engine.now)   # would delay the head: hand it back
+        # the trial grant never ran: un-count it so session telemetry keeps
+        # meaning "sessions that actually carried a job attempt"
+        stats = self.provision.stats
+        stats.sessions_opened[session.backend] -= 1
+        stats.sessions_released -= 1
+        return None
 
     def _dispatch_indexed(self, new_job: Optional[JobRecord] = None) -> None:
         """Incremental dispatch over the indexed queue.
@@ -507,7 +709,15 @@ class Orchestrator:
         now = self.engine.now
         dq.promote(now)
         state = self._admission_state()
-        if new_job is not None and self._noadmit_state == state:
+        # reserving policies re-scan on every trigger: a lone-arrival probe
+        # would bypass the reservation's no-delay gating, and backfill
+        # verdicts also depend on projected completions, which the
+        # admission state deliberately does not track
+        if (
+            new_job is not None
+            and self._noadmit_state == state
+            and not self.policy.reserving
+        ):
             # Nothing has been freed since a full scan concluded that
             # nothing fits: the arrival is the only new candidate.
             policy = self.policy
@@ -549,8 +759,14 @@ class Orchestrator:
         as legacy always does)."""
         dq = self._dq
         head_blocking = self.policy.head_blocking
-        gate = None if head_blocking else self._admittable_now
+        reserving = self.policy.reserving
+        # reserving policies must see their true first head (the job the
+        # reservation belongs to), so they skip the gate like head-blockers
+        gate = None if (head_blocking or reserving) else self._admittable_now
         while True:
+            reservation = None
+            if reserving:
+                self.reservation = None
             candidates = dq.candidate_heads(now, gate)
             if not candidates:
                 self._noadmit_state = self._admission_state()
@@ -562,12 +778,18 @@ class Orchestrator:
             restart = False
             while candidates:
                 key, seq, job, bucket = heapq.heappop(candidates)
-                outcome = self._probe(job)
+                outcome = self._probe(job, reservation)
                 if outcome is self._REFUSED:
                     if head_blocking:
                         self._noadmit_state = self._admission_state()
                         self._noadmit_head_key = (key, seq)
                         return
+                    if reserving and reservation is None:
+                        # the first refusal in policy order is the queue
+                        # head: book its EASY reservation; later candidates
+                        # are admitted only under its no-delay proof
+                        reservation = self._reserve(job)
+                        self.reservation = reservation
                     continue            # whole bucket refused until a restart
                 if outcome is self._ADMITTED and (
                     self._sizing_signature() != sizing
@@ -586,13 +808,24 @@ class Orchestrator:
 
     def _dispatch_legacy(self) -> None:
         """The pre-index dispatch loop (compatibility fallback for custom
-        policies, and the reference the determinism regressions replay)."""
+        policies, and the reference the determinism regressions replay).
+        Reserving policies get the same EASY gating as the indexed path:
+        the pass's first refusal books the reservation, and the rest of the
+        pass may only backfill around it (each admission restarts the pass,
+        so the reservation is re-derived from fresh state)."""
         started = True
+        reserving = self.policy.reserving
         while started and self._queue:
             started = False
+            reservation = None
+            if reserving:
+                self.reservation = None
             for job in self.policy.order(self._queue, self.scheduler, self.engine.now):
                 try:
-                    session = self._try_open(job)
+                    if reservation is not None:
+                        session = self._reserved_try_open(job, reservation)
+                    else:
+                        session = self._try_open(job)
                 except NegotiationError:
                     # what was feasible at arrival no longer is (e.g. every
                     # pool that could hold the working set was retired):
@@ -605,6 +838,9 @@ class Orchestrator:
                 if session is None:
                     if self.policy.head_blocking:
                         break
+                    if reserving and reservation is None:
+                        reservation = self._reserve(job)
+                        self.reservation = reservation
                     continue
                 self._queue.remove(job)
                 self._start(job, session)
@@ -659,7 +895,11 @@ class Orchestrator:
     def _try_open(self, job: JobRecord) -> Optional[StorageSession]:
         """One declarative call grants everything the job holds: compute
         nodes co-allocated with whatever storage the negotiated backend
-        needs (nodes + deploy, a pool lease, or nothing)."""
+        needs (nodes + deploy, a pool lease, or nothing). Fault-tolerant
+        specs additionally carry their resume state: which nodes still hold
+        the staged inputs, and how many checkpoint bytes a cold landing
+        must read back (time-cost-only — admission answers are unchanged,
+        so resume attempts keep their admission-signature bucket)."""
         sspec = job.sspec
         offer = job.offer
         if offer is None:
@@ -669,12 +909,19 @@ class Orchestrator:
                 # POOLED offers go stale as pools retire/drain, so those
                 # re-negotiate on every dispatch attempt
                 job.offer = offer
+        ft = job.spec.fault_tolerant
         return self.provision.try_open_session(
             sspec,
             n_compute=job.spec.n_compute,
             warm_nodes=job.warm_nodes,
             now=self.engine.now,
             offer=offer,
+            staged_nodes=job.staged_nodes if ft else frozenset(),
+            restore_bytes=(
+                job.spec.checkpoint_bytes
+                if ft and job.committed_run_s > 0
+                else 0.0
+            ),
         )
 
     def _start(self, job: JobRecord, session: StorageSession) -> None:
@@ -700,6 +947,17 @@ class Orchestrator:
             job.dataset_hits += session.lease.hits
             job.dataset_misses += session.lease.misses
         job.fs_model = session.fs_model
+        if session.allocation is not None:
+            n = len(session.allocation.storage_nodes)
+            self.counters.open_nodes += n
+            self.counters.open_node_start_s += n * self.engine.now
+            # feed the EASY reservation ledger: when this attempt should
+            # release, from the session's modeled costs (advisory — faults
+            # and preemptions release earlier, and the ledger self-corrects)
+            self.scheduler.note_projected_release(
+                session.allocation,
+                self.engine.now + self._session_span_s(job, session),
+            )
         self._transition(job, JobState.PROVISIONING)
         eng = self.engine
         eng.at(
@@ -731,17 +989,110 @@ class Orchestrator:
             self._fail_attempt(job, "stage_in")
             return
         session = job.session
+        counters = self.counters
         job.staged_in_bytes += session.stage_in_bytes
+        counters.staged_in_bytes += session.stage_in_bytes
         # saved bytes count only when the stage-in actually completed
         # (a faulted attempt neither staged nor saved anything)
         job.stage_in_saved_bytes += session.saved_bytes
+        counters.stage_in_saved_bytes += session.saved_bytes
         # lease misses are now resident: hits for every later job
         session.mark_staged(self.engine.now)
+        if (
+            job.spec.fault_tolerant
+            and session.lease is None
+            and job.allocation is not None
+        ):
+            # these nodes now hold the full staged input set: a resume
+            # attempt landing entirely on them skips stage-in
+            job.staged_nodes = job.staged_nodes | frozenset(
+                n.node_id for n in job.allocation.storage_nodes
+            )
+        if job.committed_run_s > 0:
+            # a resume attempt: the committed steps are run time not replayed
+            job.resume_attempts += 1
+            job.run_s_saved += job.committed_run_s
+            counters.resumes += 1
+            counters.run_s_saved += job.committed_run_s
         self._transition(job, JobState.RUNNING)
-        eng = self.engine
-        eng.at(eng.now + job.spec.run_time_s, lambda: self._run_done(job))
+        self._schedule_run(job)
 
-    def _run_done(self, job: JobRecord) -> None:
+    # -- RUNNING phase (checkpoint segments) ----------------------------------
+    def _checkpoint_cost(self, job: JobRecord, session=None) -> float:
+        b = job.spec.checkpoint_bytes
+        if b <= 0:
+            return 0.0
+        return (session or job.session).checkpoint_write_s(b)
+
+    def _run_wall_s(self, job: JobRecord, session=None) -> float:
+        """Modeled wall time the rest of this job's RUNNING phase occupies:
+        the uncommitted remainder plus one checkpoint write per full
+        ``checkpoint_every_s`` segment inside it."""
+        spec = job.spec
+        remaining = max(0.0, spec.run_time_s - job.committed_run_s)
+        every = spec.checkpoint_every_s
+        if every is None or remaining <= every:
+            return remaining
+        n_commits = math.ceil(remaining / every) - 1
+        return remaining + n_commits * self._checkpoint_cost(job, session)
+
+    def _session_span_s(self, job: JobRecord, session: StorageSession) -> float:
+        """Grant-to-release wall time for this attempt under the session's
+        models — the projection backing the EASY reservation ledger."""
+        return (
+            session.provision_time_s
+            + session.stage_in_time_s
+            + self._run_wall_s(job, session)
+            + session.stage_out_time_s
+            + session.teardown_time_s
+        )
+
+    def _schedule_run(self, job: JobRecord) -> None:
+        """Schedule the rest of the RUNNING phase. Without checkpointing
+        this is the single end-of-run event (bit-for-bit the pre-existing
+        behavior); with a cadence, the remainder is cut into
+        ``checkpoint_every_s`` progress segments, each closed by a commit
+        event that pays the modeled checkpoint write."""
+        eng = self.engine
+        spec = job.spec
+        remaining = max(0.0, spec.run_time_s - job.committed_run_s)
+        every = spec.checkpoint_every_s
+        token = job.run_token
+        job._run_base = job.committed_run_s
+        job._run_t0 = eng.now
+        if every is None or remaining <= every:
+            job._run_seg_s = remaining
+            eng.at(eng.now + remaining, lambda: self._run_done(job, token))
+            return
+        job._run_seg_s = every
+        cost = self._checkpoint_cost(job)
+        eng.at(eng.now + every + cost, lambda: self._checkpoint_commit(job, token))
+
+    def _checkpoint_commit(self, job: JobRecord, token: int) -> None:
+        """One committed step: ``checkpoint_every_s`` of progress plus its
+        write are durable — a later fault resumes from here."""
+        if token != job.run_token:
+            return                       # preempted mid-segment: stale event
+        job.committed_run_s = min(
+            job.spec.run_time_s, job._run_base + job._run_seg_s
+        )
+        job.checkpoints_committed += 1
+        self.counters.checkpoints += 1
+        self._schedule_run(job)
+
+    def _run_progress(self, job: JobRecord, now: float) -> float:
+        """Run seconds completed by ``now``: the committed base plus the
+        current segment's elapsed progress (write stalls excluded)."""
+        if job.state is not JobState.RUNNING:
+            return job.committed_run_s
+        return min(
+            job.spec.run_time_s,
+            job._run_base + min(max(0.0, now - job._run_t0), job._run_seg_s),
+        )
+
+    def _run_done(self, job: JobRecord, token: int = 0) -> None:
+        if token != job.run_token:
+            return                       # preempted mid-run: stale event
         if self._trip(job, "run"):
             self._fail_attempt(job, "run")
             return
@@ -756,6 +1107,7 @@ class Orchestrator:
             return
         session = job.session
         job.staged_out_bytes += session.stage_out_bytes
+        self.counters.staged_out_bytes += session.stage_out_bytes
         # pool-backed / always-on backends release for free (the data
         # manager outlives the job); only job-scoped deploys pay teardown
         self._transition(job, JobState.TEARDOWN)
@@ -768,12 +1120,17 @@ class Orchestrator:
         self._dispatch()
 
     def _fail_attempt(self, job: JobRecord, phase: str) -> None:
+        # a job with committed checkpoint steps requeues as a *resume*
+        # attempt: committed_run_s survives the release, so the next
+        # attempt pays only the remainder (and its restore traffic) — see
+        # _try_open / _schedule_run. Nothing to do here beyond not wiping it.
         job.failure_phase = phase
         self._release(job)
         job.attempt += 1
         if job.attempt > job.spec.max_retries:
             self._transition(job, JobState.FAILED)
         else:
+            self.counters.retries += 1
             self._transition(job, JobState.QUEUED)
             self._enqueue(job)
         self._dispatch()
@@ -782,11 +1139,17 @@ class Orchestrator:
         session = job.session
         if session is None:
             return
+        job.run_token += 1           # any in-flight run event is now stale
         if job.allocation is not None:
             t0 = job.alloc_started if job.alloc_started is not None else self.engine.now
             job.storage_intervals.append(
                 (t0, self.engine.now, len(job.allocation.storage_nodes))
             )
+            n = len(job.allocation.storage_nodes)
+            counters = self.counters
+            counters.open_nodes -= n
+            counters.open_node_start_s -= n * t0
+            counters.busy_node_s += (self.engine.now - t0) * n
         pooled = session.lease is not None
         session.release(self.engine.now)
         job.session = None
@@ -837,6 +1200,118 @@ class Orchestrator:
         else:
             job.state = state
         job.history.append((state, self.engine.now))
+        counters = self.counters
+        counters.t_last_event = self.engine.now
+        if state is JobState.RUNNING:
+            self._running[job.job_id] = job
+        else:
+            self._running.pop(job.job_id, None)
+            if state is JobState.DONE:
+                counters.n_done += 1
+            elif state is JobState.FAILED:
+                counters.n_failed += 1
+
+    # -- preemption -----------------------------------------------------------
+    def preempt(self, victim: JobRecord) -> bool:
+        """Checkpoint-and-release a RUNNING job for a higher-priority
+        arrival (or by hand). With checkpointing on, the victim's progress
+        commits through a final checkpoint write — it keeps holding its
+        nodes for the write's modeled duration, then releases; without
+        checkpointing, uncommitted progress is simply lost. Either way the
+        victim requeues as a resume attempt that does **not** count against
+        ``max_retries`` (an eviction is not a fault). Returns False when
+        the job is not RUNNING or is already draining its final checkpoint."""
+        if victim.state is not JobState.RUNNING or victim._preempt_pending:
+            return False
+        now = self.engine.now
+        victim.run_token += 1            # cancel the pending run/commit event
+        if victim.spec.checkpoint_every_s is not None:
+            victim.committed_run_s = self._run_progress(victim, now)
+            victim.checkpoints_committed += 1
+            self.counters.checkpoints += 1
+            cost = self._checkpoint_cost(victim)
+            if cost > 0:
+                victim._preempt_pending = True
+                self.engine.at(now + cost, lambda: self._preempt_release(victim))
+                return True
+        self._preempt_release(victim)
+        return True
+
+    def _preempt_release(self, victim: JobRecord) -> None:
+        victim._preempt_pending = False
+        victim.preemptions += 1
+        self.counters.preemptions += 1
+        self._release(victim)
+        self._transition(victim, JobState.QUEUED)
+        self._enqueue(victim)
+        self._dispatch()
+
+    def _try_preempt(self, job: JobRecord) -> bool:
+        """A blocked high-priority arrival asks the preemption policy for
+        RUNNING victims. Chosen victims are preempted in the policy's
+        order; the arrival then competes for the freed nodes at the
+        dispatch the releases trigger."""
+        try:
+            demand = self.scheduler.demand(job.request)
+        except AllocationError:
+            return False
+        now = self.engine.now
+        candidates = []
+        for victim in self._running.values():
+            spec = victim.spec
+            if not spec.preemptible or spec.priority >= job.spec.priority:
+                continue
+            if victim._preempt_pending:
+                continue
+            alloc = victim.allocation
+            candidates.append(
+                VictimView(
+                    job=victim,
+                    priority=spec.priority,
+                    progress=(
+                        self._run_progress(victim, now) / spec.run_time_s
+                        if spec.run_time_s > 0
+                        else 1.0
+                    ),
+                    n_compute=len(alloc.compute_nodes) if alloc else 0,
+                    n_storage=len(alloc.storage_nodes) if alloc else 0,
+                )
+            )
+        victims = self._preemption.select(
+            job, candidates, demand, self.scheduler.free_counts()
+        )
+        preempted = False
+        for victim in victims:
+            preempted |= self.preempt(victim)
+        return preempted
+
+    # -- monitoring -----------------------------------------------------------
+    def heartbeat_monitor(
+        self, nodes: Optional[list] = None, *, timeout_s: float = 60.0
+    ) -> HeartbeatMonitor:
+        """A `HeartbeatMonitor` bound to this orchestrator's **virtual**
+        clock (default node set: the cluster's compute inventory). The
+        monitor's own default is ``time.monotonic()`` — correct for real
+        per-host agents, but mixed with a virtual clock it silently marks
+        every node dead (or never dead), so orchestrator-world callers must
+        come through here (or pass ``clock=lambda: engine.now`` themselves)."""
+        if nodes is None:
+            nodes = [n.node_id for n in self.scheduler.cluster.compute_nodes]
+        return HeartbeatMonitor(
+            list(nodes), timeout_s=timeout_s, clock=lambda: self.engine.now
+        )
+
+    def live_report(self, now: Optional[float] = None):
+        """O(1) mid-flight campaign snapshot from the incremental counters
+        (`metrics.LiveReport`) — what a dashboard polls instead of the
+        O(jobs) `metrics.summarize` scan."""
+        from .metrics import live_report
+
+        return live_report(
+            self.counters,
+            n_storage_nodes=len(self.scheduler.cluster.storage_nodes),
+            now=self.engine.now if now is None else now,
+        )
 
     # -- campaign driver -----------------------------------------------------
     def run_campaign(

@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence
 
-from .lifecycle import TERMINAL_STATES, JobRecord, JobState
+from .lifecycle import TERMINAL_STATES, JobRecord, JobState, LiveCounters
 
 # Phases reported in per-job latency breakdowns, pipeline order.
 BREAKDOWN_STATES = (
@@ -73,6 +73,56 @@ class CampaignReport:
     breakdowns: tuple
     stage_in_bytes_saved: float = 0.0    # summed over jobs (pool cache hits)
     pool: Optional[PoolReport] = None
+    # fault-tolerance rollups (checkpoint-aware requeue + preemption)
+    checkpoints_committed: int = 0
+    preemptions: int = 0                 # checkpoint-and-release requeues
+    resumes: int = 0                     # attempts started with committed work
+    run_s_saved: float = 0.0             # run seconds resumes did not replay
+
+
+@dataclasses.dataclass(frozen=True)
+class LiveReport:
+    """O(1) mid-flight snapshot built from the orchestrator's incremental
+    `LiveCounters` — no per-job scan, no history folds. The batch
+    :func:`summarize` remains the reference; the regression tests hold the
+    shared fields equal at arbitrary poll instants."""
+
+    t: float
+    n_jobs: int
+    n_done: int
+    n_failed: int
+    retries: int
+    preemptions: int
+    resumes: int
+    checkpoints_committed: int
+    run_s_saved: float
+    staged_in_bytes: float
+    staged_out_bytes: float
+    stage_in_bytes_saved: float
+    makespan_s: float
+    storage_node_utilization: float
+
+
+def live_report(
+    counters: LiveCounters, *, n_storage_nodes: int, now: float
+) -> LiveReport:
+    """Fold `LiveCounters` into a `LiveReport` at instant ``now``."""
+    return LiveReport(
+        t=now,
+        n_jobs=counters.n_jobs,
+        n_done=counters.n_done,
+        n_failed=counters.n_failed,
+        retries=counters.retries,
+        preemptions=counters.preemptions,
+        resumes=counters.resumes,
+        checkpoints_committed=counters.checkpoints,
+        run_s_saved=counters.run_s_saved,
+        staged_in_bytes=counters.staged_in_bytes,
+        staged_out_bytes=counters.staged_out_bytes,
+        stage_in_bytes_saved=counters.stage_in_saved_bytes,
+        makespan_s=counters.makespan_s(now),
+        storage_node_utilization=counters.utilization(n_storage_nodes, now),
+    )
 
 
 def job_breakdown(job: JobRecord, now: Optional[float] = None) -> JobBreakdown:
@@ -192,6 +242,10 @@ def summarize(
         breakdowns=breakdowns,
         stage_in_bytes_saved=sum(j.stage_in_saved_bytes for j in jobs),
         pool=pool_report(pools) if pools is not None else None,
+        checkpoints_committed=sum(j.checkpoints_committed for j in jobs),
+        preemptions=sum(j.preemptions for j in jobs),
+        resumes=sum(j.resume_attempts for j in jobs),
+        run_s_saved=sum(j.run_s_saved for j in jobs),
     )
 
 
@@ -211,6 +265,12 @@ def format_report(report: CampaignReport, *, top_n: int = 10) -> str:
             f"{s.value}={report.mean_phase_s[s]:,.1f}" for s in BREAKDOWN_STATES
         ),
     ]
+    if report.checkpoints_committed or report.preemptions or report.resumes:
+        lines.append(
+            f"fault tolerance: {report.checkpoints_committed} checkpoints, "
+            f"{report.resumes} resumes ({report.run_s_saved:,.1f} s of run "
+            f"time not replayed), {report.preemptions} preemptions"
+        )
     if report.pool is not None:
         p = report.pool
         lines += [

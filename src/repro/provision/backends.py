@@ -102,14 +102,42 @@ class DataManagerBackend(abc.ABC):
         materialize: bool = False,
         base_dir: Optional[str] = None,
         now: float = 0.0,
+        staged_nodes: frozenset = frozenset(),
+        restore_bytes: float = 0.0,
     ) -> Optional[StorageSession]:
-        """Grant against the free pool; None when merely busy right now."""
+        """Grant against the free pool; None when merely busy right now.
+
+        Resume-aware sizing (checkpoint-restarting callers): ``staged_nodes``
+        are storage nodes already holding this spec's *fully staged* input
+        set from a completed earlier attempt — a grant landing entirely on
+        them skips stage-in (the data, checkpoints included, is still in the
+        warm tree; the skipped traffic is reported as ``saved_bytes``).
+        ``restore_bytes`` is checkpoint state to read back from the global
+        FS on a cold landing; it joins the stage-in bill. Neither affects
+        *admission* (grant/deny), only the session's modeled staging costs,
+        so same-signature jobs stay interchangeable to dispatch buckets."""
 
     @staticmethod
     def _score(bandwidth: float, spec: StorageSpec, provision_s: float, n_nodes: int) -> float:
         floor = spec.qos.min_bandwidth
         headroom = min(bandwidth / floor, 4.0) if floor else bandwidth / 1e9
         return headroom - 0.1 * provision_s - 0.01 * n_nodes
+
+
+def _resume_stage_in(
+    spec: StorageSpec,
+    granted_ids: frozenset,
+    staged_nodes: frozenset,
+    restore_bytes: float,
+) -> tuple[float, float]:
+    """(stage_in_bytes, saved_bytes) for a dedicated-node grant under the
+    resume model: landing entirely on nodes that still hold the staged data
+    (warm trees, §IV-B1 extended to data) skips the whole stage-in; a cold
+    landing replays it plus the checkpoint restore read."""
+    full = spec.stage_in_bytes + spec.dataset_bytes
+    if granted_ids and granted_ids <= staged_nodes:
+        return 0.0, full + restore_bytes
+    return full + restore_bytes, 0.0
 
 
 class _NodeBackend(DataManagerBackend):
@@ -215,9 +243,11 @@ class EphemeralFSBackend(_NodeBackend):
         return Offer(self.name, self._score(bw, spec, t, n), n, t, bw)
 
     def try_open(self, spec, offer, svc, *, n_compute=0, warm_nodes=frozenset(),
-                 materialize=False, base_dir=None, now=0.0):
+                 materialize=False, base_dir=None, now=0.0,
+                 staged_nodes=frozenset(), restore_bytes=0.0):
         if spec.lifetime is LifetimeClass.POOLED:
-            return self._try_lease(spec, offer, svc, n_compute=n_compute, now=now)
+            return self._try_lease(spec, offer, svc, n_compute=n_compute, now=now,
+                                   restore_bytes=restore_bytes)
         if spec.lifetime is LifetimeClass.PERSISTENT:
             return self._try_create_pool(spec, offer, svc, n_compute=n_compute, now=now)
         alloc = svc.scheduler.try_submit(
@@ -235,6 +265,7 @@ class EphemeralFSBackend(_NodeBackend):
         t_prov = predict_deploy_time(
             plan.targets_per_node, runtime=spec.runtime, fresh=not ids <= warm_nodes
         )
+        stage_in, saved = _resume_stage_in(spec, ids, staged_nodes, restore_bytes)
         session = StorageSession(
             spec=spec,
             offer=offer,
@@ -244,8 +275,9 @@ class EphemeralFSBackend(_NodeBackend):
             fs_model=svc.provisioner.model_for(plan),
             provision_time_s=t_prov,
             teardown_time_s=svc.teardown_time_s,
-            stage_in_bytes=spec.stage_in_bytes + spec.dataset_bytes,
+            stage_in_bytes=stage_in,
             stage_out_bytes=spec.stage_out_bytes,
+            saved_bytes=saved,
         )
         if materialize:
             try:
@@ -257,7 +289,7 @@ class EphemeralFSBackend(_NodeBackend):
                 raise
         return session
 
-    def _try_lease(self, spec, offer, svc, *, n_compute, now):
+    def _try_lease(self, spec, offer, svc, *, n_compute, now, restore_bytes=0.0):
         creq = JobRequest(spec.name, n_compute)
         # compute first (side-effect free): a failed compute fit must not
         # evict pool datasets for nothing
@@ -284,7 +316,11 @@ class EphemeralFSBackend(_NodeBackend):
             fs_model=svc.pool_manager.get(lease.pool_id).fs_model,
             provision_time_s=svc.pool_manager.lease_attach_s,
             teardown_time_s=0.0,   # the pool outlives the session
-            stage_in_bytes=spec.stage_in_bytes + total_bytes(lease.missing),
+            # resuming leases re-attach warm: only datasets the catalog says
+            # were evicted are in `missing` (re-staged); checkpoint state is
+            # read back from the global FS on top
+            stage_in_bytes=spec.stage_in_bytes + total_bytes(lease.missing)
+            + restore_bytes,
             stage_out_bytes=spec.stage_out_bytes,
             saved_bytes=lease.resident_bytes,
         )
@@ -406,7 +442,8 @@ class GlobalFSBackend(DataManagerBackend):
         return Offer(self.name, self._score(bw, spec, 0.0, 0), 0, 0.0, bw)
 
     def try_open(self, spec, offer, svc, *, n_compute=0, warm_nodes=frozenset(),
-                 materialize=False, base_dir=None, now=0.0):
+                 materialize=False, base_dir=None, now=0.0,
+                 staged_nodes=frozenset(), restore_bytes=0.0):
         alloc = None
         if n_compute:
             alloc = svc.scheduler.try_submit(JobRequest(spec.name, n_compute))
@@ -424,8 +461,9 @@ class GlobalFSBackend(DataManagerBackend):
             provision_time_s=0.0,
             teardown_time_s=0.0,
             # shared datasets already live on the global FS: nothing to move,
-            # and the avoided copies are reported as saved traffic
-            stage_in_bytes=spec.stage_in_bytes,
+            # and the avoided copies are reported as saved traffic; resuming
+            # callers re-read their checkpoint (a within-FS copy)
+            stage_in_bytes=spec.stage_in_bytes + restore_bytes,
             stage_out_bytes=spec.stage_out_bytes,
             saved_bytes=spec.dataset_bytes,
         )
@@ -459,7 +497,8 @@ class KVStoreBackend(_NodeBackend):
         return Offer(self.name, self._score(bw, spec, t, n), n, t, bw)
 
     def try_open(self, spec, offer, svc, *, n_compute=0, warm_nodes=frozenset(),
-                 materialize=False, base_dir=None, now=0.0):
+                 materialize=False, base_dir=None, now=0.0,
+                 staged_nodes=frozenset(), restore_bytes=0.0):
         alloc = svc.scheduler.try_submit(
             JobRequest(spec.name, n_compute, storage=spec.to_request())
         )
@@ -467,6 +506,7 @@ class KVStoreBackend(_NodeBackend):
             return None
         plan = svc.provisioner.plan_for(alloc, runtime=spec.runtime)
         ids = frozenset(n.node_id for n in alloc.storage_nodes)
+        stage_in, saved = _resume_stage_in(spec, ids, staged_nodes, restore_bytes)
         session = StorageSession(
             spec=spec,
             offer=offer,
@@ -478,8 +518,9 @@ class KVStoreBackend(_NodeBackend):
                 plan.targets_per_node, runtime=spec.runtime, fresh=not ids <= warm_nodes
             ),
             teardown_time_s=svc.teardown_time_s,
-            stage_in_bytes=spec.stage_in_bytes + spec.dataset_bytes,
+            stage_in_bytes=stage_in,
             stage_out_bytes=spec.stage_out_bytes,
+            saved_bytes=saved,
         )
         if materialize:
             from ..core.kvstore import EphemeralKV
@@ -522,7 +563,8 @@ class NullBackend(DataManagerBackend):
         return Offer(self.name, 0.0, 0, 0.0, float("inf"))
 
     def try_open(self, spec, offer, svc, *, n_compute=0, warm_nodes=frozenset(),
-                 materialize=False, base_dir=None, now=0.0):
+                 materialize=False, base_dir=None, now=0.0,
+                 staged_nodes=frozenset(), restore_bytes=0.0):
         alloc = None
         if n_compute:
             alloc = svc.scheduler.try_submit(JobRequest(spec.name, n_compute))

@@ -200,6 +200,8 @@ class ProvisioningService:
         base_dir: Optional[str] = None,
         now: Optional[float] = None,
         offer: Optional[Offer] = None,
+        staged_nodes: frozenset = frozenset(),
+        restore_bytes: float = 0.0,
     ) -> Optional[StorageSession]:
         """Negotiate and grant, or ``None`` when the cluster is merely busy.
 
@@ -211,6 +213,13 @@ class ProvisioningService:
         skip re-negotiation — safe only while the feasibility landscape is
         static (i.e. never cache offers for POOLED specs, whose candidate
         pools retire and drain mid-campaign).
+
+        Checkpoint-resuming callers size stage-in with ``staged_nodes``
+        (storage nodes still holding the fully staged inputs of an earlier
+        attempt: a grant landing entirely on them skips stage-in) and
+        ``restore_bytes`` (checkpoint state read back from the global FS on
+        a cold landing) — admission answers are unchanged, only modeled
+        staging costs move (see :meth:`DataManagerBackend.try_open`).
         """
         now = self._now(now)
         if offer is None:
@@ -225,6 +234,8 @@ class ProvisioningService:
             materialize=materialize,
             base_dir=base_dir,
             now=now,
+            staged_nodes=staged_nodes,
+            restore_bytes=restore_bytes,
         )
         if session is not None:
             self.stats.record_open(offer.backend)

@@ -114,12 +114,23 @@ class StorageSession:
         return self.state is SessionState.RELEASED
 
     # -- modeled staging (virtual-clock engines) ------------------------------
-    def _staging_time(self, nbytes: float, src: FSDeployment, dst: FSDeployment) -> float:
+    def _staging_time(
+        self,
+        nbytes: float,
+        src: Optional[FSDeployment],
+        dst: Optional[FSDeployment],
+    ) -> float:
         """Memoized :func:`modeled_stage_time` via the service: a campaign
         stages the same byte counts through the same deployment shapes
-        thousands of times."""
+        thousands of times. A ``None`` endpoint skips that side of the
+        model (e.g. checkpoint bursts, whose source is compute memory)."""
         cache = self.service._stage_time_cache
-        key = (nbytes, self.spec.n_streams, _model_key(src), _model_key(dst))
+        key = (
+            nbytes,
+            self.spec.n_streams,
+            None if src is None else _model_key(src),
+            None if dst is None else _model_key(dst),
+        )
         t = cache.get(key)
         if t is None:
             t = modeled_stage_time(nbytes, src, dst, self.spec.n_streams)
@@ -144,6 +155,16 @@ class StorageSession:
         return self._staging_time(
             self.stage_out_bytes, self.fs_model, self.service.globalfs_model
         )
+
+    def checkpoint_write_s(self, nbytes: float) -> float:
+        """Modeled wall time for one checkpoint commit: the compute side
+        bursts ``nbytes`` into this session's data manager, so the cost is
+        the destination write path alone (charged against the session's
+        bandwidth via the perfmodel — `repro.checkpoint`'s burst-then-drain
+        story priced for the virtual clock). Zero for storage-less sessions."""
+        if nbytes <= 0 or self.fs_model is None:
+            return 0.0
+        return self._staging_time(nbytes, None, self.fs_model)
 
     def mark_staged(self, now: Optional[float] = None) -> None:
         """Stage-in finished: publish lease datasets as RESIDENT (cache hits

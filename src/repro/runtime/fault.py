@@ -19,7 +19,7 @@ import dataclasses
 import math
 import random
 import time
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -33,20 +33,39 @@ class NodeHealth:
 
 
 class HeartbeatMonitor:
-    def __init__(self, nodes: list[str], *, timeout_s: float = 60.0):
+    """Tracks per-node liveness over an injectable clock.
+
+    ``clock`` is the monitor's time source for everything — the initial
+    ``last_beat`` stamps, beats, and deadness checks — and defaults to
+    ``time.monotonic()`` for real-cluster agents. Virtual-clock callers
+    (the workflow orchestrator above all) MUST inject their own source
+    (``clock=lambda: engine.now``): a monitor built on the wall clock but
+    queried with virtual ``now`` values silently marks every node dead
+    (monotonic stamps dwarf small virtual times) or never dead (the other
+    way around). See :meth:`repro.orchestrator.Orchestrator.heartbeat_monitor`.
+    """
+
+    def __init__(
+        self,
+        nodes: list[str],
+        *,
+        timeout_s: float = 60.0,
+        clock: Optional[Callable[[], float]] = None,
+    ):
         self.timeout = timeout_s
-        self.nodes = {n: NodeHealth(n, last_beat=time.monotonic()) for n in nodes}
+        self._clock = clock if clock is not None else time.monotonic
+        self.nodes = {n: NodeHealth(n, last_beat=self._clock()) for n in nodes}
 
     def beat(self, node_id: str, step_time_s: Optional[float] = None,
              now: Optional[float] = None) -> None:
         h = self.nodes[node_id]
-        h.last_beat = now if now is not None else time.monotonic()
+        h.last_beat = now if now is not None else self._clock()
         if step_time_s is not None:
             h.step_times.append(step_time_s)
             del h.step_times[:-50]
 
     def dead_nodes(self, now: Optional[float] = None) -> list[str]:
-        now = now if now is not None else time.monotonic()
+        now = now if now is not None else self._clock()
         out = []
         for h in self.nodes.values():
             if h.alive and now - h.last_beat > self.timeout:

@@ -9,6 +9,10 @@ import textwrap
 
 import pytest
 
+from tests.conftest import JAX_DRIFT_REASON, jax_api_drifted
+
+pytestmark = pytest.mark.skipif(jax_api_drifted(), reason=JAX_DRIFT_REASON)
+
 REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

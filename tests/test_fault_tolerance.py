@@ -1,0 +1,713 @@
+"""Fault-tolerant scheduling layer: checkpoint-aware requeue, preemption,
+EASY reservations — plus the satellites that ride along (virtual-clock
+heartbeats, O(1) live counters, the data-aware fraction cache, and the
+``_pool_wait_n`` drift guard).
+"""
+
+import random
+
+import pytest
+
+from repro.core import Scheduler, StorageRequest, dom_cluster, synthetic_cluster
+from repro.core.scheduler import JobRequest
+from repro.orchestrator import (
+    BackfillPolicy,
+    DataAwarePolicy,
+    EasyBackfillPolicy,
+    FIFOPolicy,
+    JobState,
+    Orchestrator,
+    PreemptionPolicy,
+    WorkflowSpec,
+    storage_node_utilization,
+    summarize,
+)
+from repro.pool import DatasetRef
+from repro.provision import StorageSpec
+from repro.runtime import FaultInjector, FaultSpec, HeartbeatMonitor
+
+GB = 1e9
+
+
+class ScriptedFaults(FaultInjector):
+    """Trips exactly the (job, phase, attempt) triples it is given —
+    deterministic regardless of event ordering, unlike the seeded
+    coin-flipper."""
+
+    def __init__(self, script):
+        super().__init__()
+        self._script = dict(script)     # (name, phase) -> times to trip
+
+    def trip(self, job_name, phase):
+        left = self._script.get((job_name, phase), 0)
+        if left > 0:
+            self._script[(job_name, phase)] = left - 1
+            self.trips.append((job_name, phase))
+            return True
+        return False
+
+
+def _ckpt_spec(name, *, every, run_s=100.0, ckpt_bytes=0.0, nodes=2,
+               stage_in=20 * GB, retries=2):
+    return WorkflowSpec(
+        name,
+        2,
+        storage_spec=StorageSpec(
+            name, nodes=nodes, managers=("ephemeralfs",), stage_in_bytes=stage_in
+        ),
+        run_time_s=run_s,
+        max_retries=retries,
+        checkpoint_every_s=every,
+        checkpoint_bytes=ckpt_bytes,
+    )
+
+
+def _phase_time(job, state_value, which=0):
+    times = [t for s, t in job.history if s.value == state_value]
+    return times[which]
+
+
+# -- checkpoint-aware requeue -------------------------------------------------
+def test_spec_validation():
+    with pytest.raises(ValueError, match="checkpoint_every_s"):
+        WorkflowSpec("x", 1, checkpoint_every_s=0.0)
+    with pytest.raises(ValueError, match="checkpoint_bytes"):
+        WorkflowSpec("x", 1, checkpoint_bytes=1.0)
+    assert WorkflowSpec("x", 1, checkpoint_every_s=5.0).fault_tolerant
+    assert not WorkflowSpec("x", 1).fault_tolerant
+
+
+def test_resume_pays_only_remaining_run_time():
+    """A run fault with committed checkpoints replays only the uncommitted
+    tail; without checkpointing the whole run replays."""
+    makespans = {}
+    for every in (None, 25.0):
+        orch = Orchestrator(
+            synthetic_cluster(8, 4), faults=ScriptedFaults({("j", "run"): 1})
+        )
+        spec = _ckpt_spec("j", every=every)
+        job = orch.run_campaign([spec])[0]
+        assert job.state is JobState.DONE
+        makespans[every] = orch.engine.now
+        if every is None:
+            assert job.committed_run_s == 0.0
+            assert job.run_s_saved == 0.0
+        else:
+            # fault hit at end-of-run: 3 commits at 25/50/75 s were durable
+            assert job.committed_run_s == pytest.approx(75.0)
+            assert job.checkpoints_committed >= 3
+            assert job.run_s_saved == pytest.approx(75.0)
+            assert job.resume_attempts == 1
+    assert makespans[25.0] < makespans[None]
+
+
+def test_resume_skips_stage_in_on_warm_nodes():
+    """The retry lands on the same storage nodes (nothing else competes),
+    so the staged inputs are still there: zero re-staged bytes."""
+    orch = Orchestrator(
+        synthetic_cluster(8, 4), faults=ScriptedFaults({("j", "run"): 1})
+    )
+    job = orch.run_campaign([_ckpt_spec("j", every=25.0)])[0]
+    assert job.state is JobState.DONE
+    first = {nid for nid, *_ in [ids for ids, _, _ in job.alloc_history]}
+    assert job.alloc_history[0][1] == job.alloc_history[1][1], first
+    # 20 GB staged once; the resume's stage-in was a warm skip
+    assert job.staged_in_bytes == pytest.approx(20 * GB)
+    assert job.stage_in_saved_bytes == pytest.approx(20 * GB)
+
+
+def test_cold_resume_restages_and_pays_restore():
+    """When the resume cannot land on the staged nodes, the inputs replay
+    and the checkpoint is read back from the global FS."""
+    orch = Orchestrator(
+        synthetic_cluster(8, 4), faults=ScriptedFaults({("j", "run"): 1})
+    )
+    # filler pins sn00000/1 so j stages on sn00002/3; the sniper (queued
+    # ahead of j's requeue) grabs those the moment the fault frees them,
+    # forcing j's resume onto different (cold) storage nodes once the
+    # filler drains
+    def _block(name, run_s):
+        return WorkflowSpec(
+            name, 1,
+            storage_spec=StorageSpec(name, nodes=2, managers=("ephemeralfs",)),
+            run_time_s=run_s,
+        )
+
+    filler = orch.submit(_block("filler", 400.0))
+    j = orch.submit(_ckpt_spec("j", every=25.0, ckpt_bytes=4 * GB))
+    orch.submit(_block("sniper", 1000.0), at=10.0)
+    orch.engine.run()
+    assert filler.alloc_history[0][1] == ("sn00000", "sn00001")
+    assert j.state is JobState.DONE
+    assert j.alloc_history[0][1] != j.alloc_history[1][1]
+    # inputs staged twice + one 4 GB checkpoint restore
+    assert j.staged_in_bytes == pytest.approx(2 * 20 * GB + 4 * GB)
+    assert j.stage_in_saved_bytes == 0.0
+    assert j.run_s_saved == pytest.approx(75.0)
+
+
+def test_checkpoint_write_cost_stretches_running_phase():
+    """Each commit charges the modeled write against the session bandwidth:
+    the RUNNING wall time is remaining + n_commits * write cost."""
+    orch = Orchestrator(synthetic_cluster(8, 4))
+    job = orch.run_campaign([_ckpt_spec("j", every=25.0, ckpt_bytes=8 * GB)])[0]
+    assert job.state is JobState.DONE
+    t_run = _phase_time(job, "running")
+    t_out = _phase_time(job, "staging_out")
+    run_wall = t_out - t_run
+    assert run_wall > 100.0
+    assert job.checkpoints_committed == 3
+    # 3 equal commits stretch the phase by exactly 3 write costs
+    cost = (run_wall - 100.0) / 3
+    assert cost > 0
+    # and a free-write spec spends exactly run_time_s
+    orch2 = Orchestrator(synthetic_cluster(8, 4))
+    job2 = orch2.run_campaign([_ckpt_spec("k", every=25.0)])[0]
+    assert (
+        _phase_time(job2, "staging_out") - _phase_time(job2, "running")
+        == pytest.approx(100.0)
+    )
+
+
+def test_pooled_resume_reattaches_warm():
+    """Pool-backed resume: the catalog still holds the datasets, so the
+    retry's lease is a pure cache hit."""
+    orch = Orchestrator(
+        dom_cluster(), faults=ScriptedFaults({("p", "run"): 1})
+    )
+    orch.enable_pools(ttl_s=None)
+    orch.pools.create_pool(nodes=2)
+    ds = DatasetRef("d", 10 * GB)
+    spec = WorkflowSpec(
+        "p", 1, use_pool=True, datasets=(ds,), run_time_s=60.0,
+        checkpoint_every_s=20.0,
+    )
+    job = orch.run_campaign([spec])[0]
+    assert job.state is JobState.DONE
+    assert job.dataset_hits == 1 and job.dataset_misses == 1
+    assert job.stage_in_saved_bytes == pytest.approx(10 * GB)
+    assert job.run_s_saved == pytest.approx(40.0)
+
+
+def test_exhausted_retries_still_fail():
+    orch = Orchestrator(
+        synthetic_cluster(4, 2), faults=ScriptedFaults({("j", "run"): 3})
+    )
+    job = orch.run_campaign([_ckpt_spec("j", every=25.0, retries=2)])[0]
+    assert job.state is JobState.FAILED
+    assert job.attempt == 3
+
+
+# -- preemption ---------------------------------------------------------------
+def test_preempt_manual_checkpoint_and_release():
+    orch = Orchestrator(synthetic_cluster(4, 2))
+    job = orch.submit(
+        WorkflowSpec("v", 4, run_time_s=500.0, checkpoint_every_s=100.0)
+    )
+    orch.engine.run(until=250.0)
+    assert job.state is JobState.RUNNING
+    assert orch.preempt(job)
+    # preempt at t=250: committed the elapsed progress, not just the cadence
+    assert job.committed_run_s == pytest.approx(250.0, abs=1.0)
+    assert job.preemptions == 1
+    # nothing else wants the nodes, so the resume re-dispatched immediately
+    # and pays only the remaining 250 s
+    orch.engine.run()
+    assert job.state is JobState.DONE
+    assert job.attempt == 0          # an eviction is not a fault
+    assert job.run_s_saved == pytest.approx(250.0, abs=1.0)
+    assert orch.engine.now == pytest.approx(500.0, abs=2.0)
+    # a second preempt on a non-RUNNING job is refused
+    assert not orch.preempt(job)
+
+
+def test_preempt_without_checkpointing_loses_progress():
+    orch = Orchestrator(synthetic_cluster(4, 2))
+    job = orch.submit(WorkflowSpec("v", 4, run_time_s=100.0))
+    orch.engine.run(until=60.0)
+    assert orch.preempt(job)
+    orch.engine.run()
+    assert job.state is JobState.DONE
+    assert job.committed_run_s == 0.0
+    # the resumed attempt replayed the full run
+    assert orch.engine.now >= 60.0 + 100.0
+
+
+def test_high_priority_arrival_preempts_lowest_priority_victim():
+    orch = Orchestrator(
+        synthetic_cluster(8, 2), preemption=PreemptionPolicy(), policy=FIFOPolicy()
+    )
+    lo = orch.submit(
+        WorkflowSpec("lo", 4, run_time_s=500.0, checkpoint_every_s=50.0, priority=0)
+    )
+    mid = orch.submit(
+        WorkflowSpec("mid", 4, run_time_s=500.0, checkpoint_every_s=50.0, priority=3)
+    )
+    hi = orch.submit(WorkflowSpec("hi", 4, run_time_s=10.0, priority=5), at=100.0)
+    orch.engine.run()
+    assert all(j.state is JobState.DONE for j in (lo, mid, hi))
+    assert lo.preemptions == 1 and mid.preemptions == 0
+    assert _phase_time(hi, "allocated") == pytest.approx(100.0)
+
+
+def test_preemption_protects_most_progress_on_ties():
+    orch = Orchestrator(
+        synthetic_cluster(8, 2), preemption=PreemptionPolicy(), policy=FIFOPolicy()
+    )
+    old = orch.submit(
+        WorkflowSpec("old", 4, run_time_s=500.0, checkpoint_every_s=50.0)
+    )
+    young = orch.submit(
+        WorkflowSpec("young", 4, run_time_s=500.0, checkpoint_every_s=50.0),
+        at=300.0,
+    )
+    hi = orch.submit(WorkflowSpec("hi", 4, run_time_s=10.0, priority=1), at=400.0)
+    orch.engine.run()
+    assert hi.state is JobState.DONE
+    assert young.preemptions == 1 and old.preemptions == 0
+
+
+def test_no_pointless_preemption_when_demand_cannot_be_covered():
+    orch = Orchestrator(
+        synthetic_cluster(4, 2), preemption=PreemptionPolicy(), policy=FIFOPolicy()
+    )
+    v = orch.submit(WorkflowSpec("v", 2, run_time_s=100.0, checkpoint_every_s=10.0))
+    # wants 8 compute: even releasing everything cannot satisfy it
+    big = orch.submit(WorkflowSpec("big", 8, run_time_s=10.0, priority=9), at=10.0)
+    orch.engine.run()
+    assert v.preemptions == 0
+    assert big.state is JobState.FAILED      # infeasible, fails fast at arrival
+    assert v.state is JobState.DONE
+
+
+def test_preempt_victim_pays_final_checkpoint_write():
+    orch = Orchestrator(synthetic_cluster(4, 2))
+    job = orch.submit(
+        WorkflowSpec(
+            "v", 4, run_time_s=500.0,
+            storage=StorageRequest(nodes=1),
+            checkpoint_every_s=100.0, checkpoint_bytes=8 * GB,
+        )
+    )
+    orch.engine.run(until=150.0)
+    t0 = orch.engine.now
+    assert orch.preempt(job)
+    assert job.state is JobState.RUNNING      # draining the final write
+    orch.engine.run()
+    requeued_at = [t for s, t in job.history if s.value == "queued"][1]
+    assert requeued_at > t0                   # the write took modeled time
+    assert job.state is JobState.DONE
+
+
+# -- EASY reservations --------------------------------------------------------
+def _easy_campaign(policy):
+    orch = Orchestrator(synthetic_cluster(8, 4), policy=policy)
+    running = orch.submit(
+        WorkflowSpec(
+            "running", 1,
+            storage_spec=StorageSpec("running", nodes=3, managers=("ephemeralfs",)),
+            run_time_s=100.0,
+        )
+    )
+    wide = orch.submit(
+        WorkflowSpec(
+            "wide", 1,
+            storage_spec=StorageSpec("wide", nodes=4, managers=("ephemeralfs",)),
+            run_time_s=10.0,
+        ),
+        at=1.0,
+    )
+    smalls = [
+        orch.submit(
+            WorkflowSpec(
+                f"s{i}", 1,
+                storage_spec=StorageSpec(f"s{i}", nodes=1, managers=("ephemeralfs",)),
+                run_time_s=400.0,
+            ),
+            at=2.0 + i,
+        )
+        for i in range(3)
+    ]
+    orch.engine.run()
+    assert all(j.done for j in [running, wide, *smalls])
+    return orch, running, wide, smalls
+
+
+@pytest.mark.parametrize("incremental", [True, False])
+def test_easy_head_never_delayed_by_backfill(incremental):
+    """The wide head-of-queue job starts the moment the running job's nodes
+    free — long small jobs cannot starve it (they do under plain backfill)."""
+    policy = EasyBackfillPolicy()
+    orch = Orchestrator(synthetic_cluster(8, 4), policy=policy,
+                        incremental=incremental)
+    running = orch.submit(
+        WorkflowSpec(
+            "running", 1,
+            storage_spec=StorageSpec("running", nodes=3, managers=("ephemeralfs",)),
+            run_time_s=100.0,
+        )
+    )
+    wide = orch.submit(
+        WorkflowSpec(
+            "wide", 1,
+            storage_spec=StorageSpec("wide", nodes=4, managers=("ephemeralfs",)),
+            run_time_s=10.0,
+        ),
+        at=1.0,
+    )
+    smalls = [
+        orch.submit(
+            WorkflowSpec(
+                f"s{i}", 1,
+                storage_spec=StorageSpec(f"s{i}", nodes=1, managers=("ephemeralfs",)),
+                run_time_s=400.0,
+            ),
+            at=2.0 + i,
+        )
+        for i in range(3)
+    ]
+    orch.engine.run()
+    release_t = [t for s, t in running.history if s.value == "done"][0]
+    wide_start = _phase_time(wide, "allocated")
+    assert wide_start == pytest.approx(release_t)
+    # and the reservation actually admitted no delaying backfill: every
+    # small job started only after the wide head was served
+    for s in smalls:
+        assert _phase_time(s, "allocated") >= wide_start
+
+
+def test_plain_backfill_starves_the_wide_head():
+    """The contrast case: without reservations the 400 s small jobs jump
+    the 4-node head and push its start out by hundreds of seconds."""
+    _, running, wide, _ = _easy_campaign(BackfillPolicy())
+    release_t = [t for s, t in running.history if s.value == "done"][0]
+    assert _phase_time(wide, "allocated") > release_t + 300.0
+
+
+def test_easy_backfills_jobs_that_finish_before_the_reservation():
+    """A small job whose modeled completion lands before the reserved start
+    is admitted — EASY keeps utilization, not just fairness."""
+    orch = Orchestrator(synthetic_cluster(8, 4), policy=EasyBackfillPolicy())
+    running = orch.submit(
+        WorkflowSpec(
+            "running", 1,
+            storage_spec=StorageSpec("running", nodes=3, managers=("ephemeralfs",)),
+            run_time_s=500.0,
+        )
+    )
+    wide = orch.submit(
+        WorkflowSpec(
+            "wide", 1,
+            storage_spec=StorageSpec("wide", nodes=4, managers=("ephemeralfs",)),
+            run_time_s=10.0,
+        ),
+        at=1.0,
+    )
+    quick = orch.submit(
+        WorkflowSpec(
+            "quick", 1,
+            storage_spec=StorageSpec("quick", nodes=1, managers=("ephemeralfs",)),
+            run_time_s=5.0,
+        ),
+        at=2.0,
+    )
+    orch.engine.run()
+    release_t = [t for s, t in running.history if s.value == "done"][0]
+    assert _phase_time(quick, "allocated") == pytest.approx(2.0)  # backfilled
+    assert _phase_time(wide, "allocated") == pytest.approx(release_t)
+
+
+def test_easy_refuses_backfill_when_reservation_unprovable():
+    """Head nodes held by a pool (no release projection): nothing may
+    backfill, because no no-delay proof exists."""
+    orch = Orchestrator(dom_cluster(), policy=EasyBackfillPolicy())
+    orch.enable_pools(ttl_s=None)
+    orch.pools.create_pool(nodes=3)       # dom has 4 storage nodes; 1 left
+    wide = orch.submit(
+        WorkflowSpec(
+            "wide", 1,
+            storage_spec=StorageSpec("wide", nodes=2, managers=("ephemeralfs",)),
+            run_time_s=10.0,
+        )
+    )
+    small = orch.submit(
+        WorkflowSpec(
+            "small", 1,
+            storage_spec=StorageSpec("small", nodes=1, managers=("ephemeralfs",)),
+            run_time_s=5.0,
+        ),
+        at=1.0,
+    )
+    orch.engine.run(until=50.0)
+    assert wide.state is JobState.QUEUED
+    assert small.state is JobState.QUEUED     # refused: would not be provable
+    assert orch.reservation is not None and orch.reservation.start_at is None
+
+
+def test_scheduler_reservation_ledger():
+    sched = Scheduler(synthetic_cluster(4, 4))
+    a = sched.submit(JobRequest("a", 1, storage=StorageRequest(nodes=3)))
+    sched.note_projected_release(a, 50.0)
+    assert sched.projected_release_of(a) == 50.0
+    assert sched.projected_free_at(49.0) == (0, 0)
+    assert sched.projected_free_at(50.0) == (1, 3)
+    # 1 storage node free now; 3 more at t=50
+    assert sched.earliest_fit(0, 1, now=0.0) == 0.0
+    assert sched.earliest_fit(0, 4, now=0.0) == 50.0
+    assert sched.earliest_fit(5, 0, now=0.0) is None    # only 4 compute exist
+    b = sched.submit(JobRequest("b", 1, storage=StorageRequest(nodes=1)))
+    # b has no projection: demands needing its node are unprovable
+    assert sched.earliest_fit(0, 4, now=0.0) is None
+    sched.release(b)
+    assert sched.earliest_fit(0, 4, now=0.0) == 50.0
+    sched.release(a)
+    assert sched.projected_release_of(a) is None
+    assert sched.earliest_fit(0, 4, now=60.0) == 60.0
+
+
+# -- heartbeat clock (satellite) ----------------------------------------------
+def test_heartbeat_monitor_injectable_clock():
+    t = [0.0]
+    mon = HeartbeatMonitor(["n0", "n1"], timeout_s=10.0, clock=lambda: t[0])
+    assert mon.dead_nodes() == []
+    t[0] = 5.0
+    mon.beat("n0")
+    t[0] = 12.0
+    assert mon.dead_nodes() == ["n1"]      # n1's birth stamp aged out
+    t[0] = 20.0
+    assert set(mon.dead_nodes()) == {"n0", "n1"}
+
+
+def test_orchestrator_heartbeat_monitor_uses_virtual_clock():
+    orch = Orchestrator(synthetic_cluster(4, 2))
+    mon = orch.heartbeat_monitor(timeout_s=30.0)
+    assert set(mon.nodes) == {
+        n.node_id for n in orch.scheduler.cluster.compute_nodes
+    }
+    orch.submit(WorkflowSpec("j", 1, run_time_s=100.0))
+    orch.engine.run(until=20.0)
+    assert mon.dead_nodes() == []          # virtual 20 s < 30 s timeout
+    orch.engine.run(until=40.0)
+    assert len(mon.dead_nodes()) == 4      # virtual clock crossed the timeout
+    # beats taken mid-campaign are stamped with virtual time
+    mon2 = orch.heartbeat_monitor(nodes=["x"], timeout_s=30.0)
+    assert mon2.nodes["x"].last_beat == orch.engine.now
+
+
+def test_default_heartbeat_clock_is_wallclock():
+    mon = HeartbeatMonitor(["n0"], timeout_s=1e6)
+    assert mon.nodes["n0"].last_beat > 0
+    assert mon.dead_nodes() == []
+
+
+# -- O(1) live counters (satellite) -------------------------------------------
+def _counter_campaign(seed):
+    rng = random.Random(seed)
+    orch = Orchestrator(
+        dom_cluster(),
+        faults=FaultInjector(FaultSpec(stage_in_fail_p=0.1, run_fail_p=0.1, seed=seed)),
+        preemption=PreemptionPolicy(),
+    )
+    orch.enable_pools(ttl_s=400.0)
+    orch.pools.create_pool(nodes=1, cap_bytes=50 * GB)
+    specs = []
+    for i in range(40):
+        name = f"j{i:02d}"
+        r = rng.random()
+        if r < 0.3:
+            specs.append(
+                WorkflowSpec(
+                    name, rng.randint(1, 3), use_pool=True,
+                    datasets=(DatasetRef(f"d{i % 4}", 8 * GB),),
+                    run_time_s=rng.uniform(5, 60),
+                    checkpoint_every_s=10.0 if r < 0.15 else None,
+                )
+            )
+        elif r < 0.7:
+            specs.append(
+                WorkflowSpec(
+                    name, rng.randint(1, 4),
+                    storage_spec=StorageSpec(
+                        name, nodes=rng.randint(1, 2), managers=("ephemeralfs",),
+                        stage_in_bytes=rng.uniform(1, 20) * GB,
+                    ),
+                    run_time_s=rng.uniform(5, 60),
+                    checkpoint_every_s=15.0 if r < 0.5 else None,
+                    checkpoint_bytes=2 * GB if r < 0.5 else 0.0,
+                    priority=rng.randint(0, 3),
+                )
+            )
+        else:
+            specs.append(
+                WorkflowSpec(name, rng.randint(1, 6), run_time_s=rng.uniform(5, 60),
+                             priority=rng.randint(0, 5))
+            )
+    return orch, specs
+
+
+def _assert_counters_match_batch(orch, now):
+    jobs = orch.jobs
+    if not jobs:
+        return
+    live = orch.live_report(now)
+    rep = summarize(jobs, n_storage_nodes=4, now=now)
+    assert live.n_jobs == rep.n_jobs
+    assert live.n_done == rep.n_done
+    assert live.n_failed == rep.n_failed
+    # batch retries = extra QUEUED entries = fault requeues + preemptions
+    assert live.retries + live.preemptions == rep.total_retries
+    assert live.preemptions == rep.preemptions
+    assert live.resumes == rep.resumes
+    assert live.run_s_saved == pytest.approx(rep.run_s_saved)
+    assert live.staged_in_bytes == pytest.approx(rep.staged_in_bytes)
+    assert live.staged_out_bytes == pytest.approx(rep.staged_out_bytes)
+    assert live.stage_in_bytes_saved == pytest.approx(rep.stage_in_bytes_saved)
+    assert live.makespan_s == pytest.approx(rep.makespan_s)
+    assert live.storage_node_utilization == pytest.approx(
+        storage_node_utilization(jobs, 4, rep.makespan_s, now)
+    )
+
+
+def test_live_counters_match_batch_metrics_mid_flight_and_final():
+    for seed in (0, 1, 2):
+        orch, specs = _counter_campaign(seed)
+        for spec in specs:
+            orch.submit(spec, at=float(specs.index(spec)))
+        for t in (10.0, 45.0, 120.0, 300.0):
+            orch.engine.run(until=t)
+            _assert_counters_match_batch(orch, orch.engine.now)
+        orch.engine.run()
+        assert all(j.done for j in orch.jobs)
+        _assert_counters_match_batch(orch, orch.engine.now)
+
+
+# -- data-aware fraction cache (satellite) ------------------------------------
+def test_data_aware_fraction_cache_invalidates_on_epoch():
+    orch = Orchestrator(dom_cluster())
+    orch.enable_pools(ttl_s=None)
+    orch.pools.create_pool(nodes=2)
+    policy = DataAwarePolicy(orch.provision)
+    calls = []
+    real = orch.provision.resident_fraction
+    orch.provision.resident_fraction = lambda ds: (calls.append(ds), real(ds))[1]
+
+    ds = (DatasetRef("d", 10 * GB),)
+    f0 = policy.resident_fraction(ds)
+    f1 = policy.resident_fraction(ds)
+    assert f0 == f1 == 0.0
+    assert len(calls) == 1                  # second lookup served from cache
+
+    job = orch.submit(
+        WorkflowSpec("p", 1, use_pool=True, datasets=ds, run_time_s=10.0)
+    )
+    orch.engine.run()
+    assert job.done
+    f2 = policy.resident_fraction(ds)
+    assert f2 == 1.0                        # epoch moved: recomputed, now warm
+    assert len(calls) == 2
+    assert policy.resident_fraction(ds) == 1.0 and len(calls) == 2
+
+
+def test_data_aware_order_matches_uncached_ranking():
+    """The cache must be invisible to ranking: a fresh policy (no cache
+    state) and a used one produce identical sort keys."""
+    orch = Orchestrator(dom_cluster())
+    orch.enable_pools(ttl_s=None)
+    orch.pools.create_pool(nodes=2)
+    warm = DatasetRef("warm", 5 * GB)
+    done = orch.run_campaign(
+        [WorkflowSpec("w", 1, use_pool=True, datasets=(warm,), run_time_s=5.0)]
+    )
+    assert all(j.done for j in done)
+    used = DataAwarePolicy(orch.provision)
+    jobs = [
+        orch._make_job(
+            WorkflowSpec(f"q{i}", 1, use_pool=True,
+                         datasets=(warm,) if i % 2 else (DatasetRef("cold", GB),)),
+            None,
+        )
+        for i in range(4)
+    ]
+    keys_used = [used.sort_key(j, orch.scheduler, 0.0) for j in jobs]
+    keys_used2 = [used.sort_key(j, orch.scheduler, 0.0) for j in jobs]
+    fresh = DataAwarePolicy(orch.provision)
+    keys_fresh = [fresh.sort_key(j, orch.scheduler, 0.0) for j in jobs]
+    assert keys_used == keys_used2 == keys_fresh
+
+
+# -- _pool_wait_n drift guard (satellite property test) -----------------------
+def _pool_wait_scan(orch):
+    return sum(orch._pool_waiting(j) for j in orch.jobs)
+
+
+def _drift_campaign(seed):
+    rng = random.Random(seed)
+    orch = Orchestrator(
+        dom_cluster(),
+        faults=FaultInjector(
+            FaultSpec(stage_in_fail_p=0.15, run_fail_p=0.15, seed=seed)
+        ),
+        preemption=PreemptionPolicy(),
+    )
+    orch.enable_pools(ttl_s=rng.choice([None, 200.0]))
+    orch.pools.create_pool(nodes=1, cap_bytes=40 * GB)
+    specs, times = [], []
+    for i in range(30):
+        name = f"j{i:02d}"
+        if rng.random() < 0.5:
+            specs.append(
+                WorkflowSpec(
+                    name, rng.randint(1, 3), use_pool=True,
+                    datasets=(DatasetRef(f"d{i % 3}", 6 * GB),),
+                    stage_in_bytes=rng.uniform(0, 4) * GB,
+                    run_time_s=rng.uniform(5, 50),
+                    max_retries=rng.randint(0, 2),
+                    checkpoint_every_s=rng.choice([None, 10.0]),
+                )
+            )
+        else:
+            specs.append(
+                WorkflowSpec(
+                    name, rng.randint(1, 4), run_time_s=rng.uniform(5, 50),
+                    max_retries=rng.randint(0, 1),
+                    priority=rng.randint(0, 4),
+                    checkpoint_every_s=rng.choice([None, 15.0]),
+                )
+            )
+        times.append(rng.uniform(0, 60))
+    return orch, specs, times
+
+
+def _drift_trace(seed):
+    orch, specs, times = _drift_campaign(seed)
+    for spec, t in zip(specs, times):
+        orch.submit(spec, at=t)
+    checkpoints = sorted({round(t) + k * 17.0 for t in times[:6] for k in range(3)})
+    for t in checkpoints:
+        orch.engine.run(until=t)
+        assert orch._pool_wait_n == _pool_wait_scan(orch), (
+            f"seed {seed}: drift at t={t}"
+        )
+    orch.engine.run()
+    assert all(j.done for j in orch.jobs)
+    assert orch._pool_wait_n == _pool_wait_scan(orch) == 0
+
+
+def test_pool_wait_counter_never_drifts_seeded():
+    """Retry-to-FAILED, preempt-resume, and lease re-attach paths all
+    mutate the incremental counter; at arbitrary instants it must equal a
+    from-scratch scan over every job."""
+    for seed in range(8):
+        _drift_trace(seed)
+
+
+def test_pool_wait_counter_never_drifts_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import strategies as st
+
+    @hyp.settings(max_examples=25, deadline=None)
+    @hyp.given(st.integers(min_value=0, max_value=10_000))
+    def check(seed):
+        _drift_trace(seed)
+
+    check()
