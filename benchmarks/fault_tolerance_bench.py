@@ -21,7 +21,8 @@ the no-preemption replay.
 
 ``derived`` reports both modes' virtual makespan, staged bytes, and the
 work-saved counters; the JSON trajectory lands in
-``benchmarks/out/fault_tolerance.json``.
+``benchmarks/out/fault_tolerance.json`` and the repo-root
+``BENCH_fault.json`` perf-trajectory point.
 """
 
 from __future__ import annotations
@@ -29,6 +30,7 @@ from __future__ import annotations
 import json
 import os
 import random
+import time
 
 from repro.core import synthetic_cluster
 from repro.orchestrator import (
@@ -49,6 +51,7 @@ N_JOBS = 60
 SEED = 7
 FAULT_FRACTION = 0.35
 OUT_PATH = os.path.join(os.path.dirname(__file__), "out", "fault_tolerance.json")
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_fault.json")
 
 
 class ScriptedRunFaults(FaultInjector):
@@ -182,9 +185,14 @@ def rows():
             "priority_wait_s_without": sum(off_waits),
         },
     }
+    results["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
     os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
-    with open(OUT_PATH, "w") as f:
-        json.dump(results, f, indent=2)
+    # this scenario runs at its full (only) size every time, so both the
+    # gitignored out/ copy and the committed trajectory point refresh
+    for path in (OUT_PATH, BENCH_PATH):
+        with open(path, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+            f.write("\n")
 
     return [
         (

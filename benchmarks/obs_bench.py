@@ -1,0 +1,217 @@
+"""Observability overhead benchmark: tracing must be near-free.
+
+The PR 6 tentpole wires a trace recorder through the engine, lifecycle,
+provisioning, pool, and scheduler hot paths. This bench is the gate that
+the wiring stays opt-in and cheap:
+
+* **tracing off** (the default ``NullRecorder``) — the campaign must hold
+  the same machine-scaled events/cpu-s floor as the PR 4 campaign-scale
+  smoke (``OFF_EVENTS_FLOOR``, scaled by ``min(1, machine_score /
+  REFERENCE_MACHINE_SCORE)``): the instrumented call sites cost one
+  attribute check each, within noise of the pre-PR engine;
+* **tracing on** (a full ``TraceRecorder`` + ``MetricsHub``) — throughput
+  must stay >= ``ON_OFF_RATIO_FLOOR`` (85%) of the tracing-off rate on
+  the same machine window.
+
+Both rates are CPU-time based and best-of-``FLOOR_ATTEMPTS`` paired
+attempts (off/on measured back-to-back so a shared container's speed
+shifts hit both sides). The traced run is also sanity-checked to have
+actually recorded (spans for every job, counter activity) — a gate that
+traces nothing proves nothing.
+
+Results land in ``benchmarks/out/obs_bench.json`` and the repo-root
+``BENCH_obs.json`` perf-trajectory point.
+
+    PYTHONPATH=src python -m benchmarks.obs_bench
+"""
+
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import os
+import time
+
+from repro.core import synthetic_cluster
+from repro.obs import MetricsHub, TraceRecorder
+from repro.orchestrator import Orchestrator, summarize
+
+from .campaign_scale_bench import (
+    POLICIES,
+    REFERENCE_MACHINE_SCORE,
+    machine_score,
+    serving_specs,
+)
+
+# Same shape as the PR 4 perf-smoke rows(): 4k serving jobs, 400/100 nodes.
+N_JOBS = 4_000
+N_COMPUTE = 400
+N_STORAGE = 100
+POLICY = "fifo"
+
+#: tracing-off floor — the PR 4 campaign-scale smoke gate, machine-scaled
+OFF_EVENTS_FLOOR = 20_000
+#: tracing-on throughput >= this fraction of tracing-off (same window)
+ON_OFF_RATIO_FLOOR = 0.85
+FLOOR_ATTEMPTS = 4
+#: virtual-time cadence for metric sampling in the traced run
+SAMPLE_EVERY_S = 120.0
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "out", "obs_bench.json")
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_obs.json")
+
+
+def _run_once(traced: bool) -> dict:
+    specs = serving_specs(N_JOBS)
+    recorder = None
+    hub = None
+    if traced:
+        hub = MetricsHub()
+        recorder = TraceRecorder(metrics=hub, sample_every_s=SAMPLE_EVERY_S)
+    orch = Orchestrator(
+        synthetic_cluster(N_COMPUTE, N_STORAGE),
+        policy=POLICIES[POLICY](),
+        incremental=True,
+        record_allocations=False,
+        recorder=recorder,
+    )
+    gc_was_enabled = gc.isenabled()
+    gc.collect()
+    gc.freeze()
+    gc.disable()
+    try:
+        cpu0 = time.process_time()
+        jobs = orch.run_campaign(specs)
+        cpu_s = time.process_time() - cpu0
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+        gc.unfreeze()
+        gc.collect()
+    report = summarize(jobs, n_storage_nodes=N_STORAGE)
+    assert report.n_done == N_JOBS, f"{report.n_failed} of {N_JOBS} jobs failed"
+    if traced:
+        # the gate must measure a trace that actually happened
+        assert len(recorder.spans) == N_JOBS, (
+            f"traced run recorded spans for {len(recorder.spans)} of {N_JOBS} jobs"
+        )
+        assert recorder.counts.get("scheduler.grants", 0) >= N_JOBS
+        assert hub.samples_taken > 0, "metrics hub never sampled"
+    events = orch.engine.events_processed
+    row = {
+        "traced": traced,
+        "cpu_s": round(cpu_s, 3),
+        "events": events,
+        "events_per_cpu_s": round(events / cpu_s),
+    }
+    if traced:
+        row["n_spans"] = recorder.n_spans
+        row["n_trace_events"] = len(recorder.events)
+        row["metrics_samples"] = hub.samples_taken
+    return row
+
+
+def run_gate(
+    *,
+    attempts: int = FLOOR_ATTEMPTS,
+    off_events_floor: float = OFF_EVENTS_FLOOR,
+    ratio_floor: float = ON_OFF_RATIO_FLOOR,
+) -> dict:
+    """Measure off/on pairs until both floors pass (or attempts run out);
+    asserts the floors on the best pair. Returns the JSON payload."""
+    pairs = []
+    best = None
+    for _ in range(max(1, attempts)):
+        score0 = machine_score(repeat=1)
+        off = _run_once(traced=False)
+        on = _run_once(traced=True)
+        score1 = machine_score(repeat=1)
+        score = max(score0, score1)
+        scale = min(1.0, score / REFERENCE_MACHINE_SCORE)
+        ratio = on["events_per_cpu_s"] / max(off["events_per_cpu_s"], 1)
+        pair = {
+            "off": off,
+            "on": on,
+            "machine_score": round(score),
+            "floor_scale": round(scale, 3),
+            "on_off_ratio": round(ratio, 4),
+        }
+        pairs.append(pair)
+        if best is None or ratio > best["on_off_ratio"]:
+            best = pair
+        if (
+            off["events_per_cpu_s"] >= off_events_floor * scale
+            and ratio >= ratio_floor
+        ):
+            best = pair
+            break
+    scaled_floor = off_events_floor * best["floor_scale"]
+    assert best["off"]["events_per_cpu_s"] >= scaled_floor, (
+        f"tracing-off {best['off']['events_per_cpu_s']} events/cpu-s below "
+        f"the PR 4 gate ({off_events_floor} x machine scale "
+        f"{best['floor_scale']:.2f} = {scaled_floor:.0f})"
+    )
+    assert best["on_off_ratio"] >= ratio_floor, (
+        f"tracing-on throughput is {best['on_off_ratio']:.1%} of tracing-off, "
+        f"below the {ratio_floor:.0%} overhead bound"
+    )
+    payload = {
+        "bench": "obs_overhead",
+        "config": {
+            "n_jobs": N_JOBS,
+            "n_compute": N_COMPUTE,
+            "n_storage": N_STORAGE,
+            "policy": POLICY,
+            "off_events_floor": off_events_floor,
+            "on_off_ratio_floor": ratio_floor,
+            "reference_machine_score": REFERENCE_MACHINE_SCORE,
+        },
+        "best": best,
+        "attempts": pairs,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+    }
+    write_trajectory(payload)
+    return payload
+
+
+def write_trajectory(payload: dict) -> None:
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    for path in (OUT_PATH, BENCH_PATH):
+        with open(path, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+
+
+def rows():
+    """Registered entry point for ``benchmarks.run``."""
+    payload = run_gate()
+    best = payload["best"]
+    return [
+        (
+            "obs/tracing-off",
+            0.0,
+            f"ev/cpu-s={best['off']['events_per_cpu_s']} "
+            f"floor-scale={best['floor_scale']}",
+        ),
+        (
+            "obs/tracing-on",
+            0.0,
+            f"ev/cpu-s={best['on']['events_per_cpu_s']} "
+            f"ratio={best['on_off_ratio']:.3f} "
+            f"spans={best['on']['n_spans']} "
+            f"events={best['on']['n_trace_events']}",
+        ),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--attempts", type=int, default=FLOOR_ATTEMPTS)
+    args = ap.parse_args()
+    payload = run_gate(attempts=args.attempts)
+    print(json.dumps(payload, indent=2, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,7 @@ def main() -> None:
         ior_shared,
         kernels_bench,
         mdtest,
+        obs_bench,
         orchestrator_bench,
         pool_bench,
         provision_bench,
@@ -43,6 +44,7 @@ def main() -> None:
         ("provision", provision_bench),    # StorageSession API negotiation
         ("campaign_scale", campaign_scale_bench),  # 50k-job engine scaling
         ("fault_tolerance", fault_tolerance_bench),  # checkpoint resume + preemption
+        ("obs", obs_bench),                # tracing overhead gate
         ("kernels", kernels_bench),
         ("roofline", roofline),            # §Roofline (reads dry-run artifacts)
     ]

@@ -20,6 +20,7 @@ import itertools
 import math
 from typing import Optional
 
+from ..obs.trace import NULL_RECORDER
 from .resources import ClusterSpec, ComputeNode, StorageNode
 
 
@@ -131,6 +132,9 @@ class Scheduler:
         self._next_id = itertools.count(1)
         #: bumped on every grant/release batch (cache-invalidation signal)
         self.epoch = 0
+        #: observability sink for grant/release events (no-op by default;
+        #: the recorder stamps virtual time itself — the scheduler is clockless)
+        self.recorder = NULL_RECORDER
         # -- indexed ledger ---------------------------------------------------
         # a sorted list is a valid min-heap; one entry per free node
         self._compute_ids = sorted(self._free_compute)
@@ -405,6 +409,9 @@ class Scheduler:
         alloc = Allocation(next(self._next_id), req.job_name, tuple(compute), tuple(storage))
         self._live[alloc.job_id] = alloc
         self.epoch += 1
+        rec = self.recorder
+        if rec.enabled:
+            rec.sched_grant(alloc)
         return alloc
 
     def release(self, alloc: Allocation) -> None:
@@ -422,6 +429,9 @@ class Scheduler:
             heapq.heappush(self._free_cap_heap, (self._node_cap[nid], nid))
             heapq.heappush(self._free_bw_heap, (self._node_bw[nid], nid))
         self.epoch += 1
+        rec = self.recorder
+        if rec.enabled:
+            rec.sched_release(alloc)
 
 
 def size_for_checkpoint(

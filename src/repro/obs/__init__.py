@@ -1,0 +1,57 @@
+"""Observability: campaign tracing, time-series metrics, trace exporters,
+and critical-path profiling.
+
+Opt-in by construction: every hot component defaults to the shared no-op
+:data:`~repro.obs.trace.NULL_RECORDER`, and the only obs module the hot
+loops may import is :mod:`repro.obs.trace` (the recorder interface —
+``tools/check_obs_imports.py`` guards this). Turning tracing on is one
+argument::
+
+    from repro.obs import MetricsHub, TraceRecorder
+
+    hub = MetricsHub()
+    rec = TraceRecorder(metrics=hub, sample_every_s=120.0)
+    orch = Orchestrator(cluster, recorder=rec)
+    orch.run_campaign(specs)
+
+    from repro.obs.export import write_chrome_trace
+    from repro.obs.profile import critical_path, format_critical_path
+
+    write_chrome_trace("trace.json", rec, hub)     # open in Perfetto
+    print(format_critical_path(critical_path(rec)))
+"""
+
+from .metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsHub,
+    TimeSeries,
+)
+from .trace import NULL_RECORDER, NullRecorder, TraceRecorder
+from .export import chrome_trace, jsonl_records, write_chrome_trace, write_jsonl
+from .profile import (
+    CriticalPath,
+    PathSegment,
+    critical_path,
+    format_critical_path,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsHub",
+    "TimeSeries",
+    "NULL_RECORDER",
+    "NullRecorder",
+    "TraceRecorder",
+    "chrome_trace",
+    "jsonl_records",
+    "write_chrome_trace",
+    "write_jsonl",
+    "CriticalPath",
+    "PathSegment",
+    "critical_path",
+    "format_critical_path",
+]

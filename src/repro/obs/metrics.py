@@ -1,0 +1,173 @@
+"""Time-series metrics: counters, gauges, histograms, ring-buffer series.
+
+A :class:`MetricsHub` is the one handle a :class:`~repro.obs.trace.TraceRecorder`
+carries. Probes (zero-arg callables reading live orchestrator state) are
+registered once and sampled on a virtual-time cadence; every sample lands
+in a bounded ring buffer, so a 50k-job campaign's dashboard series stay
+O(maxlen) regardless of length. Nothing here schedules engine events or
+mutates simulation state — sampling is pull-only.
+
+Pure stdlib, no ``repro`` imports: usable from any layer without cycles.
+"""
+
+from __future__ import annotations
+
+import bisect
+from collections import deque
+from typing import Callable, Iterable, Optional
+
+#: Default histogram bucket upper bounds (seconds-flavored, but buckets are
+#: unit-agnostic); one overflow bucket is implied past the last bound.
+DEFAULT_BOUNDS: tuple[float, ...] = (0.1, 1.0, 10.0, 60.0, 300.0, 1800.0, 7200.0)
+
+
+class Counter:
+    """Monotonically increasing total."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        self.value += n
+
+
+class Gauge:
+    """Last-write-wins instantaneous value."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = v
+
+
+class Histogram:
+    """Fixed-bucket histogram: counts per upper bound plus an overflow
+    bucket; tracks total/sum/min/max for cheap summary stats."""
+
+    __slots__ = ("name", "bounds", "counts", "total", "sum", "min", "max")
+
+    def __init__(self, name: str, bounds: Iterable[float] = DEFAULT_BOUNDS):
+        self.name = name
+        self.bounds = tuple(sorted(bounds))
+        self.counts = [0] * (len(self.bounds) + 1)
+        self.total = 0
+        self.sum = 0.0
+        self.min: Optional[float] = None
+        self.max: Optional[float] = None
+
+    def observe(self, v: float) -> None:
+        self.counts[bisect.bisect_left(self.bounds, v)] += 1
+        self.total += 1
+        self.sum += v
+        if self.min is None or v < self.min:
+            self.min = v
+        if self.max is None or v > self.max:
+            self.max = v
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.total if self.total else 0.0
+
+
+class TimeSeries:
+    """Bounded ``(t, value)`` ring buffer — old samples fall off the front."""
+
+    __slots__ = ("name", "_buf")
+
+    def __init__(self, name: str, maxlen: int = 4096):
+        self.name = name
+        self._buf: deque[tuple[float, float]] = deque(maxlen=maxlen)
+
+    def append(self, t: float, v: float) -> None:
+        self._buf.append((t, v))
+
+    def items(self) -> list[tuple[float, float]]:
+        return list(self._buf)
+
+    def last(self) -> Optional[tuple[float, float]]:
+        return self._buf[-1] if self._buf else None
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+
+class MetricsHub:
+    """Registry of named instruments plus the probe-sampling driver."""
+
+    def __init__(self, *, maxlen: int = 4096):
+        self.maxlen = maxlen
+        self.counters: dict[str, Counter] = {}
+        self.gauges: dict[str, Gauge] = {}
+        self.histograms: dict[str, Histogram] = {}
+        self.series: dict[str, TimeSeries] = {}
+        self._probes: list[tuple[str, Callable[[], float]]] = []
+        self.samples_taken = 0
+
+    # -- instruments (get-or-create) ------------------------------------------
+    def counter(self, name: str) -> Counter:
+        c = self.counters.get(name)
+        if c is None:
+            c = self.counters[name] = Counter(name)
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        g = self.gauges.get(name)
+        if g is None:
+            g = self.gauges[name] = Gauge(name)
+        return g
+
+    def histogram(
+        self, name: str, bounds: Iterable[float] = DEFAULT_BOUNDS
+    ) -> Histogram:
+        h = self.histograms.get(name)
+        if h is None:
+            h = self.histograms[name] = Histogram(name, bounds)
+        return h
+
+    # -- time series ----------------------------------------------------------
+    def record(self, name: str, t: float, v: float) -> None:
+        """Append one ``(t, v)`` sample to the named series."""
+        s = self.series.get(name)
+        if s is None:
+            s = self.series[name] = TimeSeries(name, maxlen=self.maxlen)
+        s.append(t, v)
+
+    # -- probes ---------------------------------------------------------------
+    def add_probe(self, name: str, fn: Callable[[], float]) -> None:
+        """Register a zero-arg read-only callable sampled by :meth:`sample`."""
+        self._probes.append((name, fn))
+
+    def sample(self, t: float) -> None:
+        """Read every probe once and append to its series (and gauge)."""
+        self.samples_taken += 1
+        for name, fn in self._probes:
+            v = fn()
+            self.record(name, t, v)
+            self.gauge(name).value = v
+
+    # -- export ---------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Plain-data summary (JSON-serializable)."""
+        return {
+            "counters": {k: c.value for k, c in self.counters.items()},
+            "gauges": {k: g.value for k, g in self.gauges.items()},
+            "histograms": {
+                k: {
+                    "bounds": list(h.bounds),
+                    "counts": list(h.counts),
+                    "total": h.total,
+                    "mean": h.mean,
+                    "min": h.min,
+                    "max": h.max,
+                }
+                for k, h in self.histograms.items()
+            },
+            "series": {k: s.items() for k, s in self.series.items()},
+        }

@@ -18,11 +18,18 @@ from typing import Callable, Iterable, Optional
 class SimEngine:
     """A discrete-event loop over a virtual clock."""
 
+    #: How many processed events between recorder heap-depth samples.
+    SAMPLE_EVERY = 512
+
     def __init__(self, start: float = 0.0):
         self._now = start
         self._heap: list[tuple[float, int, Callable[[], None]]] = []
         self._seq = itertools.count()
         self._events_processed = 0
+        # observability: an enabled repro.obs.trace recorder gets periodic
+        # heap-depth samples from run(); None / NullRecorder cost one local
+        # truthiness check per event
+        self.recorder = None
 
     @property
     def now(self) -> float:
@@ -83,6 +90,10 @@ class SimEngine:
         processed = 0
         heap = self._heap
         pop = heapq.heappop
+        rec = self.recorder
+        if rec is not None and not rec.enabled:
+            rec = None
+        sample_mask = self.SAMPLE_EVERY - 1
         while heap:
             if until is not None and heap[0][0] > until:
                 self._now = until
@@ -92,6 +103,8 @@ class SimEngine:
             fn()
             processed += 1
             self._events_processed += 1
+            if rec is not None and not (self._events_processed & sample_mask):
+                rec.engine_sample(self._now, len(heap), self._events_processed)
             if max_events is not None and processed >= max_events:
                 raise RuntimeError(
                     f"engine processed {max_events} events without draining; "
@@ -99,4 +112,8 @@ class SimEngine:
                 )
         if until is not None and until > self._now:
             self._now = until
+        if rec is not None and processed:
+            # closing sample: short runs (< SAMPLE_EVERY events) still get
+            # at least one, and every trace ends with a drained-heap point
+            rec.engine_sample(self._now, len(heap), self._events_processed)
         return self._now

@@ -64,6 +64,7 @@ from typing import Optional
 
 from ..core.perfmodel import FSDeployment, dom_lustre
 from ..core.scheduler import Allocation, AllocationError, JobRequest, StorageRequest
+from ..obs.trace import NULL_RECORDER
 from ..pool.catalog import DatasetRef, total_bytes
 from ..pool.manager import PoolManager
 from ..pool.pool import Lease
@@ -400,6 +401,7 @@ class Orchestrator:
         incremental: Optional[bool] = None,
         record_allocations: bool = True,
         preemption: Optional[PreemptionPolicy] = None,
+        recorder=None,
     ):
         self.engine = engine or SimEngine()
         if provision is None:
@@ -454,6 +456,14 @@ class Orchestrator:
         self._running: dict[int, JobRecord] = {}
         self.reservation: Optional[Reservation] = None
         self.counters = LiveCounters()
+        # observability: a repro.obs.trace.TraceRecorder wires itself into
+        # the engine, the provisioning service, the scheduler, and the pool
+        # subsystem here (bind is read-only: it never schedules events or
+        # touches job/session state, so traced campaigns replay
+        # bit-identically — see tests/test_obs.py)
+        self.recorder = recorder if recorder is not None else NULL_RECORDER
+        if self.recorder.enabled:
+            self.recorder.bind(self)
 
     @property
     def faults(self) -> FaultInjector:
@@ -652,6 +662,9 @@ class Orchestrator:
         except AllocationError:
             return Reservation(job.job_id, 0, 0, None)
         t = self.scheduler.earliest_fit(hc, hs, self.engine.now)
+        rec = self.recorder
+        if rec.enabled:
+            rec.reservation(job.job_id, t)
         return Reservation(job.job_id, hc, hs, t)
 
     def _reserved_try_open(
@@ -958,6 +971,9 @@ class Orchestrator:
                 session.allocation,
                 self.engine.now + self._session_span_s(job, session),
             )
+        rec = self.recorder
+        if rec.enabled:
+            rec.grant(job, session)
         self._transition(job, JobState.PROVISIONING)
         eng = self.engine
         eng.at(
@@ -1078,6 +1094,9 @@ class Orchestrator:
         )
         job.checkpoints_committed += 1
         self.counters.checkpoints += 1
+        rec = self.recorder
+        if rec.enabled:
+            rec.checkpoint(job)
         self._schedule_run(job)
 
     def _run_progress(self, job: JobRecord, now: float) -> float:
@@ -1127,7 +1146,11 @@ class Orchestrator:
         job.failure_phase = phase
         self._release(job)
         job.attempt += 1
-        if job.attempt > job.spec.max_retries:
+        requeued = job.attempt <= job.spec.max_retries
+        rec = self.recorder
+        if rec.enabled:
+            rec.fault(job, phase, requeued)
+        if not requeued:
             self._transition(job, JobState.FAILED)
         else:
             self.counters.retries += 1
@@ -1139,6 +1162,9 @@ class Orchestrator:
         session = job.session
         if session is None:
             return
+        rec = self.recorder
+        if rec.enabled:
+            rec.release(job)
         job.run_token += 1           # any in-flight run event is now stale
         if job.allocation is not None:
             t0 = job.alloc_started if job.alloc_started is not None else self.engine.now
@@ -1200,6 +1226,9 @@ class Orchestrator:
         else:
             job.state = state
         job.history.append((state, self.engine.now))
+        rec = self.recorder
+        if rec.enabled:
+            rec.transition(job, state)
         counters = self.counters
         counters.t_last_event = self.engine.now
         if state is JobState.RUNNING:
@@ -1241,6 +1270,9 @@ class Orchestrator:
         victim._preempt_pending = False
         victim.preemptions += 1
         self.counters.preemptions += 1
+        rec = self.recorder
+        if rec.enabled:
+            rec.preemption(victim)
         self._release(victim)
         self._transition(victim, JobState.QUEUED)
         self._enqueue(victim)

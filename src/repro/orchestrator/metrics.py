@@ -78,6 +78,10 @@ class CampaignReport:
     preemptions: int = 0                 # checkpoint-and-release requeues
     resumes: int = 0                     # attempts started with committed work
     run_s_saved: float = 0.0             # run seconds resumes did not replay
+    #: makespan attribution from the span DAG (a
+    #: :class:`repro.obs.profile.CriticalPath`); populated when
+    #: :func:`summarize` is handed the campaign's trace recorder
+    critical_path: Optional[object] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -201,7 +205,11 @@ def summarize(
     n_storage_nodes: int,
     now: Optional[float] = None,
     pools=None,
+    trace=None,
 ) -> CampaignReport:
+    """Fold job records into a :class:`CampaignReport`. Pass the campaign's
+    :class:`~repro.obs.trace.TraceRecorder` as ``trace`` to also attach the
+    critical-path makespan attribution (see :mod:`repro.obs.profile`)."""
     if not jobs:
         raise ValueError("no jobs to summarize")
     breakdowns = tuple(job_breakdown(j, now) for j in jobs)
@@ -246,7 +254,19 @@ def summarize(
         preemptions=sum(j.preemptions for j in jobs),
         resumes=sum(j.resume_attempts for j in jobs),
         run_s_saved=sum(j.run_s_saved for j in jobs),
+        critical_path=_critical_path(trace),
     )
+
+
+def _critical_path(trace):
+    """Offline reporting step — imported lazily so the hot lifecycle path
+    never loads the profiler (tools/check_obs_imports.py allows hot modules
+    only module-level imports of the recorder interface)."""
+    if trace is None:
+        return None
+    from ..obs.profile import critical_path
+
+    return critical_path(trace)
 
 
 def format_report(report: CampaignReport, *, top_n: int = 10) -> str:
@@ -283,6 +303,10 @@ def format_report(report: CampaignReport, *, top_n: int = 10) -> str:
             f"evictions: {p.evictions} ({p.evicted_bytes / 1e9:,.1f} GB), "
             f"pool occupancy {p.occupancy:.1%}",
         ]
+    if report.critical_path is not None:
+        from ..obs.profile import format_critical_path
+
+        lines.append(format_critical_path(report.critical_path))
     lines.append(f"slowest {min(top_n, report.n_jobs)} jobs:")
     slowest = sorted(report.breakdowns, key=lambda b: -b.total_s)[:top_n]
     for b in slowest:

@@ -18,6 +18,7 @@ from __future__ import annotations
 import abc
 from typing import TYPE_CHECKING
 
+from ..obs.trace import NULL_RECORDER
 from .catalog import DataCatalog, Residency
 
 if TYPE_CHECKING:  # avoid a cycle: manager imports eviction
@@ -63,6 +64,9 @@ class Evictor:
         self.policy = policy or LRUEviction()
         self.evictions = 0
         self.evicted_bytes = 0.0
+        # observability sink (no-op by default; PoolManager propagates its
+        # recorder here). The recorder stamps virtual time itself.
+        self.recorder = NULL_RECORDER
 
     def make_room(
         self, pool: "StoragePool", catalog: DataCatalog, need_bytes: float
@@ -76,9 +80,12 @@ class Evictor:
         victims = self.policy.victims(pool, catalog, need_bytes)
         if not victims:
             return False
+        rec = self.recorder
         for r in victims:
             catalog.invalidate(pool.pool_id, r.dataset.name)
             pool.uncharge_dataset(r.dataset.name)
             self.evictions += 1
             self.evicted_bytes += r.dataset.nbytes
+            if rec.enabled:
+                rec.eviction(pool.pool_id, r.dataset.name, r.dataset.nbytes)
         return pool.free_bytes >= need_bytes

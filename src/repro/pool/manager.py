@@ -30,6 +30,7 @@ from typing import Callable, Iterable, Optional, Sequence
 
 from ..core.perfmodel import predict_deploy_time
 from ..core.provisioner import Provisioner
+from ..obs.trace import NULL_RECORDER
 from ..core.scheduler import (
     AllocationError,
     JobRequest,
@@ -93,6 +94,18 @@ class PoolManager:
         self._pool_ids = itertools.count(1)
         self._lease_ids = itertools.count(1)
         self._epoch = 0
+        self._recorder = NULL_RECORDER
+
+    @property
+    def recorder(self):
+        """Observability sink for pool/lease/eviction events (no-op by
+        default). Assigning propagates to the evictor."""
+        return self._recorder
+
+    @recorder.setter
+    def recorder(self, rec) -> None:
+        self._recorder = rec
+        self.evictor.recorder = rec
 
     @property
     def epoch(self) -> int:
@@ -167,6 +180,9 @@ class PoolManager:
         self.catalog.register_pool(pool_id)
         self.stats.pools_created += 1
         self._epoch += 1
+        rec = self._recorder
+        if rec.enabled:
+            rec.pool_created(pool, now)
         return pool
 
     def retire(self, pool: StoragePool, now: Optional[float] = None) -> bool:
@@ -177,6 +193,9 @@ class PoolManager:
             raise AllocationError(f"pool {pool.name!r} is already retired")
         pool.state = PoolState.DRAINING
         self._epoch += 1
+        rec = self._recorder
+        if rec.enabled:
+            rec.pool_retired(pool, now)
         if pool.n_leases == 0:
             self._teardown(pool, now)
             return True
@@ -212,6 +231,9 @@ class PoolManager:
         pool.retired_at = now
         self.stats.pools_retired += 1
         self._epoch += 1
+        rec = self._recorder
+        if rec.enabled:
+            rec.pool_torn_down(pool, now)
 
     # -- introspection -----------------------------------------------------------
     @property
@@ -335,6 +357,9 @@ class PoolManager:
         self.stats.dataset_hits += len(hits)
         self.stats.dataset_misses += len(missing)
         self._epoch += 1
+        rec = self._recorder
+        if rec.enabled:
+            rec.lease_attached(lease, pool, len(hits), len(missing), now)
         return lease
 
     def on_stage_in_complete(self, lease: Lease, now: Optional[float] = None) -> None:
@@ -373,6 +398,9 @@ class PoolManager:
         pool.release_scratch(lease.scratch_bytes)
         pool.detach(lease.lease_id, now)
         self._epoch += 1
+        rec = self._recorder
+        if rec.enabled:
+            rec.lease_released(lease, now)
         if pool.state is PoolState.DRAINING and pool.n_leases == 0:
             self._teardown(pool, now)
             return True

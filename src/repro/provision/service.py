@@ -36,6 +36,7 @@ from ..core.perfmodel import FSDeployment, dom_lustre
 from ..core.provisioner import Provisioner
 from ..core.resources import ClusterSpec
 from ..core.scheduler import AllocationError, Scheduler
+from ..obs.trace import NULL_RECORDER
 from ..pool.catalog import DatasetRef
 from ..pool.manager import PoolManager
 from .backends import BackendRegistry, default_registry
@@ -97,6 +98,22 @@ class ProvisioningService:
         # modeled stage times repeat across same-shape sessions; keyed by
         # (direction, bytes, streams, src-shape, dst-shape) — see session.py
         self._stage_time_cache: dict[tuple, float] = {}
+        self._recorder = NULL_RECORDER
+
+    # -- observability ---------------------------------------------------------
+    @property
+    def recorder(self):
+        """The trace recorder negotiation/session events flow into (a
+        no-op by default). Assigning propagates to the scheduler and the
+        pool subsystem, including managers created later."""
+        return self._recorder
+
+    @recorder.setter
+    def recorder(self, rec) -> None:
+        self._recorder = rec
+        self.scheduler.recorder = rec
+        if self.pool_manager is not None:
+            self.pool_manager.recorder = rec
 
     def _now(self, now: Optional[float]) -> float:
         if now is not None:
@@ -121,6 +138,7 @@ class ProvisioningService:
                 )
         kwargs.setdefault("clock", self.clock)
         self.pool_manager = PoolManager(self.scheduler, self.provisioner, **kwargs)
+        self.pool_manager.recorder = self._recorder
         # a fresh manager restarts its epoch at 0; the generation counter
         # keeps POOLED offers cached against the old manager from matching
         self._pool_gen += 1
@@ -160,9 +178,15 @@ class ProvisioningService:
         sig = spec.signature()
         epoch = self._negotiation_epoch(spec)
         cache = self._offer_cache
+        rec = self._recorder
         result = cache.lookup(sig, epoch)
         if result is not None:
-            stats.negotiations_cached = cache.hits
+            # increment, never assign from cache.hits: the cache object can
+            # be swapped/reset mid-campaign while the stats must keep
+            # accumulating (tests/test_provision_api.py pins this)
+            stats.negotiations_cached += 1
+            if rec.enabled:
+                rec.negotiation(spec.name, None, cached=True)
             if isinstance(result, Offer):
                 return result
             stats.failed_negotiations += 1
@@ -173,10 +197,16 @@ class ProvisioningService:
         except NegotiationError as e:
             cache.store(sig, epoch, e.rejections)
             stats.failed_negotiations += 1
+            if rec.enabled:
+                rec.negotiation(spec.name, None, cached=False, rejections=e.rejections)
             raise
         finally:
             stats.negotiation_wall_s += time.perf_counter() - t0
         cache.store(sig, epoch, offer)
+        if rec.enabled:
+            rec.negotiation(
+                spec.name, offer.backend, cached=False, rejections=offer.rejections
+            )
         return offer
 
     def feasible(self, spec: StorageSpec, *, n_compute: int = 0) -> bool:
@@ -239,6 +269,9 @@ class ProvisioningService:
         )
         if session is not None:
             self.stats.record_open(offer.backend)
+            rec = self._recorder
+            if rec.enabled:
+                rec.session_opened(offer.backend)
         return session
 
     def open_session(

@@ -224,6 +224,9 @@ class StorageSession:
             self.service.scheduler.release(self.allocation)
             self.allocation = None
         self.service.stats.sessions_released += 1
+        rec = self.service.recorder
+        if rec.enabled:
+            rec.session_released(self.backend)
 
     def retire(self, now: Optional[float] = None) -> bool:
         """PERSISTENT only: stop granting leases on the created pool and tear

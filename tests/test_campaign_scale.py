@@ -239,13 +239,17 @@ def _mixed_specs(seed: int, n: int) -> list:
 
 
 def _campaign_fingerprint(policy_name: str, incremental: bool, seed: int,
-                          n_jobs: int, cluster_fn):
+                          n_jobs: int, cluster_fn, *, recorder=None,
+                          out=None):
+    """``recorder``/``out`` let tests/test_obs.py replay the same campaign
+    with tracing on and compare histories + engine event counts."""
     orch = Orchestrator(
         cluster_fn(),
         faults=FaultInjector(
             FaultSpec(stage_in_fail_p=0.08, run_fail_p=0.05, seed=seed)
         ),
         incremental=incremental,
+        recorder=recorder,
     )
     mgr = orch.enable_pools(ttl_s=500.0)
     mgr.create_pool(nodes=1, cap_bytes=60 * GB)
@@ -261,6 +265,8 @@ def _campaign_fingerprint(policy_name: str, incremental: bool, seed: int,
     times = poisson_arrivals(1.0, len(specs), seed=seed)
     jobs = orch.run_campaign(specs, submit_times=list(times))
     assert all(j.done for j in jobs)
+    if out is not None:
+        out["events_processed"] = orch.engine.events_processed
     return [
         (
             j.spec.name,

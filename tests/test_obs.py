@@ -1,0 +1,467 @@
+"""PR 6 observability suite: recorder wiring, determinism, exporters,
+critical path, metrics, and the hot-loop import guard.
+
+The contract under test: tracing is opt-in (every component defaults to
+the shared ``NULL_RECORDER`` no-op), strictly read-only (a campaign
+replayed with the recorder on produces bit-identical ``JobRecord.history``
+and the same engine event count), and complete (spans mirror the history
+log exactly; the critical-path buckets tile the makespan).
+"""
+
+import importlib.util
+import json
+import os
+import random
+
+import pytest
+
+from repro.core import dom_cluster, synthetic_cluster
+from repro.obs import (
+    NULL_RECORDER,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsHub,
+    NullRecorder,
+    TimeSeries,
+    TraceRecorder,
+    critical_path,
+    format_critical_path,
+    jsonl_records,
+    write_chrome_trace,
+    write_jsonl,
+)
+from repro.obs.profile import PHASES
+from repro.orchestrator import (
+    BackfillPolicy,
+    DataAwarePolicy,
+    Orchestrator,
+    WorkflowSpec,
+    format_report,
+    poisson_arrivals,
+    summarize,
+)
+from repro.pool import DatasetRef
+from repro.provision import StorageSpec
+from repro.runtime import FaultInjector, FaultSpec
+
+from test_campaign_scale import _campaign_fingerprint
+
+GB = 1e9
+
+
+def _traced_campaign(n_jobs=40, seed=3, *, pools=True, faults=True,
+                     sample_every_s=30.0):
+    """A small mixed campaign (faults, retries, pools, checkpoints) with a
+    full recorder attached; returns (orch, jobs, recorder, hub)."""
+    hub = MetricsHub()
+    rec = TraceRecorder(metrics=hub, sample_every_s=sample_every_s)
+    orch = Orchestrator(
+        dom_cluster(),
+        policy=BackfillPolicy(),
+        faults=FaultInjector(
+            FaultSpec(stage_in_fail_p=0.1, run_fail_p=0.08, seed=seed)
+        ) if faults else None,
+        recorder=rec,
+    )
+    if pools:
+        mgr = orch.enable_pools(ttl_s=800.0)
+        mgr.create_pool(nodes=1, cap_bytes=40 * GB)
+        orch.policy = DataAwarePolicy(orch.provision)
+    rng = random.Random(seed)
+    specs = []
+    for i in range(n_jobs):
+        name = f"job{i:03d}"
+        r = rng.random()
+        if pools and r < 0.4:
+            ds = DatasetRef(f"d{rng.randint(0, 7)}", (10 + 5 * (i % 4)) * GB)
+            specs.append(
+                WorkflowSpec(name, 1 + i % 2, use_pool=True, datasets=(ds,),
+                             stage_in_bytes=1 * GB, run_time_s=20.0 + i % 7,
+                             max_retries=2)
+            )
+        elif r < 0.8:
+            specs.append(
+                WorkflowSpec(
+                    name, 1 + i % 3,
+                    storage_spec=StorageSpec(
+                        name, nodes=1 + i % 2, managers=("ephemeralfs",),
+                        stage_in_bytes=5 * GB, stage_out_bytes=1 * GB,
+                    ),
+                    run_time_s=30.0 + i % 11, max_retries=2,
+                    checkpoint_every_s=10.0, checkpoint_bytes=1 * GB,
+                )
+            )
+        else:
+            specs.append(WorkflowSpec(name, 1 + i % 4, run_time_s=15.0 + i % 5))
+    jobs = orch.run_campaign(
+        specs, submit_times=poisson_arrivals(0.5, n_jobs, seed=seed)
+    )
+    return orch, jobs, rec, hub
+
+
+# -- opt-in wiring ------------------------------------------------------------
+
+def test_null_recorder_is_the_default_everywhere():
+    orch = Orchestrator(synthetic_cluster(4, 2))
+    assert orch.recorder is NULL_RECORDER
+    assert orch.engine.recorder is None
+    assert orch.provision.recorder is NULL_RECORDER
+    assert orch.scheduler.recorder is NULL_RECORDER
+    mgr = orch.enable_pools()
+    assert mgr.recorder is NULL_RECORDER
+    assert mgr.evictor.recorder is NULL_RECORDER
+    assert NullRecorder.enabled is False and not NULL_RECORDER.enabled
+
+
+def test_null_recorder_methods_are_noops():
+    rec = NullRecorder()
+    assert rec.bind(object()) is rec
+    for call in (
+        lambda: rec.transition(None, None),
+        lambda: rec.grant(None, None),
+        lambda: rec.release(None),
+        lambda: rec.fault(None, "run", True),
+        lambda: rec.negotiation("s", None, cached=True),
+        lambda: rec.eviction(0, "d", 1.0),
+        lambda: rec.engine_sample(0.0, 0, 0),
+    ):
+        assert call() is None
+
+
+def test_bind_propagates_to_every_layer():
+    rec = TraceRecorder()
+    orch = Orchestrator(synthetic_cluster(4, 2), recorder=rec)
+    assert orch.recorder is rec
+    assert orch.engine.recorder is rec
+    assert orch.provision.recorder is rec
+    assert orch.scheduler.recorder is rec
+    mgr = orch.enable_pools()     # created after bind: still propagated
+    assert mgr.recorder is rec
+    assert mgr.evictor.recorder is rec
+
+
+# -- determinism: tracing must not perturb the campaign -----------------------
+
+@pytest.mark.parametrize("policy_name", ["backfill", "data-aware"])
+def test_recorder_on_campaign_is_bit_identical(policy_name):
+    """The acceptance regression: a seeded 500-job campaign (faults,
+    retries, pools, Poisson arrivals) replayed with a full recorder +
+    metrics hub produces identical ``JobRecord.history``, identical
+    allocations, and the same engine event count."""
+    off_stats, on_stats = {}, {}
+    off = _campaign_fingerprint(policy_name, True, 42, 500, dom_cluster,
+                                out=off_stats)
+    rec = TraceRecorder(metrics=MetricsHub(), sample_every_s=60.0)
+    on = _campaign_fingerprint(policy_name, True, 42, 500, dom_cluster,
+                               recorder=rec, out=on_stats)
+    assert off == on
+    assert off_stats["events_processed"] == on_stats["events_processed"]
+    assert len(rec.spans) == 500
+
+
+# -- spans mirror the history log --------------------------------------------
+
+def test_spans_match_job_history_exactly():
+    _, jobs, rec, _ = _traced_campaign(30)
+    assert len(rec.spans) == len(jobs)
+    for job in jobs:
+        hist = job.history
+        expected = [
+            (s0.value, t0, t1) for (s0, t0), (_, t1) in zip(hist, hist[1:])
+        ]
+        final_state, final_t = hist[-1]
+        expected.append((final_state.value, final_t, final_t))
+        assert rec.spans[job.job_id] == expected
+        meta = rec.job_meta[job.job_id]
+        assert meta["name"] == job.spec.name
+        assert meta["submit"] == job.submit_time
+        if job.done:
+            assert meta["backend"] is not None
+
+
+def test_materialization_is_incremental_mid_campaign():
+    rec = TraceRecorder()
+    orch = Orchestrator(synthetic_cluster(4, 2), recorder=rec)
+    for i in range(6):
+        orch.submit(WorkflowSpec(
+            f"j{i}", 1,
+            storage_spec=StorageSpec(f"j{i}", nodes=1, managers=("ephemeralfs",)),
+            run_time_s=50.0,
+        ), at=float(i))
+    orch.engine.run(until=30.0)
+    mid = {j: list(s) for j, s in rec.spans.items()}
+    assert mid                                    # something closed already
+    orch.engine.run()
+    assert all(j.done for j in orch.jobs)
+    for jid, spans in mid.items():
+        # the mid-campaign read is a prefix of the final materialization
+        assert rec.spans[jid][: len(spans)] == spans
+    assert all(s[-1][0] == "done" for s in rec.spans.values())
+
+
+# -- live vs batch reporting with tracing on ----------------------------------
+
+def test_live_report_matches_batch_summarize_with_tracing_on():
+    hub = MetricsHub()
+    rec = TraceRecorder(metrics=hub)
+    orch = Orchestrator(
+        dom_cluster(),
+        policy=BackfillPolicy(),
+        faults=FaultInjector(FaultSpec(run_fail_p=0.1, seed=5)),
+        recorder=rec,
+    )
+    rng = random.Random(5)
+    for i in range(40):
+        orch.submit(
+            WorkflowSpec(
+                f"j{i:02d}", rng.randint(1, 4),
+                storage_spec=StorageSpec(
+                    f"j{i:02d}", nodes=rng.randint(1, 2),
+                    managers=("ephemeralfs",),
+                    stage_in_bytes=rng.uniform(1, 10) * GB,
+                ),
+                run_time_s=rng.uniform(10, 60), max_retries=2,
+                checkpoint_every_s=15.0, checkpoint_bytes=1 * GB,
+            ),
+            at=float(i),
+        )
+    for t in (20.0, 90.0, 250.0):
+        orch.engine.run(until=t)
+        now = orch.engine.now
+        live = orch.live_report(now)
+        rep = summarize(orch.jobs, n_storage_nodes=4, now=now, trace=rec)
+        assert live.n_jobs == rep.n_jobs
+        assert live.n_done == rep.n_done
+        assert live.n_failed == rep.n_failed
+        assert live.retries + live.preemptions == rep.total_retries
+        assert live.staged_in_bytes == pytest.approx(rep.staged_in_bytes)
+        assert live.makespan_s == pytest.approx(rep.makespan_s)
+    orch.engine.run()
+    final = summarize(orch.jobs, n_storage_nodes=4, trace=rec)
+    live = orch.live_report(orch.engine.now)
+    assert live.n_done == final.n_done == 40 - final.n_failed
+
+
+# -- exporters ----------------------------------------------------------------
+
+def test_chrome_trace_is_valid_and_complete(tmp_path):
+    _, jobs, rec, hub = _traced_campaign(40)
+    path = tmp_path / "trace.json"
+    doc = write_chrome_trace(path, rec, metrics=hub)
+    with open(path) as fh:
+        assert json.load(fh) == doc               # round-trips as JSON
+    ev = doc["traceEvents"]
+    by_ph = {}
+    for e in ev:
+        assert "ph" in e and "pid" in e
+        by_ph.setdefault(e["ph"], []).append(e)
+    procs = {e["args"]["name"] for e in by_ph["M"] if e["name"] == "process_name"}
+    assert procs == {"jobs", "storage sessions", "storage pools", "metrics"}
+    # one X span per non-terminal recorded phase span
+    n_spans = sum(
+        1 for s in rec.spans.values() for p, _, _ in s
+        if p not in ("done", "failed")
+    )
+    job_x = [e for e in by_ph["X"] if e["cat"] == "phase"]
+    assert len(job_x) == n_spans
+    assert all(e["dur"] >= 0 and e["ts"] >= 0 for e in by_ph["X"])
+    # every requeued fault carries a flow arrow to the next grant
+    requeued = [
+        (t, a) for k, t, _, a in rec.events if k == "fault" and a["requeued"]
+    ]
+    assert requeued, "campaign fluked: no faults requeued"
+    starts = {e["id"] for e in by_ph.get("s", ())}
+    ends = {e["id"] for e in by_ph.get("f", ())}
+    assert starts and starts == ends
+    # metrics series exported as counter events
+    assert {e["name"] for e in by_ph.get("C", ())} >= {"queue_depth"}
+
+
+def test_jsonl_export_round_trips(tmp_path):
+    _, _, rec, _ = _traced_campaign(20)
+    path = tmp_path / "trace.jsonl"
+    n = write_jsonl(path, rec)
+    with open(path) as fh:
+        records = [json.loads(line) for line in fh]
+    assert len(records) == n == len(list(jsonl_records(rec)))
+    kinds = {r["type"] for r in records}
+    assert kinds == {"span", "session", "event", "count"}
+    n_spans = sum(len(s) for s in rec.spans.values())
+    assert sum(r["type"] == "span" for r in records) == n_spans
+    assert sum(r["type"] == "session" for r in records) == len(rec.sessions)
+
+
+# -- critical path ------------------------------------------------------------
+
+def test_critical_path_tiles_the_makespan():
+    _, jobs, rec, _ = _traced_campaign(40)
+    cp = critical_path(rec)
+    assert cp is not None
+    assert sum(cp.phase_s.values()) == cp.makespan_s     # exact, not approx
+    t0, t1 = rec.t_range()
+    assert (cp.t_start, cp.t_end) == (t0, t1)
+    assert set(cp.phase_s) <= set(PHASES)
+    assert cp.phase_s.get("running", 0.0) > 0
+    # segments are contiguous and ordered: they tile [t_start, t_end]
+    cursor = cp.t_start
+    for seg in cp.segments:
+        assert seg.t0 == pytest.approx(cursor, abs=1e-6)
+        assert seg.t1 >= seg.t0
+        cursor = seg.t1
+    assert cursor == pytest.approx(cp.t_end, abs=1e-6)
+    text = format_critical_path(cp, max_segments=3)
+    assert "critical path:" in text and "running" in text
+
+
+def test_critical_path_single_job():
+    rec = TraceRecorder()
+    orch = Orchestrator(synthetic_cluster(2, 1), recorder=rec)
+    orch.submit(WorkflowSpec(
+        "solo", 1,
+        storage_spec=StorageSpec("solo", nodes=1, managers=("ephemeralfs",)),
+        run_time_s=100.0,
+    ))
+    orch.engine.run()
+    cp = critical_path(rec)
+    assert sum(cp.phase_s.values()) == cp.makespan_s
+    assert cp.phase_s["running"] == pytest.approx(100.0)
+    jid = orch.jobs[0].job_id
+    # every attributed segment belongs to the only job
+    assert {seg.job_id for seg in cp.segments} <= {jid, None}
+    assert any(seg.job_id == jid for seg in cp.segments)
+
+
+def test_critical_path_empty_trace_is_none():
+    assert critical_path(TraceRecorder()) is None
+
+
+def test_summarize_attaches_critical_path_to_report():
+    _, jobs, rec, _ = _traced_campaign(20)
+    rep = summarize(jobs, n_storage_nodes=4, trace=rec)
+    assert rep.critical_path is not None
+    assert rep.critical_path.makespan_s == pytest.approx(rep.makespan_s)
+    assert "critical path:" in format_report(rep)
+    assert "critical path:" not in format_report(
+        summarize(jobs, n_storage_nodes=4)
+    )
+
+
+# -- trace content: negotiation, pools, engine --------------------------------
+
+def test_negotiation_cache_hits_counted_not_evented():
+    _, _, rec, _ = _traced_campaign(40, pools=False, faults=False)
+    scored = [e for e in rec.events if e[0] == "negotiation"]
+    assert rec.counts["negotiation.scored"] == len(scored)
+    assert rec.counts["negotiation.cache_hits"] > 0
+    assert rec.counts["scheduler.grants"] == rec.counts["scheduler.releases"]
+    opened = sum(
+        n for k, n in rec.counts.items() if k.startswith("sessions.opened.")
+    )
+    assert opened == rec.counts["scheduler.grants"]
+
+
+def test_pool_lease_and_eviction_events():
+    orch, jobs, rec, _ = _traced_campaign(40, faults=False)
+    kinds = {e[0] for e in rec.events}
+    assert "pool_created" in kinds and "lease_attached" in kinds
+    mgr = orch.pools
+    n_evictions = sum(1 for e in rec.events if e[0] == "eviction")
+    assert n_evictions == mgr.evictor.evictions
+    assert rec.counts.get("pool.evictions", 0) == n_evictions
+    leases = [e for e in rec.events if e[0] == "lease_attached"]
+    assert len(leases) == mgr.stats.leases_granted
+
+
+def test_engine_sampling_series():
+    _, _, rec, hub = _traced_campaign(30)
+    assert hub.samples_taken >= 1
+    series = hub.series["engine_heap_depth"]
+    assert len(series) >= 1
+    # the closing sample sees the drained heap
+    t_last, depth_last = series.last()
+    assert depth_last == 0
+    for probe in ("queue_depth", "free_compute_nodes", "pool_occupancy",
+                  "catalog_hit_rate", "running_jobs", "jobs_done"):
+        assert probe in hub.series
+
+
+# -- metrics primitives -------------------------------------------------------
+
+def test_metrics_primitives():
+    c = Counter("c")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    g = Gauge("g")
+    g.set(7.0)
+    assert g.value == 7.0
+    h = Histogram("h", bounds=(1.0, 10.0))
+    for v in (0.5, 5.0, 50.0):
+        h.observe(v)
+    assert h.counts == [1, 1, 1] and h.total == 3
+    assert h.min == 0.5 and h.max == 50.0 and h.mean == pytest.approx(55.5 / 3)
+    s = TimeSeries("s", maxlen=3)
+    for i in range(5):
+        s.append(float(i), float(i * i))
+    assert len(s) == 3 and s.items()[0] == (2.0, 4.0)      # ring evicted
+    assert s.last() == (4.0, 16.0)
+
+
+def test_metrics_hub_probes_and_snapshot():
+    hub = MetricsHub(maxlen=8)
+    x = {"v": 0.0}
+    hub.add_probe("x", lambda: x["v"])
+    for t in (0.0, 1.0, 2.0):
+        x["v"] = t * 10
+        hub.sample(t)
+    assert hub.samples_taken == 3
+    assert hub.series["x"].items() == [(0.0, 0.0), (1.0, 10.0), (2.0, 20.0)]
+    assert hub.gauges["x"].value == 20.0
+    hub.counter("n").inc()
+    hub.histogram("d").observe(3.0)
+    snap = hub.snapshot()
+    json.dumps(snap)                                       # JSON-serializable
+    assert snap["counters"]["n"] == 1.0
+    assert snap["histograms"]["d"]["total"] == 1
+
+
+# -- hot-loop import guard ----------------------------------------------------
+
+def _load_guard():
+    path = os.path.join(
+        os.path.dirname(__file__), "..", "tools", "check_obs_imports.py"
+    )
+    spec = importlib.util.spec_from_file_location("check_obs_imports", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_hot_loop_modules_only_import_the_recorder_interface(tmp_path):
+    guard = _load_guard()
+    root = os.path.join(os.path.dirname(__file__), "..", "src")
+    for pkg in guard.HOT_PACKAGES:
+        pkg_dir = os.path.join(root, "repro", pkg)
+        for dirpath, _, filenames in os.walk(pkg_dir):
+            for fn in filenames:
+                if fn.endswith(".py"):
+                    path = os.path.join(dirpath, fn)
+                    assert guard._violations_in(path, root) == [], path
+
+
+def test_import_guard_flags_violations(tmp_path):
+    guard = _load_guard()
+    pkg = tmp_path / "repro" / "core"
+    pkg.mkdir(parents=True)
+    bad = pkg / "bad.py"
+    bad.write_text(
+        "from ..obs.export import chrome_trace\n"
+        "from ..obs.trace import NULL_RECORDER\n"
+        "import repro.obs\n"
+        "def lazy():\n"
+        "    from ..obs.profile import critical_path\n"
+        "    return critical_path\n"
+    )
+    hits = guard._violations_in(str(bad), str(tmp_path))
+    assert [line for line, _ in hits] == [1, 3]

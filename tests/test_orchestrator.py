@@ -358,3 +358,46 @@ def test_spec_validation():
         WorkflowSpec("bad", 1, run_time_s=-1.0)
     with pytest.raises(ValueError):
         WorkflowSpec("bad", 1, max_retries=-1)
+
+
+# -- metrics edge cases (PR 6 satellites) -------------------------------------
+def test_summarize_empty_campaign_raises():
+    with pytest.raises(ValueError, match="no jobs"):
+        summarize([], n_storage_nodes=4)
+
+
+def test_breakdown_and_summarize_with_running_job_at_horizon():
+    orch = Orchestrator(dom_cluster())
+    job = orch.submit(
+        WorkflowSpec("longrun", 2, StorageRequest(nodes=2), run_time_s=500.0)
+    )
+    orch.engine.run(until=100.0)
+    now = orch.engine.now
+    assert job.state is JobState.RUNNING
+    b = job_breakdown(job, now)
+    # the open RUNNING phase is charged up to the poll instant
+    assert b.phase_s[JobState.RUNNING] > 0
+    assert b.total_s == pytest.approx(now - job.submit_time)
+    assert b.total_s == pytest.approx(sum(b.phase_s.values()), rel=1e-9)
+    rep = summarize([job], n_storage_nodes=4, now=now)
+    assert rep.n_done == 0 and rep.n_failed == 0
+    assert rep.makespan_s == pytest.approx(now - job.submit_time)
+    assert rep.storage_node_utilization > 0     # open allocation counts busy
+    # without now= the open phase is simply not charged — no crash
+    b0 = job_breakdown(job)
+    assert b0.phase_s[JobState.RUNNING] == 0.0
+    orch.engine.run()
+    assert job.state is JobState.DONE
+
+
+def test_format_report_top_n_zero_lists_no_jobs():
+    orch = Orchestrator(dom_cluster())
+    jobs = orch.run_campaign(
+        [WorkflowSpec(f"j{i}", 1, StorageRequest(nodes=1), run_time_s=5.0)
+         for i in range(3)]
+    )
+    rep = summarize(jobs, n_storage_nodes=4)
+    text = format_report(rep, top_n=0)
+    assert "slowest 0 jobs:" in text
+    assert text.splitlines()[-1] == "slowest 0 jobs:"     # nothing after it
+    assert "j0" not in text

@@ -432,3 +432,22 @@ def test_workflowspec_rejects_mixed_runtime_and_streams():
     with pytest.raises(ValueError, match="storage_spec replaces"):
         WorkflowSpec("j", 1, n_streams=16,
                      storage_spec=StorageSpec("j", nodes=1))
+
+
+def test_negotiations_cached_accumulates_across_cache_swaps(svc):
+    """``negotiations_cached`` is a campaign-lifetime counter: it must
+    increment per hit, never be assigned from the live cache's own ``hits``
+    (a swapped/reset cache would silently rewind the stat)."""
+    from repro.provision.negotiation import OfferCache
+
+    spec = StorageSpec("shape", nodes=1, managers=("ephemeralfs",))
+    svc.negotiate(spec)                        # miss: scores backends
+    svc.negotiate(spec)                        # hit
+    assert svc.stats.negotiations_cached == 1
+    # swap in a fresh cache mid-campaign (epoch reset, hits == 0)
+    svc._offer_cache = OfferCache()
+    svc.negotiate(spec)                        # miss in the new cache
+    svc.negotiate(spec)                        # hit in the new cache
+    assert svc._offer_cache.hits == 1
+    assert svc.stats.negotiations_cached == 2  # accumulated, not rewound
+    assert svc.stats.negotiations == 4

@@ -1,0 +1,136 @@
+#!/usr/bin/env python
+"""Lint guard: hot-loop packages may only import the recorder interface.
+
+The observability subsystem (``repro.obs``) is layered so that the
+simulation hot paths — engine, lifecycle, scheduler, provisioning, pools
+— depend on exactly one obs module: ``repro.obs.trace`` (the
+``NullRecorder`` / ``TraceRecorder`` duck-type). The heavier modules
+(``obs.metrics``, ``obs.export``, ``obs.profile``) must never become
+load-bearing for a campaign run; reports that want them import lazily
+inside the function that builds the report.
+
+This script enforces that with the AST: in every module under the hot
+packages, a **module-level** (or class-level — anything that executes at
+import time) ``import``/``from ... import`` whose target resolves into
+``repro.obs`` is a violation unless the target module is exactly
+``repro.obs.trace``. Function-local imports are exempt — that is the
+sanctioned lazy pattern.
+
+Exit status 0 when clean, 1 with one ``path:line: message`` per
+violation otherwise.
+
+    python tools/check_obs_imports.py [--root src/repro]
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import sys
+
+#: packages whose modules run inside the campaign hot loop
+HOT_PACKAGES = ("core", "orchestrator", "pool", "provision")
+
+#: the one obs module import-time code may touch
+ALLOWED = "repro.obs.trace"
+
+
+def _module_package(root: str, path: str) -> str:
+    """Dotted package of the *module's parent* for resolving relative
+    imports; ``root`` is the directory that contains ``repro``."""
+    rel = os.path.relpath(path, root)
+    parts = rel.replace(os.sep, "/").split("/")
+    parts[-1] = parts[-1][: -len(".py")]
+    if parts[-1] == "__init__":
+        parts.pop()
+    return ".".join(parts[:-1])
+
+
+def _resolve(node: ast.ImportFrom, package: str) -> str:
+    """Absolute dotted module an ``ImportFrom`` targets."""
+    if node.level == 0:
+        return node.module or ""
+    base = package.split(".")
+    # level 1 = the current package, each extra level climbs one parent
+    if node.level > 1:
+        base = base[: -(node.level - 1)]
+    if node.module:
+        base = base + [node.module]
+    return ".".join(base)
+
+
+def _violations_in(path: str, root: str) -> list[tuple[int, str]]:
+    with open(path, encoding="utf-8") as fh:
+        tree = ast.parse(fh.read(), filename=path)
+    package = _module_package(root, path)
+    found: list[tuple[int, str]] = []
+
+    def scan(body, *, import_time: bool) -> None:
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue    # lazy imports are the sanctioned pattern
+            if isinstance(node, ast.Import):
+                if import_time:
+                    for alias in node.names:
+                        _check(node.lineno, alias.name)
+            elif isinstance(node, ast.ImportFrom):
+                if import_time:
+                    # ``from ..obs import trace`` is flagged too: binding
+                    # the right name still executes the package __init__
+                    _check(node.lineno, _resolve(node, package))
+            elif isinstance(node, (ast.If, ast.Try)):
+                scan(ast.iter_child_nodes(node), import_time=import_time)
+            elif isinstance(node, ast.ClassDef):
+                scan(node.body, import_time=import_time)
+
+    def _check(lineno: int, target: str) -> None:
+        if ".obs" not in f".{target}":
+            return
+        if target == ALLOWED or target.startswith(ALLOWED + "."):
+            return
+        found.append(
+            (
+                lineno,
+                f"module-level import of '{target}' — hot-loop code may "
+                f"only import '{ALLOWED}' at import time (use a "
+                f"function-local import for metrics/export/profile)",
+            )
+        )
+
+    scan(tree.body, import_time=True)
+    return found
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--root",
+        default=os.path.join(os.path.dirname(__file__), "..", "src"),
+        help="directory containing the 'repro' package (default: src/)",
+    )
+    args = ap.parse_args()
+    root = os.path.abspath(args.root)
+    n_files = 0
+    bad = 0
+    for pkg in HOT_PACKAGES:
+        pkg_dir = os.path.join(root, "repro", pkg)
+        for dirpath, _, filenames in os.walk(pkg_dir):
+            for fn in sorted(filenames):
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                n_files += 1
+                for lineno, msg in _violations_in(path, root):
+                    rel = os.path.relpath(path, os.path.dirname(root))
+                    print(f"{rel}:{lineno}: {msg}")
+                    bad += 1
+    if bad:
+        print(f"\n{bad} violation(s) across {n_files} hot-loop modules")
+        return 1
+    print(f"obs import guard: {n_files} hot-loop modules clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
