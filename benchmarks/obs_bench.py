@@ -9,9 +9,13 @@ the wiring stays opt-in and cheap:
   smoke (``OFF_EVENTS_FLOOR``, scaled by ``min(1, machine_score /
   REFERENCE_MACHINE_SCORE)``): the instrumented call sites cost one
   attribute check each, within noise of the pre-PR engine;
-* **tracing on** (a full ``TraceRecorder`` + ``MetricsHub``) — throughput
-  must stay >= ``ON_OFF_RATIO_FLOOR`` (85%) of the tracing-off rate on
-  the same machine window.
+* **tracing on** (a full ``TraceRecorder`` + ``MetricsHub`` + the PR 7
+  active layer: an ``AlertEngine`` with SLO burn-rate accounting riding
+  the metronome sample hook) — throughput must stay >=
+  ``ON_OFF_RATIO_FLOOR`` (85%) of the tracing-off rate on the same
+  machine window. The SLOs here are series-backed on purpose: the bench
+  keeps histogram materialization out of the timed window, the same
+  configuration a production campaign would run continuously.
 
 Both rates are CPU-time based and best-of-``FLOOR_ATTEMPTS`` paired
 attempts (off/on measured back-to-back so a shared container's speed
@@ -34,7 +38,14 @@ import os
 import time
 
 from repro.core import synthetic_cluster
-from repro.obs import MetricsHub, TraceRecorder
+from repro.obs import (
+    AlertEngine,
+    AlertRule,
+    MetricsHub,
+    SLOSpec,
+    SLOTracker,
+    TraceRecorder,
+)
 from repro.orchestrator import Orchestrator, summarize
 
 from .campaign_scale_bench import (
@@ -62,13 +73,73 @@ OUT_PATH = os.path.join(os.path.dirname(__file__), "out", "obs_bench.json")
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_obs.json")
 
 
+def _alert_engine(hub: MetricsHub) -> AlertEngine:
+    """The traced run's active layer: series-backed SLOs plus threshold /
+    rate / burn rules, all evaluated at every metronome sample."""
+    slos = SLOTracker(
+        hub,
+        [
+            SLOSpec(
+                name="queue-depth-p95",
+                series="queue_depth",
+                percentile=0.95,
+                window_s=4 * SAMPLE_EVERY_S,
+                op="<=",
+                target=N_JOBS,
+                objective=0.999,
+            ),
+            SLOSpec(
+                name="completion-progress",
+                series="jobs_done",
+                op=">=",
+                target=0.0,
+                objective=0.99,
+            ),
+        ],
+    )
+    return AlertEngine(
+        hub,
+        [
+            AlertRule(
+                name="queue-depth-high",
+                kind="threshold",
+                series="queue_depth",
+                op=">=",
+                target=N_JOBS * 2,       # never trips; the evaluation is the cost
+                for_s=2 * SAMPLE_EVERY_S,
+            ),
+            AlertRule(
+                name="queue-growth",
+                kind="rate",
+                series="queue_depth",
+                op=">=",
+                target=1e9,
+                window_s=4 * SAMPLE_EVERY_S,
+            ),
+            AlertRule(
+                name="queue-slo-burn",
+                kind="burn",
+                slo="queue-depth-p95",
+                op=">=",
+                target=100.0,
+                window_s=8 * SAMPLE_EVERY_S,
+            ),
+        ],
+        slos=slos,
+    )
+
+
 def _run_once(traced: bool) -> dict:
     specs = serving_specs(N_JOBS)
     recorder = None
     hub = None
+    alerts = None
     if traced:
         hub = MetricsHub()
-        recorder = TraceRecorder(metrics=hub, sample_every_s=SAMPLE_EVERY_S)
+        alerts = _alert_engine(hub)
+        recorder = TraceRecorder(
+            metrics=hub, sample_every_s=SAMPLE_EVERY_S, alerts=alerts
+        )
     orch = Orchestrator(
         synthetic_cluster(N_COMPUTE, N_STORAGE),
         policy=POLICIES[POLICY](),
@@ -98,6 +169,8 @@ def _run_once(traced: bool) -> dict:
         )
         assert recorder.counts.get("scheduler.grants", 0) >= N_JOBS
         assert hub.samples_taken > 0, "metrics hub never sampled"
+        assert alerts.evaluations > 0, "alert engine never evaluated"
+        assert alerts.slos.samples_taken == alerts.evaluations
     events = orch.engine.events_processed
     row = {
         "traced": traced,
@@ -109,6 +182,8 @@ def _run_once(traced: bool) -> dict:
         row["n_spans"] = recorder.n_spans
         row["n_trace_events"] = len(recorder.events)
         row["metrics_samples"] = hub.samples_taken
+        row["alert_evaluations"] = alerts.evaluations
+        row["alert_incidents"] = len(alerts.incidents)
     return row
 
 
@@ -200,7 +275,8 @@ def rows():
             f"ev/cpu-s={best['on']['events_per_cpu_s']} "
             f"ratio={best['on_off_ratio']:.3f} "
             f"spans={best['on']['n_spans']} "
-            f"events={best['on']['n_trace_events']}",
+            f"events={best['on']['n_trace_events']} "
+            f"alert-evals={best['on']['alert_evaluations']}",
         ),
     ]
 

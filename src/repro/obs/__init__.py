@@ -36,6 +36,18 @@ from .profile import (
     critical_path,
     format_critical_path,
 )
+from .slo import SLOReport, SLOSpec, SLOStatus, SLOTracker, format_slo_report
+from .alerts import (
+    FIRING,
+    PENDING,
+    RESOLVED,
+    AlertEngine,
+    AlertIncident,
+    AlertRule,
+    format_alerts,
+)
+from .diagnose import Advisory, diagnose, format_advisories
+from .dashboard import build_dashboard, format_dashboard, write_dashboard
 
 __all__ = [
     "Counter",
@@ -54,4 +66,22 @@ __all__ = [
     "PathSegment",
     "critical_path",
     "format_critical_path",
+    "SLOSpec",
+    "SLOStatus",
+    "SLOReport",
+    "SLOTracker",
+    "format_slo_report",
+    "PENDING",
+    "FIRING",
+    "RESOLVED",
+    "AlertRule",
+    "AlertIncident",
+    "AlertEngine",
+    "format_alerts",
+    "Advisory",
+    "diagnose",
+    "format_advisories",
+    "build_dashboard",
+    "write_dashboard",
+    "format_dashboard",
 ]

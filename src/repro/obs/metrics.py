@@ -13,6 +13,7 @@ Pure stdlib, no ``repro`` imports: usable from any layer without cycles.
 from __future__ import annotations
 
 import bisect
+import dataclasses
 from collections import deque
 from typing import Callable, Iterable, Optional
 
@@ -75,17 +76,63 @@ class Histogram:
     def mean(self) -> float:
         return self.sum / self.total if self.total else 0.0
 
+    def percentile(self, q: float) -> Optional[float]:
+        """Bucket-interpolated quantile estimate, ``q`` in [0, 1].
+
+        Walks the cumulative counts to the bucket holding rank ``q * total``
+        and interpolates linearly inside it; the first bucket's lower edge
+        is the observed minimum and the overflow bucket's upper edge the
+        observed maximum, and the result is clamped to ``[min, max]`` (so a
+        degenerate one-value histogram answers exactly). The error is
+        bounded by the width of the bucket the quantile lands in. ``None``
+        when nothing was observed.
+        """
+        if self.total == 0:
+            return None
+        q = min(1.0, max(0.0, q))
+        target = q * self.total
+        cum = 0
+        bounds = self.bounds
+        for i, c in enumerate(self.counts):
+            if c and cum + c >= target:
+                lo = bounds[i - 1] if i > 0 else self.min
+                hi = bounds[i] if i < len(bounds) else self.max
+                frac = (target - cum) / c
+                v = lo + frac * (hi - lo)
+                return min(self.max, max(self.min, v))
+            cum += c
+        return self.max
+
+
+@dataclasses.dataclass(frozen=True)
+class SeriesWindowAgg:
+    """Summary of the samples of one :class:`TimeSeries` window."""
+
+    n: int
+    min: float
+    max: float
+    mean: float
+    t_first: float
+    t_last: float
+
 
 class TimeSeries:
-    """Bounded ``(t, value)`` ring buffer — old samples fall off the front."""
+    """Bounded ``(t, value)`` ring buffer — old samples fall off the front.
 
-    __slots__ = ("name", "_buf")
+    ``appended`` counts every sample ever appended, so consumers can tell a
+    full campaign history from a ring that has dropped its oldest samples
+    (``appended > len(series)`` means the front fell off).
+    """
+
+    __slots__ = ("name", "_buf", "appended")
 
     def __init__(self, name: str, maxlen: int = 4096):
         self.name = name
         self._buf: deque[tuple[float, float]] = deque(maxlen=maxlen)
+        self.appended = 0
 
     def append(self, t: float, v: float) -> None:
+        self.appended += 1
         self._buf.append((t, v))
 
     def items(self) -> list[tuple[float, float]]:
@@ -96,6 +143,59 @@ class TimeSeries:
 
     def __len__(self) -> int:
         return len(self._buf)
+
+    # -- windowed reads (timestamps are appended in nondecreasing order) ------
+    def window(
+        self, t0: Optional[float] = None, t1: Optional[float] = None
+    ) -> list[tuple[float, float]]:
+        """Samples with ``t0 <= t <= t1`` (either bound optional)."""
+        items = list(self._buf)
+        if not items:
+            return items
+        times = [t for t, _ in items]
+        lo = 0 if t0 is None else bisect.bisect_left(times, t0)
+        hi = len(items) if t1 is None else bisect.bisect_right(times, t1)
+        return items[lo:hi]
+
+    def agg(
+        self, t0: Optional[float] = None, t1: Optional[float] = None
+    ) -> Optional[SeriesWindowAgg]:
+        """Min/max/mean summary of the window; ``None`` when it is empty."""
+        win = self.window(t0, t1)
+        if not win:
+            return None
+        vals = [v for _, v in win]
+        return SeriesWindowAgg(
+            n=len(vals),
+            min=min(vals),
+            max=max(vals),
+            mean=sum(vals) / len(vals),
+            t_first=win[0][0],
+            t_last=win[-1][0],
+        )
+
+    def quantile(
+        self,
+        q: float,
+        t0: Optional[float] = None,
+        t1: Optional[float] = None,
+    ) -> Optional[float]:
+        """Exact linear-interpolated quantile of the window's sample values
+        (the series keeps raw samples, so no bucket error here); ``None``
+        when the window is empty."""
+        win = self.window(t0, t1)
+        if not win:
+            return None
+        vals = sorted(v for _, v in win)
+        if len(vals) == 1:
+            return vals[0]
+        q = min(1.0, max(0.0, q))
+        pos = q * (len(vals) - 1)
+        i = int(pos)
+        frac = pos - i
+        if frac == 0.0 or i + 1 >= len(vals):
+            return vals[i]
+        return vals[i] + frac * (vals[i + 1] - vals[i])
 
 
 class MetricsHub:
@@ -153,8 +253,40 @@ class MetricsHub:
             self.gauge(name).value = v
 
     # -- export ---------------------------------------------------------------
-    def snapshot(self) -> dict:
-        """Plain-data summary (JSON-serializable)."""
+    def snapshot(self, *, max_points: Optional[int] = None) -> dict:
+        """Plain-data summary (JSON-serializable).
+
+        Histograms carry interpolated ``p50``/``p95``/``p99`` next to the
+        raw buckets. Each series exports as a dict — not a bare point list —
+        so consumers can't mistake a truncated series for the full campaign:
+
+        * ``points`` — ``[t, v]`` pairs, at most ``max_points`` of them
+          (default: the hub's ring ``maxlen``). Longer series are
+          down-sampled deterministically on an even index stride that always
+          keeps the first and last sample.
+        * ``n_points`` / ``n_appended`` — exported vs ever-recorded counts.
+        * ``truncated`` — ``True`` when ``points`` is not the full history
+          (the ring dropped old samples and/or the export down-sampled).
+        """
+        cap = self.maxlen if max_points is None else max_points
+        series: dict[str, dict] = {}
+        for k, s in self.series.items():
+            pts = s.items()
+            downsampled = False
+            if cap > 0 and len(pts) > cap:
+                downsampled = True
+                if cap == 1:
+                    pts = [pts[-1]]
+                else:
+                    n = len(pts)
+                    idx = sorted({round(i * (n - 1) / (cap - 1)) for i in range(cap)})
+                    pts = [pts[i] for i in idx]
+            series[k] = {
+                "points": [[t, v] for t, v in pts],
+                "n_points": len(pts),
+                "n_appended": s.appended,
+                "truncated": downsampled or s.appended > len(s),
+            }
         return {
             "counters": {k: c.value for k, c in self.counters.items()},
             "gauges": {k: g.value for k, g in self.gauges.items()},
@@ -166,8 +298,11 @@ class MetricsHub:
                     "mean": h.mean,
                     "min": h.min,
                     "max": h.max,
+                    "p50": h.percentile(0.50),
+                    "p95": h.percentile(0.95),
+                    "p99": h.percentile(0.99),
                 }
                 for k, h in self.histograms.items()
             },
-            "series": {k: s.items() for k, s in self.series.items()},
+            "series": series,
         }

@@ -67,6 +67,8 @@ class NullRecorder:
     """
 
     enabled = False
+    #: no active layer either — ``Orchestrator.alerts`` reads this
+    alerts = None
     __slots__ = ()
 
     def bind(self, orch) -> "NullRecorder":
@@ -124,6 +126,13 @@ class TraceRecorder:
         folded in when the trace materializes.
     sample_every_s:
         Virtual-time cadence for probe sampling.
+    alerts:
+        Optional active layer (duck-typed — an
+        :class:`~repro.obs.alerts.AlertEngine`): anything exposing
+        ``evaluate(t, trace)``. Evaluated right after each metrics sample
+        on the same metronome cadence — alerting never adds engine events,
+        and like the recorder itself it must stay read-only so traced
+        campaigns replay bit-identically. Requires ``metrics``.
     clock:
         Virtual-time source; :meth:`bind` replaces it with the bound
         engine's clock.
@@ -136,9 +145,16 @@ class TraceRecorder:
         *,
         metrics=None,
         sample_every_s: float = 60.0,
+        alerts=None,
         clock: Optional[Callable[[], float]] = None,
     ):
+        if alerts is not None and metrics is None:
+            raise ValueError(
+                "alerts= needs metrics=: rules read the hub's series and the "
+                "engine is evaluated on the metrics sample cadence"
+            )
         self.metrics = metrics
+        self.alerts = alerts
         self.sample_every_s = sample_every_s
         self._clock: Callable[[], float] = clock or (lambda: 0.0)
         #: flat typed event log: ``(kind, t, label, args-dict)``.
@@ -220,7 +236,9 @@ class TraceRecorder:
         c[key] = c.get(key, 0) + n
 
     def _tick(self, t: float) -> None:
-        """Drive time-based metric sampling off recorded activity."""
+        """Drive time-based metric sampling — and alert evaluation — off
+        recorded activity. Alerts run on exactly the sample cadence, right
+        after the probes, so rules always judge fresh series."""
         hub = self.metrics
         if hub is None:
             return
@@ -228,6 +246,9 @@ class TraceRecorder:
         if last is None or t - last >= self.sample_every_s:
             self._last_sample = t
             hub.sample(t)
+            alerts = self.alerts
+            if alerts is not None:
+                alerts.evaluate(t, self)
 
     # -- materialization ------------------------------------------------------
     @property

@@ -466,6 +466,12 @@ class Orchestrator:
             self.recorder.bind(self)
 
     @property
+    def alerts(self):
+        """The :class:`~repro.obs.alerts.AlertEngine` riding the recorder,
+        if one was attached (duck-typed — no obs import on the hot path)."""
+        return getattr(self.recorder, "alerts", None)
+
+    @property
     def faults(self) -> FaultInjector:
         return self._faults
 

@@ -82,6 +82,10 @@ class CampaignReport:
     #: :class:`repro.obs.profile.CriticalPath`); populated when
     #: :func:`summarize` is handed the campaign's trace recorder
     critical_path: Optional[object] = None
+    #: SLO / error-budget accounting (a :class:`repro.obs.slo.SLOReport`);
+    #: populated when the trace handed to :func:`summarize` carries an
+    #: :class:`~repro.obs.alerts.AlertEngine` with an SLO tracker attached
+    slo: Optional[object] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -255,6 +259,7 @@ def summarize(
         resumes=sum(j.resume_attempts for j in jobs),
         run_s_saved=sum(j.run_s_saved for j in jobs),
         critical_path=_critical_path(trace),
+        slo=_slo_report(trace),
     )
 
 
@@ -267,6 +272,16 @@ def _critical_path(trace):
     from ..obs.profile import critical_path
 
     return critical_path(trace)
+
+
+def _slo_report(trace):
+    """Fold the trace's SLO accounting into the report, when an alert
+    engine with a tracker rides the recorder (duck-typed off the recorder's
+    ``alerts`` attribute — no obs import needed at all)."""
+    alerts = getattr(trace, "alerts", None)
+    if alerts is None or alerts.slos is None:
+        return None
+    return alerts.slos.report()
 
 
 def format_report(report: CampaignReport, *, top_n: int = 10) -> str:
@@ -307,6 +322,10 @@ def format_report(report: CampaignReport, *, top_n: int = 10) -> str:
         from ..obs.profile import format_critical_path
 
         lines.append(format_critical_path(report.critical_path))
+    if report.slo is not None:
+        from ..obs.slo import format_slo_report
+
+        lines.append(format_slo_report(report.slo))
     lines.append(f"slowest {min(top_n, report.n_jobs)} jobs:")
     slowest = sorted(report.breakdowns, key=lambda b: -b.total_s)[:top_n]
     for b in slowest:

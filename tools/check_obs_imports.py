@@ -4,17 +4,25 @@
 The observability subsystem (``repro.obs``) is layered so that the
 simulation hot paths — engine, lifecycle, scheduler, provisioning, pools
 — depend on exactly one obs module: ``repro.obs.trace`` (the
-``NullRecorder`` / ``TraceRecorder`` duck-type). The heavier modules
-(``obs.metrics``, ``obs.export``, ``obs.profile``) must never become
-load-bearing for a campaign run; reports that want them import lazily
-inside the function that builds the report.
+``NullRecorder`` / ``TraceRecorder`` duck-type). The heavier cold-side
+modules (``obs.metrics``, ``obs.export``, ``obs.profile``, and the PR 7
+active layer ``obs.slo`` / ``obs.alerts`` / ``obs.diagnose`` /
+``obs.dashboard``) must never become load-bearing for a campaign run;
+reports that want them import lazily inside the function that builds the
+report.
 
-This script enforces that with the AST: in every module under the hot
-packages, a **module-level** (or class-level — anything that executes at
-import time) ``import``/``from ... import`` whose target resolves into
-``repro.obs`` is a violation unless the target module is exactly
-``repro.obs.trace``. Function-local imports are exempt — that is the
-sanctioned lazy pattern.
+This script enforces that with the AST, in both directions:
+
+* in every module under the hot packages, a **module-level** (or
+  class-level — anything that executes at import time) ``import``/
+  ``from ... import`` whose target resolves into ``repro.obs`` is a
+  violation unless the target module is exactly ``repro.obs.trace``.
+  Function-local imports are exempt — that is the sanctioned lazy
+  pattern;
+* in every module under ``repro.obs`` itself, an import-time import of
+  any *other* ``repro`` package is a violation: obs observes the
+  simulation through duck-typed hooks and never depends back on it, so
+  the layer can't grow a cycle (and stays deletable).
 
 Exit status 0 when clean, 1 with one ``path:line: message`` per
 violation otherwise.
@@ -35,15 +43,20 @@ HOT_PACKAGES = ("core", "orchestrator", "pool", "provision")
 #: the one obs module import-time code may touch
 ALLOWED = "repro.obs.trace"
 
+#: the package the reverse rule guards: obs may import stdlib + itself only
+OBS_PACKAGE = "repro.obs"
+
 
 def _module_package(root: str, path: str) -> str:
-    """Dotted package of the *module's parent* for resolving relative
-    imports; ``root`` is the directory that contains ``repro``."""
+    """Dotted package relative imports resolve against: the containing
+    package for plain modules, the package itself for an ``__init__.py``;
+    ``root`` is the directory that contains ``repro``."""
     rel = os.path.relpath(path, root)
     parts = rel.replace(os.sep, "/").split("/")
     parts[-1] = parts[-1][: -len(".py")]
     if parts[-1] == "__init__":
         parts.pop()
+        return ".".join(parts)
     return ".".join(parts[:-1])
 
 
@@ -102,6 +115,46 @@ def _violations_in(path: str, root: str) -> list[tuple[int, str]]:
     return found
 
 
+def _obs_violations_in(path: str, root: str) -> list[tuple[int, str]]:
+    """The reverse rule: obs modules may not import the simulation back
+    at import time (function-local imports stay exempt, same as above)."""
+    with open(path, encoding="utf-8") as fh:
+        tree = ast.parse(fh.read(), filename=path)
+    package = _module_package(root, path)
+    found: list[tuple[int, str]] = []
+
+    def _check(lineno: int, target: str) -> None:
+        if target != "repro" and not target.startswith("repro."):
+            return
+        if target == OBS_PACKAGE or target.startswith(OBS_PACKAGE + "."):
+            return
+        found.append(
+            (
+                lineno,
+                f"module-level import of '{target}' from inside repro.obs — "
+                "the observability layer reads the simulation through "
+                "duck-typed hooks and must not import it back",
+            )
+        )
+
+    def scan(body) -> None:
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    _check(node.lineno, alias.name)
+            elif isinstance(node, ast.ImportFrom):
+                _check(node.lineno, _resolve(node, package))
+            elif isinstance(node, (ast.If, ast.Try)):
+                scan(ast.iter_child_nodes(node))
+            elif isinstance(node, ast.ClassDef):
+                scan(node.body)
+
+    scan(tree.body)
+    return found
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
@@ -125,10 +178,24 @@ def main() -> int:
                     rel = os.path.relpath(path, os.path.dirname(root))
                     print(f"{rel}:{lineno}: {msg}")
                     bad += 1
+    n_obs = 0
+    obs_dir = os.path.join(root, *OBS_PACKAGE.split("."))
+    for dirpath, _, filenames in os.walk(obs_dir):
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            n_obs += 1
+            for lineno, msg in _obs_violations_in(path, root):
+                rel = os.path.relpath(path, os.path.dirname(root))
+                print(f"{rel}:{lineno}: {msg}")
+                bad += 1
     if bad:
-        print(f"\n{bad} violation(s) across {n_files} hot-loop modules")
+        print(f"\n{bad} violation(s) across {n_files} hot-loop "
+              f"+ {n_obs} obs modules")
         return 1
-    print(f"obs import guard: {n_files} hot-loop modules clean")
+    print(f"obs import guard: {n_files} hot-loop modules clean, "
+          f"{n_obs} obs modules simulation-free")
     return 0
 
 
