@@ -28,6 +28,7 @@ def main() -> None:
         provision_bench,
         roofline,
         scalability,
+        serving_bench,
     )
 
     modules = [
@@ -45,6 +46,7 @@ def main() -> None:
         ("campaign_scale", campaign_scale_bench),  # 50k-job engine scaling
         ("fault_tolerance", fault_tolerance_bench),  # checkpoint resume + preemption
         ("obs", obs_bench),                # tracing overhead gate
+        ("serving", serving_bench),        # pool-backed serving + autoscaler
         ("kernels", kernels_bench),
         ("roofline", roofline),            # §Roofline (reads dry-run artifacts)
     ]

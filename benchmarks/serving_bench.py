@@ -1,0 +1,254 @@
+"""Serving benchmark: the autoscaler must beat fixed fleets, cheaply.
+
+One diurnal + burst request trace (deterministic, seeded) is replayed
+against three fleet configurations on dom's 8+4 nodes:
+
+* **fixed-min** — one replica, no scaling: the burst buries it, so its
+  p99 TTFT is the number an autoscaler must beat;
+* **fixed-max** — ``MAX_REPLICAS`` replicas for the whole campaign: great
+  latency, but its replica-seconds are the cost ceiling;
+* **auto** — start at one replica; a queue-delay SLO burn-rate alert
+  (PR 7 ``AlertEngine``) drives scale-up, idle-TTL drives scale-down.
+
+Gates (all on deterministic virtual-clock results, so they are exact):
+
+1. auto p99 TTFT **strictly below** fixed-min p99 TTFT;
+2. auto replica-seconds **<=** fixed-max replica-seconds;
+3. auto sustained decode throughput >= ``TOKENS_PER_S_FLOOR``;
+4. auto p99 TTFT under the diurnal+burst trace <= ``TTFT_P99_CEILING_S``;
+5. model weights staged into the pool **exactly once** per campaign —
+   asserted from the trace: the loader lease is the only attach with
+   misses, every replica attach is a pure catalog hit.
+
+Results land in ``benchmarks/out/serving_bench.json`` and the repo-root
+``BENCH_serving.json`` trajectory point.
+
+    PYTHONPATH=src python -m benchmarks.serving_bench
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core import dom_cluster
+from repro.obs import (
+    AlertEngine,
+    AlertRule,
+    MetricsHub,
+    SLOSpec,
+    SLOTracker,
+    TraceRecorder,
+)
+from repro.orchestrator import burst_arrivals, diurnal_arrivals
+from repro.serving import (
+    Autoscaler,
+    AutoscalerConfig,
+    ModelProfile,
+    Request,
+    ServingCampaign,
+    synthesize_requests,
+)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+OUT_PATH = os.path.join(OUT_DIR, "serving_bench.json")
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
+
+GB = 1e9
+
+# -- the workload: a breathing day with a flash crowd -------------------------
+N_DIURNAL, N_BURST = 600, 240
+BURST_T0, BURST_T1 = 400.0, 520.0
+MODEL = ModelProfile("qwen3-14b-sim", weight_bytes=28 * GB, n_slots=8)
+
+# -- fleet + gate constants ---------------------------------------------------
+MIN_REPLICAS, MAX_REPLICAS = 1, 4
+TOKENS_PER_S_FLOOR = 120.0       # sustained generated tok/s (auto config)
+TTFT_P99_CEILING_S = 60.0        # p99 TTFT under the diurnal+burst trace
+
+
+def make_requests() -> list[Request]:
+    times = sorted(
+        diurnal_arrivals(
+            N_DIURNAL, base_rate=0.5, peak_rate=2.0, period_s=1_200.0, seed=3
+        )
+        + burst_arrivals(
+            N_BURST, base_rate=0.05, burst_rate=6.0,
+            burst_t0=BURST_T0, burst_t1=BURST_T1, seed=4,
+        )
+    )
+    return synthesize_requests(times, seed=5)
+
+
+def make_obs():
+    """Hub + queue-delay SLO + burn-rate alert + recorder, freshly wired
+    (each campaign needs its own: the hub's series are per-run state)."""
+    hub = MetricsHub()
+    slos = SLOTracker(
+        hub,
+        [
+            SLOSpec(
+                name="queue-delay",
+                series="serving/queue_delay_s",
+                op="<=",
+                target=2.0,
+                objective=0.85,
+                burn_windows=(120.0, 600.0),
+                description="head-of-queue wait stays bounded",
+            )
+        ],
+    )
+    alerts = AlertEngine(
+        hub,
+        [
+            AlertRule(
+                name="queue-delay-burn",
+                kind="burn",
+                slo="queue-delay",
+                op=">=",
+                target=3.0,
+                window_s=120.0,
+                severity="critical",
+            )
+        ],
+        slos=slos,
+    )
+    rec = TraceRecorder(metrics=hub, sample_every_s=10.0, alerts=alerts)
+    return hub, alerts, rec
+
+
+def run_config(name: str, *, initial: int, autoscale: bool):
+    hub, alerts, rec = make_obs()
+    asc = None
+    if autoscale:
+        asc = Autoscaler(
+            alerts,
+            AutoscalerConfig(
+                rule="queue-delay-burn",
+                min_replicas=MIN_REPLICAS,
+                max_replicas=MAX_REPLICAS,
+                control_every_s=15.0,
+                scale_up_cooldown_s=60.0,
+                idle_ttl_s=90.0,
+            ),
+            recorder=rec,
+        )
+    camp = ServingCampaign(
+        dom_cluster(), MODEL, make_requests(),
+        initial_replicas=initial, autoscaler=asc, recorder=rec,
+    )
+    t0 = time.perf_counter()
+    report = camp.run()
+    wall_s = time.perf_counter() - t0
+
+    attaches = [e for e in rec.events if e[0] == "lease_attached"]
+    miss_attaches = [e for e in attaches if e[3]["misses"] > 0]
+    pm = camp.service.pool_manager
+    return {
+        "name": name,
+        "wall_s": round(wall_s, 4),
+        "completed": report.n_completed,
+        "ttft_p50_s": round(report.ttft_p50_s, 4),
+        "ttft_p99_s": round(report.ttft_p99_s, 4),
+        "tpot_p99_s": round(report.tpot_p99_s, 5),
+        "tokens_per_s": round(report.tokens_per_s, 1),
+        "replica_seconds": round(report.replica_seconds, 1),
+        "peak_replicas": report.peak_replicas,
+        "scale_ups": report.scale_ups,
+        "scale_downs": report.scale_downs,
+        "alert_incidents": len(alerts.incidents),
+        "lease_attaches": len(attaches),
+        "miss_attaches": len(miss_attaches),
+        "bytes_staged": pm.stats.bytes_staged,
+        "mean_occupancy": round(report.mean_occupancy, 3),
+    }, report, camp
+
+
+def run_gate(verbose: bool = True) -> dict:
+    fixed_min, _, _ = run_config("fixed-min", initial=MIN_REPLICAS, autoscale=False)
+    fixed_max, _, _ = run_config("fixed-max", initial=MAX_REPLICAS, autoscale=False)
+    auto, _, _ = run_config("auto", initial=MIN_REPLICAS, autoscale=True)
+
+    checks = {
+        "auto_beats_fixed_min_p99": auto["ttft_p99_s"] < fixed_min["ttft_p99_s"],
+        "auto_within_fixed_max_replica_seconds":
+            auto["replica_seconds"] <= fixed_max["replica_seconds"],
+        "auto_tokens_per_s_floor": auto["tokens_per_s"] >= TOKENS_PER_S_FLOOR,
+        "auto_ttft_p99_ceiling": auto["ttft_p99_s"] <= TTFT_P99_CEILING_S,
+        # the staged-once invariant, per campaign: one attach carried
+        # misses (the weight loader), and it staged exactly the weights
+        "weights_staged_once": all(
+            c["miss_attaches"] == 1
+            and c["bytes_staged"] == MODEL.weight_bytes
+            for c in (fixed_min, fixed_max, auto)
+        ),
+        "all_requests_completed": all(
+            c["completed"] == N_DIURNAL + N_BURST
+            for c in (fixed_min, fixed_max, auto)
+        ),
+        "autoscaler_scaled": auto["scale_ups"] >= 1 and auto["scale_downs"] >= 1,
+    }
+    payload = {
+        "bench": "serving",
+        "workload": {
+            "n_requests": N_DIURNAL + N_BURST,
+            "burst_window_s": [BURST_T0, BURST_T1],
+            "model": MODEL.name,
+            "weight_bytes": MODEL.weight_bytes,
+        },
+        "configs": {c["name"]: c for c in (fixed_min, fixed_max, auto)},
+        "gate": {
+            "tokens_per_s_floor": TOKENS_PER_S_FLOOR,
+            "ttft_p99_ceiling_s": TTFT_P99_CEILING_S,
+            "checks": checks,
+            "ok": all(checks.values()),
+        },
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    for path in (OUT_PATH, BENCH_PATH):
+        with open(path, "w", encoding="utf-8") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+    if verbose:
+        for c in (fixed_min, fixed_max, auto):
+            print(
+                f"{c['name']:>9}: p99 TTFT {c['ttft_p99_s']:7.2f} s | "
+                f"{c['tokens_per_s']:6.1f} tok/s | "
+                f"{c['replica_seconds']:7.1f} replica-s | "
+                f"peak {c['peak_replicas']} | "
+                f"{c['scale_ups']} up / {c['scale_downs']} down"
+            )
+        for k, ok in checks.items():
+            print(f"  {'PASS' if ok else 'FAIL'}  {k}")
+    if not payload["gate"]["ok"]:
+        failed = [k for k, ok in checks.items() if not ok]
+        raise SystemExit(f"serving gate FAILED: {failed}")
+    return payload
+
+
+def rows():
+    p = run_gate(verbose=False)
+    cfg = p["configs"]
+    auto, fmin, fmax = cfg["auto"], cfg["fixed-min"], cfg["fixed-max"]
+    n = p["workload"]["n_requests"]
+    return [
+        (
+            "serving_auto",
+            auto["wall_s"] * 1e6 / n,
+            f"p99 TTFT {auto['ttft_p99_s']:.2f}s vs fixed-min "
+            f"{fmin['ttft_p99_s']:.2f}s at {auto['replica_seconds']:.0f} "
+            f"replica-s (fixed-max {fmax['replica_seconds']:.0f})",
+        ),
+        (
+            "serving_throughput",
+            auto["wall_s"] * 1e6 / n,
+            f"{auto['tokens_per_s']:.0f} tok/s sustained, "
+            f"occupancy {auto['mean_occupancy']:.2f}, "
+            f"weights staged once ({auto['bytes_staged'] / 1e9:.0f} GB)",
+        ),
+    ]
+
+
+if __name__ == "__main__":
+    run_gate(verbose=True)

@@ -25,6 +25,9 @@ The checks (each fires only when its evidence clears a threshold):
   per-backend rejection reasons histogrammed.
 * **slo_breach** — any SLO with its error budget overspent (when an
   :class:`~repro.obs.slo.SLOReport` is handed in).
+* **serving_queue_bound** — serving campaigns (span-free traces with
+  replica lifecycle events): the TTFT tail is queueing for a slot rather
+  than prefill; capacity should arrive earlier.
 
 Pure reporting: reads the recorder/hub, never the live engine. Cold-side
 module — hot loops never import it (``tools/check_obs_imports``).
@@ -333,6 +336,54 @@ def _check_negotiation_pressure(trace) -> Optional[Advisory]:
     )
 
 
+def _check_serving_queue_bound(trace, metrics) -> Optional[Advisory]:
+    """Serving campaigns have no job spans — their evidence is the replica
+    lifecycle events plus the TTFT histogram. Fires when the TTFT tail is
+    dominated by queueing: prefill cost is roughly constant per request, so
+    a p99 far above p50 means requests sat in the queue waiting for a slot
+    (capacity arrived too late or not at all)."""
+    replica_events = [e for e in trace.events if e[0] == "replica"]
+    if not replica_events or metrics is None:
+        return None
+    hist = metrics.histograms.get("serving/ttft_s")
+    if hist is None or hist.total == 0:
+        return None
+    p50 = hist.percentile(0.50)
+    p99 = hist.percentile(0.99)
+    if p50 is None or p99 is None:
+        return None
+    floor = max(p50, 0.05)
+    if p99 < 5.0 * floor:
+        return None
+    ups = sum(1 for e in trace.events
+              if e[0] == "autoscale" and e[2] == "up")
+    peak = max(
+        (e[3].get("n_live", 0) for e in trace.events if e[0] == "autoscale"),
+        default=0,
+    )
+    return Advisory(
+        code="serving_queue_bound",
+        severity=min(1.0, 0.4 + 0.06 * (p99 / floor)),
+        summary=(
+            f"serving queue bound: TTFT p99 {p99:.1f} s vs p50 {p50:.2f} s — "
+            f"the tail is queueing for a slot, not prefill "
+            f"({ups} alert-driven scale-up(s), peak fleet {peak})"
+        ),
+        recommendation=(
+            "let capacity arrive earlier: raise max_replicas, shorten the "
+            "scale-up cooldown, or lower the queue-delay alert's burn "
+            "target/window so the burst trips it sooner"
+        ),
+        evidence={
+            "ttft_p50_s": round(p50, 3),
+            "ttft_p99_s": round(p99, 3),
+            "scale_ups": ups,
+            "peak_fleet": peak,
+            "replica_events": len(replica_events),
+        },
+    )
+
+
 def _check_slo_breach(slos) -> list[Advisory]:
     out = []
     for s in getattr(slos, "breached", ()):
@@ -378,12 +429,22 @@ def diagnose(trace, *, metrics=None, report=None, slos=None) -> tuple[Advisory, 
         metrics = getattr(trace, "metrics", None)
     if slos is None and report is not None:
         slos = getattr(report, "slo", None)
+    serving = _check_serving_queue_bound(trace, metrics)
     cp = critical_path(trace)
     if cp is None or cp.makespan_s <= 0:
-        return ()
+        # span-free traces (serving campaigns) still get the serving check
+        # and any SLO breaches; pure-empty traces stay an empty tuple
+        if serving is None:
+            return ()
+        advisories = [serving]
+        if slos is not None:
+            advisories.extend(_check_slo_breach(slos))
+        advisories.sort(key=lambda a: (-a.severity, a.code))
+        return tuple(advisories)
     n_jobs = len(trace.spans)
     thrash = _check_pool_thrash(trace, n_jobs)
     found = [
+        serving,
         thrash,
         _check_stage_in_bound(cp, trace, metrics, report, thrash is not None),
         _check_provisioning_bound(cp),

@@ -74,6 +74,9 @@ class NullRecorder:
     def bind(self, orch) -> "NullRecorder":
         return self
 
+    def bind_engine(self, engine, service=None) -> "NullRecorder":
+        return self
+
     # lifecycle
     def transition(self, job, state) -> None: ...
     def grant(self, job, session) -> None: ...
@@ -203,6 +206,19 @@ class TraceRecorder:
         orch.provision.recorder = self   # propagates: scheduler, pools, evictor
         if self.metrics is not None:
             self._register_probes(orch)
+        return self
+
+    def bind_engine(self, engine, service=None) -> "TraceRecorder":
+        """Bind to a bare :class:`SimEngine` — for drivers that are not an
+        orchestrator (the serving campaign): installs the virtual clock and
+        the engine metronome, and optionally hooks a
+        :class:`~repro.provision.ProvisioningService` so session/pool/lease
+        events land in this trace. Probes are the caller's to register on
+        the hub directly. Returns self (chainable)."""
+        self._clock = lambda: engine._now
+        engine.recorder = self
+        if service is not None:
+            service.recorder = self
         return self
 
     def _register_probes(self, orch) -> None:
@@ -541,6 +557,11 @@ class TraceRecorder:
         """(earliest submit-or-span start, latest span end) over the trace;
         ``(0.0, 0.0)`` when nothing was recorded."""
         if not self.spans and not self.job_meta:
+            # span-free traces (e.g. serving campaigns record only typed
+            # events) still have a meaningful window: the event timestamps
+            if self.events:
+                ts = [e[1] for e in self.events]
+                return (min(ts), max(ts))
             return (0.0, 0.0)
         starts = [m["submit"] for m in self.job_meta.values()]
         t_end = 0.0

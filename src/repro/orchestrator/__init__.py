@@ -18,6 +18,8 @@ mid-flight campaign snapshots.
 """
 
 from .arrivals import (
+    burst_arrivals,
+    diurnal_arrivals,
     exponential_interarrivals,
     mean_interarrival,
     poisson_arrivals,
@@ -66,6 +68,6 @@ __all__ = [
     "pool_report", "storage_node_utilization", "summarize",
     "BackfillPolicy", "DataAwarePolicy", "EasyBackfillPolicy", "FIFOPolicy",
     "PreemptionPolicy", "QueuePolicy", "StorageAwarePolicy", "VictimView",
-    "exponential_interarrivals", "mean_interarrival", "poisson_arrivals",
-    "replay_trace",
+    "burst_arrivals", "diurnal_arrivals", "exponential_interarrivals",
+    "mean_interarrival", "poisson_arrivals", "replay_trace",
 ]

@@ -1,25 +1,9 @@
 import pytest
 
-# The kernel/model/distributed suites track jax+pallas APIs that have
-# drifted on some container jax versions (pre-existing at seed; see
-# ROADMAP "Kernel/model tests"). They are skipped — not failed — when the
-# APIs they exercise are absent, so tier-1 `pytest -x -q` fails only on
-# real regressions in the storage/orchestration layers.
-JAX_DRIFT_REASON = (
-    "jax/pallas API drift on this container's jax (pre-existing at seed): "
-    "jax.sharding.AxisType and/or pallas CompilerParams are missing"
-)
-
-
-def jax_api_drifted() -> bool:
-    try:
-        import jax
-        from jax.experimental.pallas import tpu as pltpu
-    except Exception:
-        return True
-    return not (
-        hasattr(jax.sharding, "AxisType") and hasattr(pltpu, "CompilerParams")
-    )
+# Single source of truth for the jax API drift detection lives in
+# repro.compat so runnable examples (examples/serve_decode.py) can reuse
+# it; tests import it from here as before.
+from repro.compat import JAX_DRIFT_REASON, jax_api_drifted  # noqa: F401
 
 
 def pytest_configure(config):

@@ -8,6 +8,8 @@ from repro.orchestrator import (
     JobState,
     Orchestrator,
     WorkflowSpec,
+    burst_arrivals,
+    diurnal_arrivals,
     exponential_interarrivals,
     mean_interarrival,
     poisson_arrivals,
@@ -50,6 +52,76 @@ def test_replay_trace_sorts_shifts_and_validates():
     assert replay_trace([]) == []
     with pytest.raises(ValueError):
         replay_trace([-0.5, 1.0])
+
+
+def test_diurnal_is_seeded_and_monotone():
+    kw = dict(base_rate=0.5, peak_rate=2.0, period_s=1200.0)
+    a = diurnal_arrivals(200, seed=7, **kw)
+    b = diurnal_arrivals(200, seed=7, **kw)
+    c = diurnal_arrivals(200, seed=8, **kw)
+    assert a == b                      # same seed -> identical times
+    assert a != c
+    assert len(a) == 200
+    assert a == sorted(a) and a[0] >= 0
+
+
+def test_diurnal_mean_rate_matches_profile():
+    """Empirical rate over the generated span tracks the analytic mean of
+    the sinusoidal profile over the same span (within sampling tolerance)."""
+    import math
+
+    base, peak, period = 0.5, 2.0, 2000.0
+    times = diurnal_arrivals(
+        4000, base_rate=base, peak_rate=peak, period_s=period, seed=3
+    )
+    span = times[-1]
+    # integral of base + (peak-base)*(1 - cos(2*pi*t/period))/2 over [0, span]
+    amp = (peak - base) / 2.0
+    expected = (base + amp) * span - amp * (period / (2 * math.pi)) * math.sin(
+        2 * math.pi * span / period
+    )
+    assert len(times) == pytest.approx(expected, rel=0.1)
+
+
+def test_diurnal_peaks_mid_period():
+    """Arrivals bunch at mid-period (the rate crest), thin at the edges."""
+    period = 1000.0
+    times = diurnal_arrivals(
+        3000, base_rate=0.2, peak_rate=4.0, period_s=period, seed=9
+    )
+    in_first = [t % period for t in times]
+    crest = sum(1 for t in in_first if period / 4 <= t < 3 * period / 4)
+    trough = len(in_first) - crest
+    assert crest > 2 * trough
+
+
+def test_burst_is_seeded_and_concentrated():
+    kw = dict(base_rate=0.1, burst_rate=5.0, burst_t0=100.0, burst_t1=200.0)
+    a = burst_arrivals(300, seed=5, **kw)
+    assert a == burst_arrivals(300, seed=5, **kw)
+    assert a == sorted(a)
+    in_burst = [t for t in a if 100.0 <= t < 200.0]
+    # the draw stops at n arrivals, mid-burst: nearly everything after the
+    # slow 0.1/s lead-in lands inside the window
+    assert len(in_burst) > 0.7 * len(a)
+    # in-window empirical rate (over the span actually observed) tracks
+    # burst_rate, not base_rate
+    observed_span = in_burst[-1] - 100.0
+    assert len(in_burst) / observed_span == pytest.approx(5.0, rel=0.15)
+
+
+def test_profile_arrivals_validation():
+    with pytest.raises(ValueError):
+        diurnal_arrivals(10, base_rate=2.0, peak_rate=1.0)    # peak < base
+    with pytest.raises(ValueError):
+        diurnal_arrivals(10, base_rate=0.5, peak_rate=1.0, period_s=0.0)
+    with pytest.raises(ValueError):
+        burst_arrivals(10, base_rate=1.0, burst_rate=2.0,
+                       burst_t0=50.0, burst_t1=50.0)          # empty window
+    with pytest.raises(ValueError):
+        burst_arrivals(10, base_rate=0.0, burst_rate=2.0,
+                       burst_t0=0.0, burst_t1=10.0)
+    assert diurnal_arrivals(0, base_rate=0.5, peak_rate=1.0) == []
 
 
 def test_campaign_honors_submit_times():

@@ -1,0 +1,376 @@
+"""Serving subsystem: batching accounting, replica lifecycle, staged-once
+weights, autoscaler hysteresis, and the bit-identical replay regression."""
+
+import pytest
+
+from repro.core import dom_cluster
+from repro.obs import (
+    AlertEngine,
+    AlertRule,
+    MetricsHub,
+    SLOSpec,
+    SLOTracker,
+    TraceRecorder,
+    diagnose,
+)
+from repro.orchestrator import burst_arrivals, diurnal_arrivals
+from repro.serving import (
+    Autoscaler,
+    AutoscalerConfig,
+    BatchEngine,
+    LengthDist,
+    ModelProfile,
+    Request,
+    ReplicaState,
+    ServingCampaign,
+    ServingPerf,
+    synthesize_requests,
+)
+
+GB = 1e9
+
+
+# -- workload -----------------------------------------------------------------
+
+def test_synthesize_requests_seeded_and_validated():
+    times = [0.0, 1.0, 2.5]
+    a = synthesize_requests(times, seed=4)
+    b = synthesize_requests(times, seed=4)
+    assert [(r.prompt_tokens, r.gen_tokens) for r in a] == [
+        (r.prompt_tokens, r.gen_tokens) for r in b
+    ]
+    assert all(r.prompt_tokens >= 1 and r.gen_tokens >= 1 for r in a)
+    with pytest.raises(ValueError):
+        synthesize_requests([1.0, 0.5], seed=0)   # non-monotone
+    with pytest.raises(ValueError):
+        LengthDist(mean=0.0)
+
+
+def test_length_dist_constant_when_sigma_zero():
+    import random
+
+    d = LengthDist(mean=100.0, sigma=0.0)
+    assert d.sample(random.Random(0)) == 100
+
+
+# -- batching -----------------------------------------------------------------
+
+def test_batch_engine_token_accounting_exact():
+    """Hand-computed two-request scenario: prefill priority, decode step
+    cost scaling with occupancy, TTFT/TPOT derivation."""
+    perf = ServingPerf(
+        prefill_tok_per_s=1000.0, prefill_overhead_s=0.1,
+        decode_base_s=0.01, decode_per_slot_s=0.005,
+    )
+    b = BatchEngine(2, perf)
+    r1 = Request(0, 0.0, prompt_tokens=100, gen_tokens=3)
+    r2 = Request(1, 0.0, prompt_tokens=200, gen_tokens=1)
+
+    dt = b.begin_prefill(r1, 1.0)
+    assert dt == pytest.approx(0.2)               # 0.1 + 100/1000
+    assert b.finish_prefill(r1, 1.2) is None      # takes slot 0
+    assert r1.t_first_token == 1.2 and r1.generated == 1
+    assert b.n_active == 1 and b.slots[0] is r1
+
+    # one-token request completes at prefill end, never takes a slot
+    b.begin_prefill(r2, 1.2)
+    done = b.finish_prefill(r2, 1.5)
+    assert done is r2 and r2.t_done == 1.5 and b.n_active == 1
+
+    # decode: step cost reflects one active slot
+    assert b.decode_step_s() == pytest.approx(0.015)
+    assert b.advance_decode(1.515) == []          # token 2 of 3
+    done = b.advance_decode(1.530)                # token 3 of 3
+    assert done == [r1] and r1.t_done == 1.530
+    assert b.n_active == 0 and b.has_free_slot()
+
+    assert r1.ttft_s == pytest.approx(1.2)
+    assert r1.tpot_s == pytest.approx((1.530 - 1.2) / 2)
+    assert r2.tpot_s is None
+    assert b.tokens_generated == 4                # 3 + 1
+    assert b.tokens_prefilled == 300
+    assert b.mean_occupancy == pytest.approx(1.0)
+
+
+def test_batch_engine_slot_reuse_is_deterministic():
+    b = BatchEngine(3, ServingPerf())
+    reqs = [Request(i, 0.0, prompt_tokens=10, gen_tokens=2) for i in range(3)]
+    for i, r in enumerate(reqs):
+        b.begin_prefill(r, float(i))
+        b.finish_prefill(r, float(i) + 0.1)
+    assert [b.slots[i].rid for i in range(3)] == [0, 1, 2]
+    b.advance_decode(5.0)                          # all complete, slots free
+    assert b._free == [2, 1, 0]                    # lowest slot next again
+
+
+# -- campaign fixtures --------------------------------------------------------
+
+def make_requests(n_diurnal=600, n_burst=240):
+    times = sorted(
+        diurnal_arrivals(n_diurnal, base_rate=0.5, peak_rate=2.0,
+                         period_s=1_200.0, seed=3)
+        + burst_arrivals(n_burst, base_rate=0.05, burst_rate=6.0,
+                         burst_t0=400.0, burst_t1=520.0, seed=4)
+    )
+    return synthesize_requests(times, seed=5)
+
+
+def make_obs():
+    hub = MetricsHub()
+    slos = SLOTracker(
+        hub,
+        [SLOSpec(name="queue-delay", series="serving/queue_delay_s",
+                 op="<=", target=2.0, objective=0.85,
+                 burn_windows=(120.0, 600.0))],
+    )
+    alerts = AlertEngine(
+        hub,
+        [AlertRule(name="queue-delay-burn", kind="burn", slo="queue-delay",
+                   op=">=", target=3.0, window_s=120.0, severity="critical")],
+        slos=slos,
+    )
+    rec = TraceRecorder(metrics=hub, sample_every_s=10.0, alerts=alerts)
+    return hub, alerts, rec
+
+
+def make_autoscaler(alerts, rec, **overrides):
+    kw = dict(rule="queue-delay-burn", min_replicas=1, max_replicas=4,
+              control_every_s=15.0, scale_up_cooldown_s=60.0, idle_ttl_s=90.0)
+    kw.update(overrides)
+    return Autoscaler(alerts, AutoscalerConfig(**kw), recorder=rec)
+
+
+MODEL = ModelProfile("qwen3-14b-sim", weight_bytes=28 * GB, n_slots=8)
+
+
+def run_traced_campaign(requests=None):
+    hub, alerts, rec = make_obs()
+    camp = ServingCampaign(
+        dom_cluster(), MODEL, requests if requests is not None else make_requests(),
+        initial_replicas=1, autoscaler=make_autoscaler(alerts, rec),
+        recorder=rec,
+    )
+    report = camp.run()
+    return camp, report, hub, alerts, rec
+
+
+# -- replica set + staged-once invariant --------------------------------------
+
+def test_weights_staged_exactly_once():
+    camp, report, hub, alerts, rec = run_traced_campaign()
+    attaches = [e for e in rec.events if e[0] == "lease_attached"]
+    misses = [e for e in attaches if e[3]["misses"] > 0]
+    # the loader lease is the only attach that staged anything
+    assert len(misses) == 1 and misses[0][2] == "serving-weights"
+    # every replica attach was a pure catalog hit
+    replica_attaches = [e for e in attaches if e[2].startswith("serving-r")]
+    assert replica_attaches and all(
+        e[3]["misses"] == 0 and e[3]["hits"] == 1 for e in replica_attaches
+    )
+    pm = camp.service.pool_manager
+    assert pm.stats.bytes_staged == MODEL.weight_bytes
+    assert pm.stats.dataset_misses == 1
+    # weight bytes each replica did NOT re-stage are credited as saved
+    assert pm.stats.bytes_saved == MODEL.weight_bytes * len(replica_attaches)
+
+
+def test_campaign_serves_everything_and_scales_both_ways():
+    camp, report, hub, alerts, rec = run_traced_campaign()
+    assert report.n_completed == report.n_requests
+    assert report.scale_ups >= 1 and report.scale_downs >= 1
+    assert report.peak_replicas >= 2
+    assert report.n_replicas_final == 1
+    # replica-seconds: more than a single always-on replica, less than a
+    # peak-sized fleet held the whole time
+    assert report.replica_seconds > report.makespan_s * 0.9
+    assert report.replica_seconds < report.makespan_s * report.peak_replicas
+    # incident lifecycle: fired during/after the burst, then resolved
+    inc = alerts.incidents_for("queue-delay-burn")
+    assert inc and inc[0].t_fired >= 400.0 and not inc[0].open
+
+
+def test_replica_lifecycle_states_traced():
+    camp, report, hub, alerts, rec = run_traced_campaign()
+    for r in camp.rset.replicas:
+        if r.state is ReplicaState.STOPPED:
+            assert r.stopped_at is not None and r.session.lease is None
+        states = [e[3]["state"] for e in rec.events
+                  if e[0] == "replica" and e[2] == r.name]
+        assert states[0] == "starting"
+        if "stopped" in states:
+            assert states.index("starting") < states.index("active") < \
+                states.index("draining") < states.index("stopped")
+    # cold start was priced: attach + page-in, no deploy
+    r0 = camp.rset.replicas[0]
+    assert r0.cold_start_s > 0
+    assert r0.cold_start_s < camp.rset.weight_stage_s
+
+
+def test_serving_trace_is_diagnosable_and_ranged():
+    camp, report, hub, alerts, rec = run_traced_campaign()
+    advisories = diagnose(rec)
+    assert any(a.code == "serving_queue_bound" for a in advisories)
+    t0, t1 = rec.t_range()
+    assert 0.0 <= t0 < t1            # event-timestamp fallback, no spans
+
+
+# -- determinism regression ---------------------------------------------------
+
+def test_1k_request_campaign_replays_bit_identical():
+    """The ISSUE 8 regression: a ~1k-request diurnal+burst campaign with
+    autoscaler + recorder + alerts attached replays bit-identically —
+    completion order, scale events, and the final hub snapshot."""
+    reqs = make_requests(n_diurnal=700, n_burst=300)
+
+    def run():
+        fresh = [Request(r.rid, r.t_submit, r.prompt_tokens, r.gen_tokens)
+                 for r in reqs]
+        return run_traced_campaign(fresh)
+
+    c1, rep1, hub1, a1, rec1 = run()
+    c2, rep2, hub2, a2, rec2 = run()
+    assert rep1.n_completed == 1000
+    assert c1.completion_order == c2.completion_order
+    assert c1.rset.scale_events == c2.rset.scale_events
+    assert [d for d in c1.autoscaler.decisions] == \
+        [d for d in c2.autoscaler.decisions]
+    assert hub1.snapshot() == hub2.snapshot()
+    assert rec1.events == rec2.events
+    assert rep1 == rep2
+
+
+# -- autoscaler hysteresis (scripted alert sequences) -------------------------
+
+class ScriptedAlerts:
+    """Fake AlertEngine: returns a scripted sequence of states for one
+    rule (duck-typed — no hub/evaluate, so the autoscaler just polls)."""
+
+    def __init__(self, states):
+        self.states = list(states)
+        self.i = 0
+
+    def state(self, rule):
+        s = self.states[min(self.i, len(self.states) - 1)]
+        self.i += 1
+        return s
+
+
+class FakeReplica:
+    def __init__(self, rid, idle_since=None):
+        self.rid = rid
+        self.name = f"fake-r{rid:02d}"
+        self.idle_since = idle_since
+
+
+class FakeReplicaSet:
+    """Narrow ReplicaSet interface the autoscaler drives: n_live,
+    scale_up / scale_down, idle_replicas."""
+
+    def __init__(self, n_live=1, deny_ups=False):
+        self.n_live = n_live
+        self.deny_ups = deny_ups
+        self.ups = []
+        self.downs = []
+        self._idle = []
+
+    def scale_up(self, now, reason=""):
+        if self.deny_ups:
+            return None
+        self.n_live += 1
+        r = FakeReplica(len(self.ups))
+        self.ups.append(now)
+        return r
+
+    def scale_down(self, r, now, reason=""):
+        self.n_live -= 1
+        self.downs.append((now, r.rid))
+        self._idle = [x for x in self._idle if x is not r]
+
+    def set_idle(self, *replicas):
+        self._idle = list(replicas)
+
+    def idle_replicas(self, now, ttl_s):
+        return [r for r in self._idle
+                if r.idle_since is not None and now - r.idle_since >= ttl_s]
+
+
+def drive(asc, rset, ticks, every=15.0):
+    for i in range(ticks):
+        asc._rset = rset
+        asc.decide(i * every)
+
+
+def test_scale_up_cooldown_suppresses_rapid_ups():
+    # alert FIRING on every one of 8 ticks, 15 s apart, cooldown 60 s:
+    # ups land at t=0 and t=60 only
+    alerts = ScriptedAlerts(["firing"] * 8)
+    asc = Autoscaler(alerts, AutoscalerConfig(
+        rule="r", min_replicas=1, max_replicas=8,
+        control_every_s=15.0, scale_up_cooldown_s=60.0, idle_ttl_s=30.0))
+    rset = FakeReplicaSet(n_live=1)
+    drive(asc, rset, 8)
+    assert rset.ups == [0.0, 60.0]
+    assert asc.scale_ups == 2
+
+
+def test_scale_up_stops_at_max_replicas():
+    alerts = ScriptedAlerts(["firing"] * 10)
+    asc = Autoscaler(alerts, AutoscalerConfig(
+        rule="r", min_replicas=1, max_replicas=2,
+        control_every_s=15.0, scale_up_cooldown_s=0.0, idle_ttl_s=30.0))
+    rset = FakeReplicaSet(n_live=1)
+    drive(asc, rset, 10)
+    assert rset.n_live == 2 and len(rset.ups) == 1
+    assert any(d.reason == "at max_replicas" for d in asc.decisions)
+
+
+def test_denied_scale_up_is_counted_not_fatal():
+    alerts = ScriptedAlerts(["firing"] * 3)
+    asc = Autoscaler(alerts, AutoscalerConfig(
+        rule="r", min_replicas=1, max_replicas=4,
+        control_every_s=15.0, scale_up_cooldown_s=0.0, idle_ttl_s=30.0))
+    rset = FakeReplicaSet(n_live=1, deny_ups=True)
+    drive(asc, rset, 3)
+    assert asc.denied_ups == 3 and asc.scale_ups == 0
+
+
+def test_scale_down_waits_for_idle_ttl_and_steps_one_per_tick():
+    # alert quiet throughout; three idle replicas above min, TTL 30 s
+    alerts = ScriptedAlerts(["inactive"] * 10)
+    asc = Autoscaler(alerts, AutoscalerConfig(
+        rule="r", min_replicas=1, max_replicas=8,
+        control_every_s=15.0, scale_up_cooldown_s=0.0, idle_ttl_s=30.0))
+    rset = FakeReplicaSet(n_live=4)
+    idlers = [FakeReplica(i, idle_since=0.0) for i in range(3)]
+    rset.set_idle(*idlers)
+    drive(asc, rset, 10)
+    # nothing drains before TTL (ticks at 0 and 15): first down at t=30,
+    # then one per tick, and never below min_replicas
+    assert rset.downs == [(30.0, 0), (45.0, 1), (60.0, 2)]
+    assert rset.n_live == 1
+    assert asc.scale_downs == 3
+
+
+def test_flapping_alert_does_not_thrash():
+    # FIRING / quiet alternating every tick; cooldown 60 s, TTL 90 s: ups
+    # are rate-limited to cooldown spacing (0, 60, 120 — not every firing
+    # tick), and the quiet half-ticks never drain anything because no
+    # replica has been idle past the TTL
+    alerts = ScriptedAlerts(["firing", "inactive"] * 5)
+    asc = Autoscaler(alerts, AutoscalerConfig(
+        rule="r", min_replicas=1, max_replicas=4,
+        control_every_s=15.0, scale_up_cooldown_s=60.0, idle_ttl_s=90.0))
+    rset = FakeReplicaSet(n_live=1)
+    drive(asc, rset, 10)
+    assert rset.ups == [0.0, 60.0, 120.0]
+    assert all(b - a >= 60.0 for a, b in zip(rset.ups, rset.ups[1:]))
+    assert rset.downs == []            # idle TTL never cleared
+
+
+def test_autoscaler_config_validation():
+    with pytest.raises(ValueError):
+        AutoscalerConfig(rule="r", min_replicas=3, max_replicas=2)
+    with pytest.raises(ValueError):
+        AutoscalerConfig(rule="r", min_replicas=0)
+    with pytest.raises(ValueError):
+        AutoscalerConfig(rule="r", control_every_s=0.0)

@@ -37,8 +37,10 @@ import ast
 import os
 import sys
 
-#: packages whose modules run inside the campaign hot loop
-HOT_PACKAGES = ("core", "orchestrator", "pool", "provision")
+#: packages whose modules run inside the campaign hot loop (``serving``
+#: joined in PR 8: its batch/replica/autoscale steps are heap events on
+#: the same virtual clock, so the same layering applies)
+HOT_PACKAGES = ("core", "orchestrator", "pool", "provision", "serving")
 
 #: the one obs module import-time code may touch
 ALLOWED = "repro.obs.trace"
