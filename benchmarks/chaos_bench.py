@@ -1,0 +1,234 @@
+"""Mirrored deployments + self-healing pools vs no-redundancy under node kills.
+
+The chaos acceptance scenario: one seeded campaign (direct 2-node
+ephemeralfs jobs plus POOLED jobs leasing shared datasets from a 2-node
+pool), hit by a *scripted* `NodeFaultModel` schedule — three storage-node
+kills mid-campaign, each repaired MTTR later — identical for both
+configurations, so the comparison isolates the redundancy/healing policy:
+
+* **no-redundancy** (the pre-chaos posture): every deployment touching a
+  dead node is destroyed; affected jobs restart through the synthetic-fault
+  requeue path, repeating their stage-in and their full run (no checkpoint
+  cadence — this is the scenario where redundancy, not PR 5's resume,
+  must carry the loss). The pool waits for the node's own repair.
+* **mirror + self-heal**: direct jobs request `placement.mirror` (BeeGFS
+  buddy-group style), so a single loss degrades the deployment in place —
+  halved effective bandwidth, in-flight phase re-priced — instead of
+  killing it; the pool backfills a free spare on a deterministic
+  `RetryPolicy` backoff instead of waiting out the MTTR.
+
+Asserted here (so ``benchmarks/run.py`` fails loudly on regression):
+the resilient configuration completes every job, achieves strictly higher
+goodput (jobs per virtual hour ⇔ strictly lower makespan for the fixed
+job set) AND strictly lower re-staged bytes, degrades at least one
+deployment, and rebuilds the pool at least once. A chaos-off leg replays
+the same campaign with an empty fault model and with no model at all —
+bit-identical job histories and allocation ids, the PR 4 determinism
+contract.
+
+``derived`` reports both modes' makespan, goodput, staged bytes, and the
+chaos counters; the JSON trajectory lands in ``benchmarks/out/chaos.json``
+and the repo-root ``BENCH_chaos.json`` perf-trajectory point.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import random
+import time
+
+from repro.chaos import NodeFaultModel, RetryPolicy
+from repro.core import synthetic_cluster
+from repro.orchestrator import (
+    BackfillPolicy,
+    JobState,
+    Orchestrator,
+    WorkflowSpec,
+    summarize,
+)
+from repro.pool import DatasetRef
+from repro.provision import LifetimeClass, Placement, StorageSpec
+
+from .common import time_us
+
+GB = 1e9
+N_JOBS = 32
+N_STORAGE = 10
+SEED = 11
+MTTR_S = 500.0
+KILLS = ((240.0, "sn00001"), (420.0, "sn00003"), (560.0, "sn00006"))
+OUT_PATH = os.path.join(os.path.dirname(__file__), "out", "chaos.json")
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_chaos.json")
+
+
+def _specs(*, mirror: bool) -> list[WorkflowSpec]:
+    rng = random.Random(SEED)
+    ds = [DatasetRef(f"ds{k}", (10.0 + 4.0 * k) * GB) for k in range(4)]
+    specs = []
+    for i in range(N_JOBS):
+        name = f"job{i:03d}"
+        if i % 4 == 0:
+            storage = StorageSpec(
+                name,
+                lifetime=LifetimeClass.POOLED,
+                datasets=(ds[i % 4],),
+                stage_in_bytes=1 * GB,
+                stage_out_bytes=1 * GB,
+            )
+        else:
+            storage = StorageSpec(
+                name,
+                nodes=2,
+                managers=("ephemeralfs",),
+                placement=Placement(mirror=mirror),
+                stage_in_bytes=rng.uniform(8, 20) * GB,
+                stage_out_bytes=2 * GB,
+            )
+        specs.append(
+            WorkflowSpec(
+                name,
+                1 + i % 4,
+                storage_spec=storage,
+                run_time_s=rng.uniform(80, 160),
+                max_retries=6,
+            )
+        )
+    return specs
+
+
+def _campaign(*, mirror: bool, self_heal: bool, chaos: bool = True,
+              empty_model: bool = False):
+    from repro.obs.trace import TraceRecorder
+
+    cluster = synthetic_cluster(32, N_STORAGE)
+    rec = TraceRecorder()
+    orch = Orchestrator(cluster, policy=BackfillPolicy(), recorder=rec)
+    orch.enable_pools(ttl_s=None)
+    pool_session = orch.provision.open_session(
+        StorageSpec(
+            "pool0",
+            nodes=2,
+            lifetime=LifetimeClass.PERSISTENT,
+            capacity_cap_bytes=100 * GB,
+        )
+    )
+    if chaos or empty_model:
+        node_ids = [n.node_id for n in cluster.storage_nodes]
+        model = NodeFaultModel(
+            node_ids, mttr_s=MTTR_S, schedule=KILLS if chaos else ()
+        )
+        orch.enable_chaos(
+            model,
+            retry=RetryPolicy(base_s=15.0, seed=5) if self_heal else None,
+        )
+    jobs = orch.run_campaign(
+        _specs(mirror=mirror), submit_times=[i * 3.0 for i in range(N_JOBS)]
+    )
+    assert all(j.state is JobState.DONE for j in jobs), "campaign left stragglers"
+    rep = summarize(jobs, n_storage_nodes=N_STORAGE, pools=orch.pools)
+    fingerprint = [
+        (j.spec.name, tuple(j.history), tuple(j.alloc_history), j.attempt)
+        for j in jobs
+    ]
+    return rep, rec, pool_session.pool, fingerprint
+
+
+def _goodput(rep) -> float:
+    """Jobs completed per virtual hour (the job set is fixed, so this is
+    the makespan inverted onto an interpretable axis)."""
+    return N_JOBS / rep.makespan_s * 3600.0
+
+
+def rows():
+    runs = {}
+
+    def _run(key, **kw):
+        runs[key] = _campaign(**kw)
+
+    us_base = time_us(lambda: _run("base", mirror=False, self_heal=False), repeat=2)
+    us_res = time_us(lambda: _run("res", mirror=True, self_heal=True), repeat=2)
+    us_off = time_us(
+        lambda: _run("off", mirror=False, self_heal=False, chaos=False), repeat=2
+    )
+    _run("off_empty", mirror=False, self_heal=False, chaos=False, empty_model=True)
+
+    base, base_rec, _, _ = runs["base"]
+    res, res_rec, res_pool, _ = runs["res"]
+    off, _, _, off_fp = runs["off"]
+    _, _, _, empty_fp = runs["off_empty"]
+
+    # acceptance: same kill schedule, strictly higher goodput and strictly
+    # lower (re-)staged traffic with mirror redundancy + pool self-healing
+    assert _goodput(res) > _goodput(base), (
+        f"resilient goodput {_goodput(res):.1f} jobs/h not above "
+        f"no-redundancy {_goodput(base):.1f} jobs/h"
+    )
+    assert res.staged_in_bytes < base.staged_in_bytes, (
+        f"resilient re-staged {res.staged_in_bytes / GB:.0f}GB, "
+        f"no-redundancy {base.staged_in_bytes / GB:.0f}GB"
+    )
+    # the mechanisms actually fired: deployments degraded, the pool healed
+    assert res_rec.counts.get("chaos.degraded", 0) > 0, "nothing degraded"
+    assert res_rec.counts.get("chaos.rebuilds", 0) > 0, "pool never rebuilt"
+    assert "sn00001" in res_pool.replaced_node_ids, "pool not backfilled"
+    assert base_rec.counts.get("chaos.node_downs", 0) == len(KILLS)
+    # chaos off == chaos absent: an armed-but-empty model schedules nothing
+    # and the campaign replays the no-chaos history bit for bit
+    assert off_fp == empty_fp, "empty fault model perturbed the campaign"
+    assert off.makespan_s < base.makespan_s, "kills cost nothing?"
+
+    results = {
+        "benchmark": "chaos_bench",
+        "n_jobs": N_JOBS,
+        "kills": [[t, n] for t, n in KILLS],
+        "mttr_s": MTTR_S,
+        "no_redundancy": {
+            "makespan_s": base.makespan_s,
+            "goodput_jobs_per_h": _goodput(base),
+            "staged_in_bytes": base.staged_in_bytes,
+            "retries": base.total_retries,
+            "requeued_faults": base_rec.counts.get("fault.requeued", 0),
+        },
+        "mirror_self_heal": {
+            "makespan_s": res.makespan_s,
+            "goodput_jobs_per_h": _goodput(res),
+            "staged_in_bytes": res.staged_in_bytes,
+            "retries": res.total_retries,
+            "degraded": res_rec.counts.get("chaos.degraded", 0),
+            "rebuilds": res_rec.counts.get("chaos.rebuilds", 0),
+        },
+        "chaos_off": {"makespan_s": off.makespan_s},
+    }
+    results["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    for path in (OUT_PATH, BENCH_PATH):
+        with open(path, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+            f.write("\n")
+
+    return [
+        (
+            f"chaos/no-redundancy-{N_JOBS}jobs",
+            us_base,
+            f"makespan={base.makespan_s:.0f}s "
+            f"goodput={_goodput(base):.1f}jobs/h "
+            f"staged_in={base.staged_in_bytes / GB:.0f}GB "
+            f"retries={base.total_retries}",
+        ),
+        (
+            f"chaos/mirror-self-heal-{N_JOBS}jobs",
+            us_res,
+            f"makespan={res.makespan_s:.0f}s "
+            f"goodput={_goodput(res):.1f}jobs/h "
+            f"staged_in={res.staged_in_bytes / GB:.0f}GB "
+            f"degraded={res_rec.counts.get('chaos.degraded', 0)} "
+            f"rebuilds={res_rec.counts.get('chaos.rebuilds', 0)}",
+        ),
+        (
+            "chaos/off-replay",
+            us_off,
+            f"makespan={off.makespan_s:.0f}s bit-identical with/without "
+            f"empty model; json={OUT_PATH}",
+        ),
+    ]

@@ -14,6 +14,7 @@ def main() -> None:
     from . import (
         ault,
         campaign_scale_bench,
+        chaos_bench,
         checkpoint_io,
         deployment,
         fault_tolerance_bench,
@@ -45,6 +46,7 @@ def main() -> None:
         ("provision", provision_bench),    # StorageSession API negotiation
         ("campaign_scale", campaign_scale_bench),  # 50k-job engine scaling
         ("fault_tolerance", fault_tolerance_bench),  # checkpoint resume + preemption
+        ("chaos", chaos_bench),            # node failure domain + self-healing
         ("obs", obs_bench),                # tracing overhead gate
         ("serving", serving_bench),        # pool-backed serving + autoscaler
         ("kernels", kernels_bench),

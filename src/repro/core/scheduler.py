@@ -152,6 +152,16 @@ class Scheduler:
         self._free_bw_heap = [(b, nid) for nid, b in self._node_bw.items()]
         heapq.heapify(self._free_cap_heap)
         heapq.heapify(self._free_bw_heap)
+        # -- failure domain (chaos engine) ------------------------------------
+        # dead nodes are *parked*: a free node moves straight into
+        # ``_down_storage``; a node inside a live allocation is flagged in
+        # ``_down_pending`` and parked by ``release`` instead of freed. Both
+        # dicts are empty in chaos-off campaigns, and ``release`` only takes
+        # the slow path while ``_down_pending`` is non-empty — so the hot
+        # path is one falsy check and replay stays bit-for-bit.
+        self._down_storage: dict = {}
+        self._down_pending: set = set()
+        self._total_storage_cap = sum(self._node_cap.values())
         # weakest node over the whole inventory (the assume_empty candidates)
         if cluster.storage_nodes:
             self._empty_weakest_cap = min(
@@ -205,6 +215,71 @@ class Scheduler:
 
     def free_counts(self) -> tuple[int, int]:
         return len(self._free_compute), len(self._free_storage)
+
+    # -- failure domain (chaos engine) ---------------------------------------
+    @property
+    def down_storage_nodes(self) -> frozenset:
+        """Ids of storage nodes currently marked down (parked free nodes
+        plus dead nodes still inside live allocations)."""
+        return frozenset(self._down_storage) | frozenset(self._down_pending)
+
+    @property
+    def healthy_capacity_fraction(self) -> float:
+        """Fraction of nominal storage capacity on healthy nodes — the
+        availability gauge chaos campaigns chart. 1.0 with no storage."""
+        total = self._total_storage_cap
+        if not total:
+            return 1.0
+        down = sum(self._node_cap[nid] for nid in self._down_storage)
+        down += sum(self._node_cap[nid] for nid in self._down_pending)
+        return 1.0 - down / total
+
+    def mark_node_down(self, node_id: str) -> bool:
+        """Take a storage node out of service.
+
+        A free node leaves the free pool immediately; a node held by a live
+        allocation is flagged and parked when that allocation releases (the
+        blast-radius handling upstream decides what happens to the holder).
+        Returns True when the node was free. Idempotent for an already-down
+        node; raises :class:`AllocationError` for unknown node ids.
+        """
+        if node_id in self._down_storage or node_id in self._down_pending:
+            return node_id in self._down_storage
+        if node_id not in self._node_cap:
+            raise AllocationError(f"unknown storage node {node_id!r}")
+        node = self._free_storage.pop(node_id, None)
+        if node is not None:
+            # node death is rare: the O(M) list fix-up is fine, and keeps
+            # the one-entry-per-free-node id-heap invariant _grant pops by
+            self._storage_ids.remove(node_id)
+            heapq.heapify(self._storage_ids)
+            self._down_storage[node_id] = node
+            self.epoch += 1
+            return True
+        self._down_pending.add(node_id)
+        self.epoch += 1
+        return False
+
+    def mark_node_up(self, node_id: str) -> bool:
+        """Return a repaired storage node to service.
+
+        A parked node rejoins the free pool; a dead-flagged node still held
+        by a live allocation is simply unflagged (it frees normally on
+        release). Returns True when the node rejoined the free pool now.
+        Idempotent for a node that is not down.
+        """
+        node = self._down_storage.pop(node_id, None)
+        if node is not None:
+            self._free_storage[node_id] = node
+            heapq.heappush(self._storage_ids, node_id)
+            heapq.heappush(self._free_cap_heap, (self._node_cap[node_id], node_id))
+            heapq.heappush(self._free_bw_heap, (self._node_bw[node_id], node_id))
+            self.epoch += 1
+            return True
+        if node_id in self._down_pending:
+            self._down_pending.discard(node_id)
+            self.epoch += 1
+        return False
 
     # -- sizing (paper §V trade-off) ----------------------------------------
     def resolve_storage_nodes(
@@ -422,8 +497,14 @@ class Scheduler:
         for n in alloc.compute_nodes:
             self._free_compute[n.node_id] = n
             heapq.heappush(self._compute_ids, n.node_id)
+        pending = self._down_pending
         for n in alloc.storage_nodes:
             nid = n.node_id
+            if pending and nid in pending:
+                # died while allocated: park instead of freeing
+                pending.discard(nid)
+                self._down_storage[nid] = n
+                continue
             self._free_storage[nid] = n
             heapq.heappush(self._storage_ids, nid)
             heapq.heappush(self._free_cap_heap, (self._node_cap[nid], nid))

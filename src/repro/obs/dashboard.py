@@ -234,13 +234,32 @@ def _section_slos(slo) -> str:
     )
 
 
-def _section_alerts(engine, t0: float, t1: float) -> str:
-    if engine is None or not engine.rules:
+def _node_outages(events, t_end: float):
+    """Pair ``node_down``/``node_repair`` trace events into per-node outage
+    windows; an unrepaired node's window runs to the end of the trace."""
+    open_: dict[str, float] = {}
+    out = []
+    for kind, t, _label, args in events:
+        if kind == "node_down":
+            open_.setdefault(args["node_id"], t)
+        elif kind == "node_repair":
+            t_down = open_.pop(args["node_id"], None)
+            if t_down is not None:
+                out.append((args["node_id"], t_down, t))
+    for nid, t_down in open_.items():
+        out.append((nid, t_down, max(t_end, t_down)))
+    out.sort(key=lambda o: (o[1], o[0]))
+    return out
+
+
+def _section_alerts(engine, t0: float, t1: float, outages=()) -> str:
+    rules = list(engine.rules) if engine is not None else []
+    if not rules and not outages:
         return '<p class="none">no alert rules registered</p>'
     span = max(t1 - t0, 1e-9)
     w, row_h, label_w = 720.0, 22.0, 170.0
     rows, marks = [], []
-    for i, rule in enumerate(engine.rules):
+    for i, rule in enumerate(rules):
         y = i * row_h
         sev = _SEV_STATUS.get(rule.severity, "warning")
         rows.append(
@@ -264,12 +283,37 @@ def _section_alerts(engine, t0: float, t1: float) -> str:
                 f"[{_esc(rule.severity)}] fired {_fmt_s(inc.t_fired)} "
                 f"({state})</title></rect>"
             )
-    h = len(engine.rules) * row_h + 4
-    summary = (
-        f"{len(engine.incidents)} incident(s), "
-        f"{engine.pending_cancelled} flap(s) suppressed by hysteresis, "
-        f"{engine.evaluations} evaluations on the virtual clock"
-    )
+    if outages:
+        y = len(rows) * row_h
+        rows.append(
+            f'<text x="0" y="{y + 15:.1f}" font-size="12" '
+            f'fill="var(--ink-2)">node outages</text>'
+        )
+        marks.append(
+            f'<line x1="{label_w}" y1="{y + 11:.1f}" x2="{w}" '
+            f'y2="{y + 11:.1f}" stroke="var(--grid)" stroke-width="1"/>'
+        )
+        for nid, t_down, t_up in outages:
+            a = label_w + (t_down - t0) / span * (w - label_w)
+            b = label_w + (t_up - t0) / span * (w - label_w)
+            marks.append(
+                f'<rect x="{a:.1f}" y="{y + 5:.1f}" '
+                f'width="{max(3.0, b - a):.1f}" height="12" rx="3" '
+                f'fill="{_STATUS["critical"]}" stroke="var(--surface)" '
+                f'stroke-width="2"><title>{_esc(nid)} down '
+                f"{_fmt_s(t_down)} &#8594; {_fmt_s(t_up)}</title></rect>"
+            )
+    h = len(rows) * row_h + 4
+    parts = []
+    if engine is not None:
+        parts.append(
+            f"{len(engine.incidents)} incident(s), "
+            f"{engine.pending_cancelled} flap(s) suppressed by hysteresis, "
+            f"{engine.evaluations} evaluations on the virtual clock"
+        )
+    if outages:
+        parts.append(f"{len(outages)} storage-node outage window(s)")
+    summary = "; ".join(parts)
     legend = "".join(
         f'<span><span class="sw" style="background:{_STATUS[s]}"></span>'
         f"{lbl}</span>"
@@ -393,6 +437,9 @@ def build_dashboard(
     trace._materialize()
     cp = critical_path(trace)
     t0, t1 = trace.t_range() if trace.spans else (0.0, 0.0)
+    outages = _node_outages(trace.events, t1)
+    if outages:
+        t1 = max(t1, max(o[2] for o in outages))
 
     n_jobs = len(trace.spans)
     n_events = len(trace.events)
@@ -421,7 +468,7 @@ def build_dashboard(
         f"<h2>Campaign doctor</h2>\n{_section_advisories(advisories)}\n"
         f"<h2>Critical path</h2>\n{_section_critical_path(cp)}\n"
         f"<h2>SLOs &amp; error budgets</h2>\n{_section_slos(slo)}\n"
-        f"<h2>Alert timeline</h2>\n{_section_alerts(alerts, t0, t1)}\n"
+        f"<h2>Alert timeline</h2>\n{_section_alerts(alerts, t0, t1, outages)}\n"
         f"<h2>Metric series</h2>\n{_section_series(metrics)}\n"
         "</body></html>\n"
     )

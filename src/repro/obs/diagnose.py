@@ -21,6 +21,8 @@ The checks (each fires only when its evidence clears a threshold):
   over: the pool is too small for the working set.
 * **fault_churn** — requeued faults are eating the campaign; checkpoints
   bound the replay cost.
+* **node_churn** — storage nodes died mid-campaign: how many attempts ran
+  degraded or refaulted, and whether pools healed by backfill or repair.
 * **negotiation_pressure** — specs failing negotiation outright, with the
   per-backend rejection reasons histogrammed.
 * **slo_breach** — any SLO with its error budget overspent (when an
@@ -308,6 +310,48 @@ def _check_fault_churn(trace, n_jobs) -> Optional[Advisory]:
     )
 
 
+def _check_node_churn(trace, n_jobs) -> Optional[Advisory]:
+    """Storage nodes dying mid-campaign: count the losses and what they
+    cost — attempts degraded or faulted, pool rebuilds paid. Fires on any
+    node loss at all; severity scales with the per-job damage."""
+    downs = sum(1 for e in trace.events if e[0] == "node_down")
+    if downs == 0:
+        return None
+    repairs = sum(1 for e in trace.events if e[0] == "node_repair")
+    degraded = sum(1 for e in trace.events if e[0] == "degraded")
+    rebuilds = {"repair": 0, "backfill": 0}
+    for kind, _t, _l, args in trace.events:
+        if kind == "rebuild":
+            via = args.get("via", "repair")
+            rebuilds[via] = rebuilds.get(via, 0) + 1
+    faults = sum(
+        1 for k, _t, _l, a in trace.events if k == "fault" and a.get("requeued")
+    )
+    sev = min(1.0, 0.3 + 0.5 * (degraded + faults) / max(1, n_jobs))
+    return Advisory(
+        code="node_churn",
+        severity=sev,
+        summary=(
+            f"node churn: {downs} storage-node failure(s) "
+            f"({repairs} repaired, {rebuilds['backfill']} pool backfill(s), "
+            f"{rebuilds['repair']} re-silver(s)); {degraded} attempt(s) ran "
+            f"DEGRADED and {faults} requeued on faults"
+        ),
+        recommendation=(
+            "mirror critical specs (placement.mirror with a redundancy-"
+            "capable backend) and arm pool self-healing with a RetryPolicy "
+            "so capacity backfills instead of waiting out the MTTR"
+        ),
+        evidence={
+            "node_downs": downs,
+            "node_repairs": repairs,
+            "degraded_attempts": degraded,
+            "rebuilds": rebuilds,
+            "requeued_faults": faults,
+        },
+    )
+
+
 def _check_negotiation_pressure(trace) -> Optional[Advisory]:
     failed = 0
     reasons: dict[str, int] = {}
@@ -450,6 +494,7 @@ def diagnose(trace, *, metrics=None, report=None, slos=None) -> tuple[Advisory, 
         _check_provisioning_bound(cp),
         _check_head_blocking(cp, trace),
         _check_fault_churn(trace, n_jobs),
+        _check_node_churn(trace, n_jobs),
         _check_negotiation_pressure(trace),
     ]
     advisories = [a for a in found if a is not None]

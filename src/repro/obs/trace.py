@@ -99,6 +99,12 @@ class NullRecorder:
     def lease_released(self, lease, t) -> None: ...
     def eviction(self, pool_id, dataset_name, nbytes) -> None: ...
 
+    # chaos (node failure domain)
+    def node_down(self, node_id, t) -> None: ...
+    def node_repair(self, node_id, t) -> None: ...
+    def degraded(self, job, node_id, t) -> None: ...
+    def rebuild(self, pool, node_id, *, via, t) -> None: ...
+
     # scheduler
     def sched_grant(self, allocation) -> None: ...
     def sched_release(self, allocation) -> None: ...
@@ -231,6 +237,9 @@ class TraceRecorder:
         hub.add_probe("running_jobs", lambda: len(orch._running))
         hub.add_probe("jobs_done", lambda: counters.n_done)
         hub.add_probe("jobs_failed", lambda: counters.n_failed)
+        # healthy fraction of storage capacity — 1.0 the whole campaign
+        # unless a chaos model is killing nodes
+        hub.add_probe("availability", lambda: sched.healthy_capacity_fraction)
 
         def pool_occupancy() -> float:
             pm = orch.provision.pool_manager
@@ -383,6 +392,8 @@ class TraceRecorder:
 
     def fault(self, job, phase, requeued) -> None:
         t = self._clock()
+        if requeued:
+            self.count("fault.requeued")
         self.events.append(
             (
                 "fault",
@@ -531,6 +542,37 @@ class TraceRecorder:
                 t,
                 dataset_name,
                 {"pool_id": pool_id, "nbytes": nbytes},
+            )
+        )
+
+    # -- chaos (node failure domain) -------------------------------------------
+    def node_down(self, node_id, t) -> None:
+        self.count("chaos.node_downs")
+        self.events.append(("node_down", t, node_id, {"node_id": node_id}))
+
+    def node_repair(self, node_id, t) -> None:
+        self.count("chaos.node_repairs")
+        self.events.append(("node_repair", t, node_id, {"node_id": node_id}))
+
+    def degraded(self, job, node_id, t) -> None:
+        self.count("chaos.degraded")
+        self.events.append(
+            (
+                "degraded",
+                t,
+                job.spec.name,
+                {"job_id": job.job_id, "node_id": node_id, "attempt": job.attempt},
+            )
+        )
+
+    def rebuild(self, pool, node_id, *, via, t) -> None:
+        self.count("chaos.rebuilds")
+        self.events.append(
+            (
+                "rebuild",
+                t,
+                f"pool {pool.pool_id}",
+                {"pool_id": pool.pool_id, "node_id": node_id, "via": via},
             )
         )
 

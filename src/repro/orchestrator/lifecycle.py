@@ -62,6 +62,8 @@ import itertools
 import math
 from typing import Optional
 
+from ..chaos.blast import resolve_blast_radius
+from ..chaos.retry import drive_retries
 from ..core.perfmodel import FSDeployment, dom_lustre
 from ..core.scheduler import Allocation, AllocationError, JobRequest, StorageRequest
 from ..obs.trace import NULL_RECORDER
@@ -296,6 +298,10 @@ class JobRecord:
     #: on them skips stage-in (the data-plane analogue of ``warm_nodes``)
     staged_nodes: frozenset = frozenset()
     run_token: int = 0                # invalidates in-flight run events
+    #: invalidates in-flight provision/stage/teardown events — bumped on
+    #: every release and on a mid-phase re-price (node-loss degradation)
+    phase_token: int = 0
+    _phase_end: float = 0.0           # scheduled end of the in-flight stage phase
     _run_base: float = 0.0            # progress committed at segment start
     _run_t0: float = 0.0              # virtual time current segment began
     _run_seg_s: float = 0.0           # progress length of current segment
@@ -461,6 +467,11 @@ class Orchestrator:
         # subsystem here (bind is read-only: it never schedules events or
         # touches job/session state, so traced campaigns replay
         # bit-identically — see tests/test_obs.py)
+        # chaos engine: armed by enable_chaos(); chaos-off campaigns keep
+        # these falsy and schedule zero extra events
+        self._chaos_model = None
+        self._chaos_retry = None
+        self._down_nodes: set[str] = set()
         self.recorder = recorder if recorder is not None else NULL_RECORDER
         if self.recorder.enabled:
             self.recorder.bind(self)
@@ -585,7 +596,10 @@ class Orchestrator:
             try:
                 offer = self.provision.negotiate(job.sspec)
             except NegotiationError:
-                feasible = False
+                # an arrival mid-outage queues anyway: the verdict may be
+                # an artifact of a healing pool, and the post-repair
+                # dispatch re-derives it from whole-cluster state
+                feasible = bool(self._down_nodes)
             else:
                 if job.sspec.lifetime is not LifetimeClass.POOLED:
                     job.offer = offer   # static over the campaign: reuse at dispatch
@@ -649,6 +663,11 @@ class Orchestrator:
                 else self._reserved_try_open(job, reservation)
             )
         except NegotiationError:
+            if self._down_nodes:
+                # mid-outage the conclusion is not trustworthy: the pool
+                # that could hold this working set may be healing. Wait —
+                # the repair/backfill re-dispatch will probe again.
+                return self._REFUSED
             self._dq.remove(job)
             job.failure_phase = "infeasible"
             self._transition(job, JobState.FAILED)
@@ -846,6 +865,13 @@ class Orchestrator:
                     else:
                         session = self._try_open(job)
                 except NegotiationError:
+                    if self._down_nodes:
+                        # mid-outage infeasibility is not trustworthy (the
+                        # capable pool may be healing): keep the job queued
+                        # and let the repair/backfill re-dispatch re-probe
+                        if self.policy.head_blocking:
+                            break
+                        continue
                     # what was feasible at arrival no longer is (e.g. every
                     # pool that could hold the working set was retired):
                     # fail fast instead of stranding the job in the queue
@@ -982,8 +1008,10 @@ class Orchestrator:
             rec.grant(job, session)
         self._transition(job, JobState.PROVISIONING)
         eng = self.engine
+        token = job.phase_token
         eng.at(
-            eng.now + session.provision_time_s, lambda: self._provision_done(job)
+            eng.now + session.provision_time_s,
+            lambda: self._provision_done(job, token),
         )
 
     # -- phase machinery -----------------------------------------------------
@@ -993,7 +1021,9 @@ class Orchestrator:
     def _trip(self, job: JobRecord, phase: str) -> bool:
         return not self._faults_passive and self.faults.trip(job.spec.name, phase)
 
-    def _provision_done(self, job: JobRecord) -> None:
+    def _provision_done(self, job: JobRecord, token: int = 0) -> None:
+        if token != job.phase_token:
+            return                       # attempt released mid-phase (chaos)
         if self._trip(job, "provision"):
             self._fail_attempt(job, "provision")
             return
@@ -1004,9 +1034,13 @@ class Orchestrator:
             )
         self._transition(job, JobState.STAGING_IN)
         eng = self.engine
-        eng.at(eng.now + session.stage_in_time_s, lambda: self._stage_in_done(job))
+        end = eng.now + session.stage_in_time_s
+        job._phase_end = end
+        eng.at(end, lambda: self._stage_in_done(job, token))
 
-    def _stage_in_done(self, job: JobRecord) -> None:
+    def _stage_in_done(self, job: JobRecord, token: int = 0) -> None:
+        if token != job.phase_token:
+            return                       # attempt released or re-priced mid-stage
         if self._trip(job, "stage_in"):
             self._fail_attempt(job, "stage_in")
             return
@@ -1124,9 +1158,14 @@ class Orchestrator:
         session = job.session
         self._transition(job, JobState.STAGING_OUT)
         eng = self.engine
-        eng.at(eng.now + session.stage_out_time_s, lambda: self._stage_out_done(job))
+        ptoken = job.phase_token
+        end = eng.now + session.stage_out_time_s
+        job._phase_end = end
+        eng.at(end, lambda: self._stage_out_done(job, ptoken))
 
-    def _stage_out_done(self, job: JobRecord) -> None:
+    def _stage_out_done(self, job: JobRecord, token: int = 0) -> None:
+        if token != job.phase_token:
+            return                       # attempt released or re-priced mid-stage
         if self._trip(job, "stage_out"):
             self._fail_attempt(job, "stage_out")
             return
@@ -1137,14 +1176,16 @@ class Orchestrator:
         # manager outlives the job); only job-scoped deploys pay teardown
         self._transition(job, JobState.TEARDOWN)
         eng = self.engine
-        eng.at(eng.now + session.teardown_time_s, lambda: self._teardown_done(job))
+        eng.at(eng.now + session.teardown_time_s, lambda: self._teardown_done(job, token))
 
-    def _teardown_done(self, job: JobRecord) -> None:
+    def _teardown_done(self, job: JobRecord, token: int = 0) -> None:
+        if token != job.phase_token:
+            return                       # attempt released mid-teardown (chaos)
         self._release(job)
         self._transition(job, JobState.DONE)
         self._dispatch()
 
-    def _fail_attempt(self, job: JobRecord, phase: str) -> None:
+    def _fail_attempt(self, job: JobRecord, phase: str, *, dispatch: bool = True) -> None:
         # a job with committed checkpoint steps requeues as a *resume*
         # attempt: committed_run_s survives the release, so the next
         # attempt pays only the remainder (and its restore traffic) — see
@@ -1162,7 +1203,10 @@ class Orchestrator:
             self.counters.retries += 1
             self._transition(job, JobState.QUEUED)
             self._enqueue(job)
-        self._dispatch()
+        if dispatch:
+            # a node-down handler fails many attempts in one event and
+            # dispatches once at the end, after the pools took their loss
+            self._dispatch()
 
     def _release(self, job: JobRecord) -> None:
         session = job.session
@@ -1172,6 +1216,8 @@ class Orchestrator:
         if rec.enabled:
             rec.release(job)
         job.run_token += 1           # any in-flight run event is now stale
+        job.phase_token += 1         # ...and any in-flight phase event too
+        job._preempt_pending = False # a draining final write died with the attempt
         if job.allocation is not None:
             t0 = job.alloc_started if job.alloc_started is not None else self.engine.now
             job.storage_intervals.append(
@@ -1267,12 +1313,17 @@ class Orchestrator:
             cost = self._checkpoint_cost(victim)
             if cost > 0:
                 victim._preempt_pending = True
-                self.engine.at(now + cost, lambda: self._preempt_release(victim))
+                token = victim.run_token
+                self.engine.at(
+                    now + cost, lambda: self._preempt_release(victim, token)
+                )
                 return True
         self._preempt_release(victim)
         return True
 
-    def _preempt_release(self, victim: JobRecord) -> None:
+    def _preempt_release(self, victim: JobRecord, token: Optional[int] = None) -> None:
+        if token is not None and token != victim.run_token:
+            return      # the attempt died (chaos) while draining its final write
         victim._preempt_pending = False
         victim.preemptions += 1
         self.counters.preemptions += 1
@@ -1322,6 +1373,166 @@ class Orchestrator:
         for victim in victims:
             preempted |= self.preempt(victim)
         return preempted
+
+    # -- chaos (storage-node failure domain) ----------------------------------
+    #: FaultInjector phase name for each interruptible job state — the
+    #: synthetic fault a node loss injects lands at the phase the attempt
+    #: was actually in (ALLOCATED is transient inside _start; TEARDOWN has
+    #: nothing left to lose — outputs are already staged out).
+    _PHASE_OF_STATE = {
+        JobState.PROVISIONING: "provision",
+        JobState.STAGING_IN: "stage_in",
+        JobState.RUNNING: "run",
+        JobState.STAGING_OUT: "stage_out",
+    }
+
+    def enable_chaos(self, model, *, retry=None) -> None:
+        """Arm a :class:`~repro.chaos.NodeFaultModel` over this campaign.
+
+        Every failure/repair event is bulk-scheduled now (the model is
+        finite by construction), so chaos campaigns replay bit-identically
+        and a model that can emit nothing — or ``None`` — schedules
+        nothing: chaos-off campaigns run the exact pre-chaos event stream.
+        ``retry`` (a :class:`~repro.chaos.RetryPolicy`) additionally arms
+        pool self-healing: affected pools backfill from free nodes on the
+        policy's backoff cadence.
+        """
+        if model is None or not model.any_faults:
+            return
+        unknown = set(model.node_ids) - {
+            n.node_id for n in self.scheduler.cluster.storage_nodes
+        }
+        if unknown:
+            raise ValueError(
+                f"fault model covers unknown storage nodes: {sorted(unknown)}"
+            )
+        self._chaos_model = model
+        self._chaos_retry = retry
+        self.engine.at_many(
+            (
+                ev.t,
+                (
+                    (lambda nid: lambda: self._node_down(nid))(ev.node_id)
+                    if ev.kind == "down"
+                    else (lambda nid: lambda: self._node_repair(nid))(ev.node_id)
+                ),
+            )
+            for ev in model.events()
+        )
+
+    def _node_down(self, node_id: str) -> None:
+        """One storage node died. Park it in the scheduler, revoke the
+        locality credits that named it (warm FS trees and staged inputs on
+        other nodes survive), then walk the blast radius: mirrored direct
+        deployments degrade in place (half bandwidth, in-flight phase
+        re-priced), everything else takes a synthetic fault through the
+        ordinary checkpoint-resume requeue path — leaseholders before their
+        pools, so residency invalidation never sees a pin."""
+        if node_id in self._down_nodes:
+            return                       # overlapping outage windows: no-op
+        self._down_nodes.add(node_id)
+        now = self.engine.now
+        self.scheduler.mark_node_down(node_id)
+        rec = self.recorder
+        if rec.enabled:
+            rec.node_down(node_id, now)
+        pm = self.provision.pool_manager
+        blast = resolve_blast_radius(
+            node_id,
+            sessions=[j.session for j in self.jobs if j.session is not None],
+            pools=pm.live_pools if pm is not None else (),
+        )
+        hit = {id(s) for s in blast.sessions}
+        for job in self.jobs:
+            if job.done:
+                continue
+            if node_id in job.warm_nodes:
+                job.warm_nodes = job.warm_nodes - {node_id}
+            if node_id in job.staged_nodes:
+                job.staged_nodes = job.staged_nodes - {node_id}
+            session = job.session
+            if session is None or id(session) not in hit:
+                continue
+            if session.lease is None and session.can_degrade:
+                self._degrade_job(job, node_id)
+            else:
+                phase = self._PHASE_OF_STATE.get(job.state)
+                if phase is not None:
+                    self._fail_attempt(job, phase, dispatch=False)
+        if pm is not None:
+            for pool in blast.pools:
+                pm.on_node_down(pool, node_id, now)
+                if self._chaos_retry is not None:
+                    drive_retries(
+                        self.engine,
+                        self._chaos_retry,
+                        f"pool{pool.pool_id}:{node_id}",
+                        lambda p=pool: pm.backfill(p, self.engine.now),
+                    )
+        self._dispatch()
+
+    def _node_repair(self, node_id: str) -> None:
+        """The node came back: un-park it (or un-flag it, if a live
+        allocation still holds it), re-silver pools that were waiting on
+        it, and re-dispatch — the freed capacity may admit queued jobs."""
+        if node_id not in self._down_nodes:
+            return
+        self._down_nodes.discard(node_id)
+        now = self.engine.now
+        self.scheduler.mark_node_up(node_id)
+        pm = self.provision.pool_manager
+        if pm is not None:
+            pm.on_node_repair(node_id, now)
+        rec = self.recorder
+        if rec.enabled:
+            rec.node_repair(node_id, now)
+        self._dispatch()
+
+    def _degrade_job(self, job: JobRecord, node_id: str) -> None:
+        """A mirrored deployment lost one replica: the attempt survives
+        DEGRADED at half effective bandwidth. Phases not yet scheduled
+        re-price through the session's degraded multiplier; the in-flight
+        one re-prices here — its *remaining* staging work doubles."""
+        session = job.session
+        session.degrade()
+        eng = self.engine
+        now = eng.now
+        rec = self.recorder
+        if rec.enabled:
+            rec.degraded(job, node_id, now)
+        state = job.state
+        if state is JobState.STAGING_IN or state is JobState.STAGING_OUT:
+            remaining = max(0.0, job._phase_end - now) * 2.0
+            job.phase_token += 1         # the full-bandwidth end event is stale
+            token = job.phase_token
+            end = now + remaining
+            job._phase_end = end
+            cb = (
+                self._stage_in_done
+                if state is JobState.STAGING_IN
+                else self._stage_out_done
+            )
+            eng.at(end, lambda: cb(job, token))
+        elif state is JobState.RUNNING:
+            self._reprice_run_segment(job)
+
+    def _reprice_run_segment(self, job: JobRecord) -> None:
+        """Degraded mid-RUN: compute progress is unharmed, but a pending
+        checkpoint commit priced its write at full bandwidth. Re-issue the
+        commit at the degraded cost (the whole write re-prices — a
+        conservative model for a mid-write loss); the final run event
+        carries no storage traffic and needs nothing."""
+        spec = job.spec
+        every = spec.checkpoint_every_s
+        if every is None or job._preempt_pending:
+            return                       # no write pending / final drain stands
+        if max(0.0, spec.run_time_s - job._run_base) <= every:
+            return                       # pending event is the bare _run_done
+        eng = self.engine
+        job.run_token += 1
+        token = job.run_token
+        t = job._run_t0 + every + self._checkpoint_cost(job)
+        eng.at(max(t, eng.now), lambda: self._checkpoint_commit(job, token))
 
     # -- monitoring -----------------------------------------------------------
     def heartbeat_monitor(

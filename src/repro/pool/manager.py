@@ -221,6 +221,9 @@ class PoolManager:
     def _teardown(self, pool: StoragePool, now: float) -> None:
         assert pool.n_leases == 0, "teardown with live leases"
         self.scheduler.release(pool.allocation)
+        for extra in pool.extra_allocations:
+            self.scheduler.release(extra)
+        pool.extra_allocations.clear()
         if pool.base_dir is not None:
             self.provisioner.release_tree(pool.base_dir)
             self.provisioner.forget_tree(pool.base_dir)
@@ -234,6 +237,127 @@ class PoolManager:
         rec = self._recorder
         if rec.enabled:
             rec.pool_torn_down(pool, now)
+
+    # -- failure domain (chaos engine) -------------------------------------------
+    def affected_pools(self, node_id: str) -> tuple[StoragePool, ...]:
+        """Live pools whose backing nodes include ``node_id``."""
+        return tuple(
+            p for p in self.live_pools if node_id in p.storage_node_ids
+        )
+
+    def on_node_down(
+        self, pool: StoragePool, node_id: str, now: Optional[float] = None
+    ) -> None:
+        """Absorb the loss of one backing node.
+
+        Striping puts every dataset on every node, so the pool's residency
+        is invalidated wholesale: every unpinned catalog entry drops (the
+        next reference is a miss that re-stages — evicted data is never
+        served stale) and its ledger bytes are uncharged. Callers fail the
+        pool's leaseholders *first* (releasing their leases unpins), so by
+        the time this runs nothing should still be pinned. Capacity shrinks
+        by what the *surviving* backing hardware can no longer cover — a
+        ledger quota sitting below hardware may lose nothing at all; a pool
+        that loses its last backing node is retired outright. Healing —
+        :meth:`backfill` on a retry policy, or the node's own repair via
+        :meth:`on_node_repair` — restores exactly the share deducted here.
+        """
+        now = self._now(now)
+        if node_id in pool.dead_node_capacity or node_id in pool.replaced_node_ids:
+            return
+        node = next(
+            (n for n in pool.allocation.storage_nodes if n.node_id == node_id), None
+        )
+        if node is None:
+            # a backfill spare died: drop its allocation back to the
+            # scheduler (which parks the dead node) and shed its share
+            for extra in list(pool.extra_allocations):
+                if any(n.node_id == node_id for n in extra.storage_nodes):
+                    share = self._capacity_loss(pool, node_id)
+                    pool.extra_allocations.remove(extra)
+                    self._invalidate_residency(pool)
+                    pool.capacity_bytes -= share
+                    self.scheduler.release(extra)
+                    break
+            self._epoch += 1
+            return
+        self._invalidate_residency(pool)
+        share = self._capacity_loss(pool, node_id)
+        pool.capacity_bytes -= share
+        pool.dead_node_capacity[node_id] = share
+        self._epoch += 1
+        if not pool.storage_node_ids and pool.state is PoolState.ACTIVE:
+            # nothing left to serve from: stop granting; the last lease
+            # drain (or this call, if none are live) tears it down
+            self.retire(pool, now)
+
+    def _capacity_loss(self, pool: StoragePool, node_id: str) -> float:
+        """Ledger bytes the pool loses with ``node_id`` gone: only what the
+        surviving backing hardware cannot absorb (the ledger quota may sit
+        well below hardware, in which case a node loss costs nothing)."""
+        cap = self.scheduler.policy.node_capacity_bytes
+        alive_hw = sum(
+            cap(n)
+            for n in pool.allocation.storage_nodes
+            if n.node_id != node_id
+            and n.node_id not in pool.dead_node_capacity
+            and n.node_id not in pool.replaced_node_ids
+        )
+        alive_hw += sum(
+            cap(n)
+            for extra in pool.extra_allocations
+            for n in extra.storage_nodes
+            if n.node_id != node_id
+        )
+        return pool.capacity_bytes - min(pool.capacity_bytes, alive_hw)
+
+    def _invalidate_residency(self, pool: StoragePool) -> None:
+        """Drop every unpinned catalog entry (and its ledger charge)."""
+        for r in self.catalog.entries(pool.pool_id):
+            if r.pins == 0:
+                self.catalog.invalidate(pool.pool_id, r.dataset.name)
+                pool.uncharge_dataset(r.dataset.name)
+
+    def on_node_repair(self, node_id: str, now: Optional[float] = None) -> None:
+        """A dead node came back: pools still waiting on it re-silver it
+        (capacity restored); pools that already backfilled past it keep
+        their spare and leave the repaired chassis idle in the allocation."""
+        now = self._now(now)
+        for pool in self.live_pools:
+            share = pool.dead_node_capacity.pop(node_id, None)
+            if share is not None:
+                pool.capacity_bytes += share
+                self._epoch += 1
+                rec = self._recorder
+                if rec.enabled:
+                    rec.rebuild(pool, node_id, via="repair", t=now)
+
+    def backfill(self, pool: StoragePool, now: Optional[float] = None) -> bool:
+        """One self-heal attempt: claim a free storage node to replace the
+        longest-dead unreplaced node. Returns True when a spare was granted
+        (capacity restored); False when the cluster has no free node right
+        now — callers retry on a :class:`~repro.chaos.RetryPolicy` cadence.
+        """
+        now = self._now(now)
+        if not pool.dead_node_capacity or pool.state is not PoolState.ACTIVE:
+            return False
+        dead_id = min(pool.dead_node_capacity)
+        alloc = self.scheduler.try_submit(
+            JobRequest(
+                f"{pool.name}-heal-{dead_id}", 0, storage=StorageRequest(nodes=1)
+            )
+        )
+        if alloc is None:
+            return False
+        share = pool.dead_node_capacity.pop(dead_id)
+        pool.replaced_node_ids.add(dead_id)
+        pool.extra_allocations.append(alloc)
+        pool.capacity_bytes += share
+        self._epoch += 1
+        rec = self._recorder
+        if rec.enabled:
+            rec.rebuild(pool, dead_id, via="backfill", t=now)
+        return True
 
     # -- introspection -----------------------------------------------------------
     @property

@@ -89,6 +89,15 @@ class StoragePool:
     leases: dict = dataclasses.field(default_factory=dict)       # id -> Lease
     dataset_bytes: dict = dataclasses.field(default_factory=dict)  # name -> bytes
     scratch_bytes: float = 0.0
+    # -- failure domain (chaos engine) ----------------------------------------
+    #: dead original nodes awaiting heal: node_id -> capacity share deducted
+    #: when the node died (restored exactly on repair or replacement)
+    dead_node_capacity: dict = dataclasses.field(default_factory=dict)
+    #: original nodes replaced by a backfill node: still pinned by the
+    #: pool's allocation (released at teardown) but no longer backing it
+    replaced_node_ids: set = dataclasses.field(default_factory=set)
+    #: backfill allocations (one spare node each), released at teardown
+    extra_allocations: list = dataclasses.field(default_factory=list)
 
     def __post_init__(self) -> None:
         if self.capacity_bytes <= 0:
@@ -107,6 +116,9 @@ class StoragePool:
 
     @property
     def occupancy(self) -> float:
+        # a fully-degraded pool (every node dead, capacity 0) counts as full
+        if self.capacity_bytes <= 0:
+            return 1.0
         return self.used_bytes / self.capacity_bytes
 
     def charge_dataset(self, dataset: DatasetRef) -> None:
@@ -166,7 +178,22 @@ class StoragePool:
     # -- introspection ----------------------------------------------------------
     @property
     def storage_node_ids(self) -> frozenset:
-        return frozenset(n.node_id for n in self.allocation.storage_nodes)
+        """Ids of the nodes currently *backing* the pool: the original
+        allocation minus dead/replaced nodes, plus backfill spares."""
+        ids = {
+            n.node_id
+            for n in self.allocation.storage_nodes
+            if n.node_id not in self.dead_node_capacity
+            and n.node_id not in self.replaced_node_ids
+        }
+        for alloc in self.extra_allocations:
+            ids.update(n.node_id for n in alloc.storage_nodes)
+        return frozenset(ids)
+
+    @property
+    def degraded(self) -> bool:
+        """True while any original node is dead and unreplaced."""
+        return bool(self.dead_node_capacity)
 
     def check_invariants(self) -> None:
         """Ledger sanity; tests call this after every operation."""

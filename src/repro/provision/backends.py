@@ -53,6 +53,10 @@ class BackendCapabilities:
     dedicated_nodes: bool = False            # grants allocate storage nodes
     persistent_data: bool = False            # data survives the session
     zero_deploy: bool = False                # no provisioning latency
+    #: redundancy classes the manager can deploy: "none" always; "mirror"
+    #: (BeeGFS buddy groups / KV replication) lets a multi-node deployment
+    #: survive a single storage-node loss in DEGRADED mode instead of dying
+    redundancy: tuple[str, ...] = ("none",)
 
 
 class DataManagerBackend(abc.ABC):
@@ -122,6 +126,17 @@ class DataManagerBackend(abc.ABC):
         floor = spec.qos.min_bandwidth
         headroom = min(bandwidth / floor, 4.0) if floor else bandwidth / 1e9
         return headroom - 0.1 * provision_s - 0.01 * n_nodes
+
+
+def _effective_redundancy(
+    spec: StorageSpec, caps: BackendCapabilities, n_nodes: int
+) -> str:
+    """The redundancy class a grant actually deploys with: "mirror" only
+    when the spec asked for it, the backend can do it, and there are at
+    least two nodes to mirror across — otherwise "none"."""
+    if spec.placement.mirror and "mirror" in caps.redundancy and n_nodes >= 2:
+        return "mirror"
+    return "none"
 
 
 def _resume_stage_in(
@@ -194,6 +209,7 @@ class EphemeralFSBackend(_NodeBackend):
         mirroring=True,
         dedicated_nodes=True,
         zero_deploy=False,
+        redundancy=("none", "mirror"),
     )
 
     def _check(self, spec, svc):
@@ -278,6 +294,7 @@ class EphemeralFSBackend(_NodeBackend):
             stage_in_bytes=stage_in,
             stage_out_bytes=spec.stage_out_bytes,
             saved_bytes=saved,
+            redundancy=_effective_redundancy(spec, self.capabilities, len(ids)),
         )
         if materialize:
             try:
@@ -479,6 +496,7 @@ class KVStoreBackend(_NodeBackend):
         lifetimes=frozenset({LifetimeClass.EPHEMERAL}),
         mirroring=True,          # replicate=True mirrors to the next node
         dedicated_nodes=True,
+        redundancy=("none", "mirror"),
     )
 
     def _check(self, spec, svc):
@@ -521,6 +539,7 @@ class KVStoreBackend(_NodeBackend):
             stage_in_bytes=stage_in,
             stage_out_bytes=spec.stage_out_bytes,
             saved_bytes=saved,
+            redundancy=_effective_redundancy(spec, self.capabilities, len(ids)),
         )
         if materialize:
             from ..core.kvstore import EphemeralKV

@@ -91,6 +91,14 @@ class StorageSession:
     deployment: Optional["Deployment"] = None    # materialized ephemeral FS
     kv: Optional["EphemeralKV"] = None           # materialized KV store
     state: SessionState = SessionState.OPEN
+    #: effective redundancy of the granted deployment: "mirror" when the
+    #: backend honors the spec's mirror hint (BeeGFS buddy groups), else
+    #: "none" — the chaos engine's survive-or-die switch on node loss
+    redundancy: str = "none"
+    #: True once a mirrored deployment lost a node: it keeps serving at
+    #: halved effective bandwidth (every modeled staging/checkpoint time
+    #: doubles) until the session ends — repairs re-silver offline
+    degraded: bool = False
 
     # -- introspection --------------------------------------------------------
     @property
@@ -112,6 +120,29 @@ class StorageSession:
     @property
     def released(self) -> bool:
         return self.state is SessionState.RELEASED
+
+    # -- failure domain (chaos engine) ----------------------------------------
+    @property
+    def can_degrade(self) -> bool:
+        """Would this session survive a single storage-node loss? Mirrored
+        deployments spanning >= 2 nodes degrade; everything else dies."""
+        return (
+            self.redundancy == "mirror"
+            and not self.degraded
+            and len(self.storage_nodes) >= 2
+        )
+
+    def degrade(self) -> None:
+        """Enter DEGRADED mode after a node loss: the surviving mirror half
+        serves every read/write, so effective bandwidth halves (modeled as
+        doubled staging/checkpoint times). A second loss is fatal — the
+        caller checks :attr:`can_degrade` first."""
+        self._check_open()
+        if not self.can_degrade:
+            raise SessionError(
+                f"session {self.spec.name!r} has no redundancy left to degrade"
+            )
+        self.degraded = True
 
     # -- modeled staging (virtual-clock engines) ------------------------------
     def _staging_time(
@@ -135,6 +166,11 @@ class StorageSession:
         if t is None:
             t = modeled_stage_time(nbytes, src, dst, self.spec.n_streams)
             cache[key] = t
+        # degraded mirror: the surviving half serves everything — halved
+        # effective bandwidth, applied *after* the cache so healthy sessions
+        # of the same shape keep sharing the memoized base time
+        if self.degraded:
+            return t * 2.0
         return t
 
     @property

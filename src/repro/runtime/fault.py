@@ -6,8 +6,11 @@ Pieces that run in this container (and are tested):
   * **Restart planning**: given surviving node counts, recompute the mesh
     shape (shrink the data axis, keep "model" intact — TP groups must stay
     whole), pick the checkpoint to restore;
-  * **Storage-failure handling**: EphemeralFS mirror mode + degraded-state
-    detection feeding re-provisioning decisions.
+  * **Storage-failure handling**: delivered by the chaos engine
+    (`repro.chaos`: `NodeFaultModel` failure domains, mirrored-session
+    degradation, pool self-healing on `RetryPolicy` backoff); this module
+    supplies the heartbeat/straggler/`revive` primitives its repair path
+    builds on.
 
 On a real cluster the heartbeats come from per-host agents; here they are
 driven by the training driver / tests.
@@ -74,8 +77,27 @@ class HeartbeatMonitor:
                 out.append(h.node_id)
         return out
 
-    def stragglers(self, *, z: float = 3.0, min_samples: int = 5) -> list[str]:
-        """Nodes whose median step time is a robust outlier vs the fleet."""
+    def revive(self, node_id: str, now: Optional[float] = None) -> None:
+        """Bring a repaired node back into the fleet (the chaos repair
+        path): fresh heartbeat stamp, stale step-time samples dropped — a
+        node returning from repair must not inherit its pre-failure
+        latencies into straggler detection."""
+        h = self.nodes[node_id]
+        h.alive = True
+        h.last_beat = now if now is not None else self._clock()
+        h.step_times.clear()
+
+    def stragglers(self, *, z: float = 3.0, min_samples: int = 5,
+                   now: Optional[float] = None) -> list[str]:
+        """Nodes whose median step time is a robust outlier vs the fleet.
+
+        Deadness is refreshed first so timed-out nodes are excluded from
+        both the fleet median and the candidate set: a node that stopped
+        beating but was never observed through :meth:`dead_nodes` must
+        neither drag the median nor be reported as merely "slow" when it
+        is in fact gone.
+        """
+        self.dead_nodes(now)
         meds = {
             n: float(np.median(h.step_times))
             for n, h in self.nodes.items()
@@ -180,7 +202,14 @@ class FaultInjector:
 
     def trip(self, job_name: str, phase: str) -> bool:
         """Does ``phase`` of ``job_name`` fail on this attempt?"""
-        p = getattr(self.spec, self._PHASE_FIELDS[phase])
+        try:
+            field = self._PHASE_FIELDS[phase]
+        except KeyError:
+            valid = ", ".join(sorted(self._PHASE_FIELDS))
+            raise ValueError(
+                f"unknown phase {phase!r}: valid phases are {valid}"
+            ) from None
+        p = getattr(self.spec, field)
         tripped = p > 0.0 and self._rng.random() < p
         if tripped:
             self.trips.append((job_name, phase))

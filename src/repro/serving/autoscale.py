@@ -122,6 +122,27 @@ class Autoscaler:
         factored out so hysteresis is unit-testable without an engine."""
         cfg = self.cfg
         rset = self._rset
+        if rset.n_live < cfg.min_replicas:
+            # involuntary scale-down (node loss killed replicas): restoring
+            # the floor is not a load decision, so it bypasses the
+            # up-cooldown — but still competes for cluster capacity
+            r = rset.scale_up(now, reason="floor-restore")
+            if r is not None:
+                self._last_up = now
+                self.scale_ups += 1
+                d = ScaleDecision(now, "up", r.name, "floor-restore", rset.n_live)
+            else:
+                self.denied_ups += 1
+                d = ScaleDecision(now, "hold", None,
+                                  "floor-restore denied: cluster busy", rset.n_live)
+            self.decisions.append(d)
+            rec = self.recorder
+            if rec.enabled and d.action != "hold":
+                rec.events.append((
+                    "autoscale", now, d.action,
+                    {"replica": d.replica, "reason": d.reason, "n_live": d.n_live},
+                ))
+            return d
         firing = self.alerts.state(cfg.rule) == _FIRING
         if firing:
             if (

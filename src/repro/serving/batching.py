@@ -115,6 +115,18 @@ class BatchEngine:
             self._free.sort(reverse=True)
         return done
 
+    # -- failure domain (chaos engine) ----------------------------------------
+    def abort_all(self) -> List[Request]:
+        """Evacuate every active slot (replica killed by a node loss):
+        returns the aborted requests in slot order and resets the batch.
+        Token accounting of work already done is kept — it was really
+        computed, then lost with the replica."""
+        aborted = [req for req in self.slots if req is not None]
+        self.slots = [None] * self.n_slots
+        self._free = list(range(self.n_slots - 1, -1, -1))
+        self.n_active = 0
+        return aborted
+
     # -- introspection --------------------------------------------------------
     @property
     def mean_occupancy(self) -> float:

@@ -174,6 +174,18 @@ class ServingCampaign:
             return None
         return self._queue.popleft()
 
+    def requeue(self, req: Request) -> None:
+        """A killed replica hands its in-flight requests back (chaos path):
+        reset the measured lifecycle and put the request at the *front* of
+        the queue — it was admitted first, it re-admits first."""
+        req.replica = None
+        req.t_admitted = None
+        req.t_first_token = None
+        req.t_done = None
+        req.generated = 0
+        self._queue.appendleft(req)
+        self.rset.wake_one()
+
     def request_done(self, req: Request) -> None:
         self.completed.append(req)
         self.completion_order.append((req.rid, req.t_done))

@@ -20,6 +20,7 @@ import dataclasses
 import enum
 from typing import List, Optional
 
+from ..chaos.retry import drive_retries
 from ..core.staging import modeled_stage_time
 from ..obs.trace import NULL_RECORDER
 from ..pool.catalog import DatasetRef
@@ -73,6 +74,8 @@ class Replica:
         self.cold_start_s: float = 0.0
         self.idle_since: Optional[float] = None
         self._busy = False
+        #: request whose prefill is in flight (evacuated on a node kill)
+        self._inflight = None
 
     # -- step loop ------------------------------------------------------------
     def wake(self) -> None:
@@ -93,6 +96,7 @@ class Replica:
             if req is not None:
                 self.idle_since = None
                 req.replica = self.name
+                self._inflight = req
                 dt = batch.begin_prefill(req, now)
                 self.engine.after(dt, lambda: self._prefill_done(req))
                 return
@@ -107,12 +111,17 @@ class Replica:
             self.rset._finish_drain(self, now)
 
     def _prefill_done(self, req) -> None:
+        if self.state is ReplicaState.STOPPED:
+            return          # killed mid-prefill; the request was requeued
+        self._inflight = None
         done = self.batch.finish_prefill(req, self.engine.now)
         if done is not None:
             self.source.request_done(done)
         self._step()
 
     def _decode_done(self) -> None:
+        if self.state is ReplicaState.STOPPED:
+            return          # killed mid-decode; active slots were requeued
         for req in self.batch.advance_decode(self.engine.now):
             self.source.request_done(req)
         self._step()
@@ -297,6 +306,79 @@ class ReplicaSet:
             rec.events.append(("replica", now, r.name, {"state": "stopped"}))
         if self.listener is not None:
             self.listener.replica_stopped(r)
+
+    # -- failure domain (chaos engine) ----------------------------------------
+    def kill(self, r: Replica, now: float, reason: str = "node-loss") -> list:
+        """Hard-stop ``r`` (its storage node died): every in-flight request
+        — the prefill in flight and every active decode slot — aborts back
+        to the source queue, the lease releases, and the autoscaler's floor
+        restores the fleet on its next control tick. Returns the aborted
+        requests (already requeued when a source is attached)."""
+        if r.state is ReplicaState.STOPPED:
+            return []
+        r.state = ReplicaState.STOPPED
+        r.stopped_at = now
+        r._busy = False
+        aborted = []
+        if r._inflight is not None:
+            aborted.append(r._inflight)
+            r._inflight = None
+        aborted.extend(r.batch.abort_all())
+        self._account(now)
+        self._n_live -= 1
+        r.session.release(now)
+        self.scale_events.append((now, "killed", r.name, reason))
+        rec = self.recorder
+        if rec.enabled:
+            rec.events.append((
+                "replica", now, r.name,
+                {"state": "killed", "aborted": len(aborted), "reason": reason},
+            ))
+        if self.source is not None:
+            # reversed: the source pushes each to the queue *front*, so the
+            # earliest-admitted aborted request re-admits first
+            for req in reversed(aborted):
+                self.source.requeue(req)
+        if self.listener is not None:
+            self.listener.replica_stopped(r)
+        return aborted
+
+    def on_node_down(self, node_id: str, now: Optional[float] = None,
+                     *, retry=None) -> List[Replica]:
+        """Absorb a storage-node loss across the fleet.
+
+        Replicas leasing from an affected pool (or whose own session spans
+        the node) are killed — leases release first, unpinning the weights
+        — then each affected pool takes the loss (residency invalidated,
+        capacity shrunk) and, when a :class:`~repro.chaos.RetryPolicy` is
+        passed, self-heals by backfilling from free nodes on its cadence.
+        The next scale-up re-stages the weights through the ordinary miss
+        path: degraded fleets never serve stale residency."""
+        now = self.engine.now if now is None else now
+        pm = self.service.pool_manager
+        pools = pm.affected_pools(node_id) if pm is not None else ()
+        pool_ids = {p.pool_id for p in pools}
+        victims = []
+        for r in self.replicas:
+            if r.state is ReplicaState.STOPPED:
+                continue
+            lease = r.session.lease
+            if (lease is not None and lease.pool_id in pool_ids) or any(
+                n.node_id == node_id for n in r.session.storage_nodes
+            ):
+                victims.append(r)
+        for r in victims:
+            self.kill(r, now, reason=f"node-loss:{node_id}")
+        for pool in pools:
+            pm.on_node_down(pool, node_id, now)
+            if retry is not None:
+                drive_retries(
+                    self.engine,
+                    retry,
+                    f"pool{pool.pool_id}:{node_id}",
+                    lambda p=pool: pm.backfill(p, self.engine.now),
+                )
+        return victims
 
     # -- accounting / views ---------------------------------------------------
     def _account(self, now: float) -> None:

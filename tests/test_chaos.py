@@ -1,0 +1,566 @@
+"""PR 9 chaos suite: fault model, backoff, blast radius, healing, replay.
+
+Five pillars:
+
+* unit coverage for the ``repro.chaos`` package — `NodeFaultModel`
+  determinism/validation, `RetryPolicy` delay sequences, `drive_retries`
+  cadence over a `SimEngine`, and the duck-typed blast-radius resolver;
+* the scheduler's failure domain — free nodes park immediately, nodes
+  inside live allocations park on release, repairs restore the free
+  pool, and the availability gauge tracks both;
+* degradation semantics — a mirrored session survives one loss at
+  halved effective bandwidth; everything else refuses to degrade;
+* pool self-healing — node loss invalidates residency and shrinks the
+  ledger only by what surviving hardware can't cover; backfill and
+  repair each restore exactly the deducted share, never both;
+* determinism regressions — a 500-job campaign under random MTTF draws
+  plus scripted kills replays bit-identically through the legacy and
+  indexed dispatchers (and run-to-run with tracing on), and an armed
+  but empty fault model perturbs nothing.
+"""
+
+import random
+
+import pytest
+
+from repro.chaos import (
+    NodeEvent,
+    NodeFaultModel,
+    RetryPolicy,
+    drive_retries,
+    resolve_blast_radius,
+)
+from repro.core import (
+    AllocationError,
+    JobRequest,
+    Scheduler,
+    StorageRequest,
+    dom_cluster,
+    synthetic_cluster,
+)
+from repro.orchestrator import (
+    BackfillPolicy,
+    JobState,
+    Orchestrator,
+    SimEngine,
+    WorkflowSpec,
+)
+from repro.pool import DatasetRef
+from repro.provision import (
+    Placement,
+    ProvisioningService,
+    SessionError,
+    StorageSpec,
+)
+from repro.runtime import FaultInjector, FaultSpec, HeartbeatMonitor
+
+GB = 1e9
+
+
+# -- NodeFaultModel -----------------------------------------------------------
+
+def test_fault_model_events_deterministic_and_sorted():
+    nodes = [f"sn{i:05d}" for i in range(5)]
+    kw = dict(mttf_s=500.0, mttr_s=120.0, horizon_s=2000.0, seed=7,
+              schedule=((100.0, "sn00002"),))
+    a = NodeFaultModel(nodes, **kw).events()
+    b = NodeFaultModel(list(reversed(nodes)), **kw).events()
+    assert a and a == b
+    keys = [(e.t, e.node_id, 0 if e.kind == "up" else 1) for e in a]
+    assert keys == sorted(keys)
+    # every down is followed by its node's up exactly mttr later
+    downs = [(e.t, e.node_id) for e in a if e.kind == "down"]
+    ups = {(e.t, e.node_id) for e in a if e.kind == "up"}
+    assert all((t + 120.0, nid) in ups for t, nid in downs)
+
+
+def test_fault_model_per_node_streams_independent():
+    """Adding a node to the domain never perturbs another node's draws."""
+    kw = dict(mttf_s=400.0, mttr_s=100.0, horizon_s=3000.0, seed=3)
+    small = NodeFaultModel(["a", "b"], **kw).events()
+    big = NodeFaultModel(["a", "b", "c"], **kw).events()
+    assert [e for e in small if e.node_id == "a"] == [
+        e for e in big if e.node_id == "a"
+    ]
+
+
+def test_fault_model_validation():
+    with pytest.raises(ValueError, match="unknown node"):
+        NodeFaultModel(["a"], schedule=((1.0, "b"),))
+    with pytest.raises(ValueError, match="negative time"):
+        NodeFaultModel(["a"], schedule=((-1.0, "a"),))
+    with pytest.raises(ValueError, match="horizon_s"):
+        NodeFaultModel(["a"], mttf_s=100.0)
+    with pytest.raises(ValueError, match="mttr_s"):
+        NodeFaultModel(["a"], mttr_s=0.0)
+    with pytest.raises(ValueError, match="kind"):
+        NodeEvent(1.0, "a", "sideways")
+
+
+def test_fault_model_any_faults_gates_chaos_off():
+    assert not NodeFaultModel(["a", "b"]).any_faults
+    assert NodeFaultModel(["a"], schedule=((1.0, "a"),)).any_faults
+    assert NodeFaultModel(["a"], mttf_s=10.0, horizon_s=1.0).any_faults
+
+
+# -- RetryPolicy + drive_retries ---------------------------------------------
+
+def test_retry_delays_deterministic_and_bounded():
+    p = RetryPolicy(max_attempts=5, base_s=10.0, factor=2.0,
+                    max_delay_s=60.0, jitter=0.1, seed=4)
+    d = p.delays("pool1:sn00003")
+    assert d == p.delays("pool1:sn00003")
+    assert d != p.delays("pool1:sn00004")
+    assert len(d) == 5
+    for i, w in enumerate(d):
+        base = min(10.0 * 2.0**i, 60.0)
+        assert base <= w <= base * 1.1
+
+
+def test_retry_deadline_truncates_sequence():
+    p = RetryPolicy(max_attempts=6, base_s=10.0, factor=2.0,
+                    max_delay_s=300.0, jitter=0.0, deadline_s=35.0)
+    assert p.delays("k") == (10.0, 20.0)       # 10+20=30 <= 35; +40 > 35
+    tight = RetryPolicy(base_s=10.0, jitter=0.0, deadline_s=5.0)
+    assert tight.delays("k") == ()
+
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError):
+        RetryPolicy(factor=0.5)
+    with pytest.raises(ValueError):
+        RetryPolicy(base_s=10.0, max_delay_s=5.0)
+    with pytest.raises(ValueError):
+        RetryPolicy(jitter=2.0)
+
+
+def test_drive_retries_cadence_and_success_stop():
+    eng = SimEngine()
+    p = RetryPolicy(max_attempts=4, base_s=10.0, factor=2.0,
+                    max_delay_s=100.0, jitter=0.0)
+    calls = []
+
+    def attempt():
+        calls.append(eng.now)
+        return len(calls) >= 2          # second try succeeds
+
+    drive_retries(eng, p, "k", attempt)
+    eng.run()
+    # first attempt itself waits delays[0]: a failure was just observed now
+    assert calls == [10.0, 30.0]
+
+
+def test_drive_retries_gives_up_after_exhaustion():
+    eng = SimEngine()
+    p = RetryPolicy(max_attempts=3, base_s=10.0, factor=2.0,
+                    max_delay_s=100.0, jitter=0.0)
+    calls, gave = [], []
+    drive_retries(eng, p, "k", lambda: (calls.append(eng.now), False)[1],
+                  give_up=lambda: gave.append(eng.now))
+    eng.run()
+    assert calls == [10.0, 30.0, 70.0]
+    assert gave == [70.0]
+
+
+# -- blast radius -------------------------------------------------------------
+
+class _Node:
+    def __init__(self, nid):
+        self.node_id = nid
+
+
+class _Alloc:
+    def __init__(self, *nids):
+        self.storage_nodes = tuple(_Node(n) for n in nids)
+
+
+class _Lease:
+    def __init__(self, pool_id):
+        self.pool_id = pool_id
+
+
+class _Pool:
+    def __init__(self, pool_id, *nids, leases=()):
+        self.pool_id = pool_id
+        self.storage_node_ids = set(nids)
+        self.leases = {i: lease for i, lease in enumerate(leases)}
+
+
+class _Session:
+    def __init__(self, allocation=None, pool=None, lease=None):
+        self.allocation = allocation
+        self.pool = pool
+        self.lease = lease
+
+
+class _Replica:
+    def __init__(self, session):
+        self.session = session
+
+
+def test_blast_radius_fans_out_over_sessions_pools_replicas():
+    lease = _Lease(pool_id=1)
+    hit_pool = _Pool(1, "sn0", "sn1", leases=(lease,))
+    other_pool = _Pool(2, "sn2")
+    direct = _Session(allocation=_Alloc("sn0", "sn3"))
+    via_lease = _Session(lease=_Lease(pool_id=1))
+    unrelated = _Session(allocation=_Alloc("sn4"))
+    r_hit = _Replica(_Session(lease=_Lease(pool_id=1)))
+    r_safe = _Replica(_Session(lease=_Lease(pool_id=2)))
+
+    br = resolve_blast_radius(
+        "sn0",
+        sessions=[direct, via_lease, unrelated],
+        pools=[hit_pool, other_pool],
+        replicas=[r_hit, r_safe],
+    )
+    assert br.sessions == (direct, via_lease)
+    assert br.pools == (hit_pool,)
+    assert br.leases == (lease,)
+    assert br.replicas == (r_hit,)
+    assert not br.empty
+    assert resolve_blast_radius("sn9", sessions=[direct], pools=[hit_pool]).empty
+
+
+# -- scheduler failure domain -------------------------------------------------
+
+def test_scheduler_parks_free_node_and_repairs_it():
+    s = Scheduler(synthetic_cluster(4, 3))
+    assert s.healthy_capacity_fraction == 1.0
+    assert s.mark_node_down("sn00002") is True       # free: parked now
+    assert s.free_counts()[1] == 2
+    assert s.down_storage_nodes == frozenset({"sn00002"})
+    assert s.healthy_capacity_fraction == pytest.approx(2 / 3)
+    with pytest.raises(AllocationError):
+        s.submit(JobRequest("j", 1, storage=StorageRequest(nodes=3)))
+    assert s.mark_node_up("sn00002") is True
+    assert s.healthy_capacity_fraction == 1.0
+    a = s.submit(JobRequest("j", 1, storage=StorageRequest(nodes=3)))
+    s.release(a)
+
+
+def test_scheduler_parks_allocated_node_on_release():
+    s = Scheduler(synthetic_cluster(4, 3))
+    a = s.submit(JobRequest("j", 1, storage=StorageRequest(nodes=2)))
+    held = a.storage_nodes[0].node_id
+    assert s.mark_node_down(held) is False            # pending until release
+    assert held in s.down_storage_nodes
+    assert s.healthy_capacity_fraction == pytest.approx(2 / 3)
+    s.release(a)
+    assert s.free_counts()[1] == 2                    # parked, not freed
+    assert s.mark_node_up(held) is True
+    assert s.free_counts()[1] == 3
+
+
+def test_scheduler_repair_before_release_unflags():
+    s = Scheduler(synthetic_cluster(4, 3))
+    a = s.submit(JobRequest("j", 1, storage=StorageRequest(nodes=2)))
+    held = a.storage_nodes[0].node_id
+    s.mark_node_down(held)
+    assert s.mark_node_up(held) is False              # unflagged, still held
+    s.release(a)
+    assert s.free_counts()[1] == 3                    # freed normally
+
+
+def test_scheduler_down_validation_and_idempotence():
+    s = Scheduler(synthetic_cluster(4, 3))
+    with pytest.raises(AllocationError):
+        s.mark_node_down("sn99999")
+    assert s.mark_node_down("sn00000") is True
+    assert s.mark_node_down("sn00000") is True        # idempotent
+    assert s.mark_node_up("sn00000") is True
+    assert s.mark_node_up("sn00000") is False         # not down: no-op
+
+
+# -- degradation semantics ----------------------------------------------------
+
+def test_mirrored_session_degrades_to_half_bandwidth():
+    svc = ProvisioningService(dom_cluster())
+    s = svc.open_session(
+        StorageSpec("m", nodes=2, managers=("ephemeralfs",),
+                    placement=Placement(mirror=True), stage_in_bytes=20 * GB)
+    )
+    assert s.redundancy == "mirror"
+    assert s.can_degrade
+    healthy = s.stage_in_time_s
+    s.degrade()
+    assert s.degraded
+    assert s.stage_in_time_s == pytest.approx(2.0 * healthy)
+    assert s.checkpoint_write_s(1 * GB) > 0
+    assert not s.can_degrade                          # second loss is fatal
+    with pytest.raises(SessionError, match="no redundancy left"):
+        s.degrade()
+    s.release()
+
+
+def test_unmirrored_session_cannot_degrade():
+    svc = ProvisioningService(dom_cluster())
+    s = svc.open_session(
+        StorageSpec("p", nodes=2, managers=("ephemeralfs",))
+    )
+    assert s.redundancy == "none"
+    assert not s.can_degrade
+    with pytest.raises(SessionError):
+        s.degrade()
+    s.release()
+
+
+# -- pool self-healing --------------------------------------------------------
+
+def _pool_orch(n_storage=4):
+    orch = Orchestrator(synthetic_cluster(4, n_storage))
+    return orch, orch.enable_pools(ttl_s=None)
+
+
+def test_pool_quota_below_hardware_loses_nothing_but_degrades():
+    orch, mgr = _pool_orch()
+    pool = mgr.create_pool(nodes=2, cap_bytes=100 * GB)
+    dead = sorted(pool.storage_node_ids)[0]
+    mgr.on_node_down(pool, dead)
+    assert pool.degraded
+    assert pool.dead_node_capacity == {dead: 0.0}     # survivor covers quota
+    assert pool.capacity_bytes == 100 * GB
+    assert dead not in pool.storage_node_ids
+    assert mgr.affected_pools(dead) == ()             # no longer backing it
+
+
+def test_pool_loss_above_surviving_hardware_shrinks_ledger():
+    orch, mgr = _pool_orch()
+    cap = orch.scheduler.policy.node_capacity_bytes
+    pool = mgr.create_pool(nodes=2)                   # ledger = full hardware
+    nodes = pool.allocation.storage_nodes
+    full = pool.capacity_bytes
+    dead = nodes[0].node_id
+    mgr.on_node_down(pool, dead)
+    survivor_hw = sum(cap(n) for n in nodes[1:])
+    assert pool.capacity_bytes == pytest.approx(survivor_hw)
+    assert pool.dead_node_capacity[dead] == pytest.approx(full - survivor_hw)
+    mgr.on_node_repair(dead)
+    assert pool.capacity_bytes == pytest.approx(full)
+    assert not pool.degraded
+
+
+def test_pool_backfill_replaces_dead_node_and_repair_keeps_spare():
+    orch, mgr = _pool_orch()
+    pool = mgr.create_pool(nodes=2, cap_bytes=100 * GB)
+    dead = sorted(pool.storage_node_ids)[0]
+    mgr.on_node_down(pool, dead)
+    orch.scheduler.mark_node_down(dead)               # the chaos engine's order
+    assert mgr.backfill(pool) is True
+    assert dead in pool.replaced_node_ids
+    assert len(pool.extra_allocations) == 1
+    assert not pool.degraded
+    assert pool.capacity_bytes == 100 * GB
+    # the chassis repairing later must not double-restore the share
+    orch.scheduler.mark_node_up(dead)
+    mgr.on_node_repair(dead)
+    assert pool.capacity_bytes == 100 * GB
+    assert len(pool.extra_allocations) == 1
+
+
+def test_pool_backfill_without_free_nodes_waits_for_repair():
+    orch, mgr = _pool_orch(n_storage=2)
+    pool = mgr.create_pool(nodes=2, cap_bytes=100 * GB)
+    dead = sorted(pool.storage_node_ids)[0]
+    orch.scheduler.mark_node_down(dead)
+    mgr.on_node_down(pool, dead)
+    assert mgr.backfill(pool) is False                # cluster has no spare
+    assert pool.degraded
+    mgr.on_node_repair(dead)
+    assert not pool.degraded
+    assert pool.capacity_bytes == 100 * GB
+
+
+# -- fault.py satellites ------------------------------------------------------
+
+def test_fault_injector_trip_rejects_unknown_phase():
+    inj = FaultInjector(FaultSpec(run_fail_p=1.0, seed=1))
+    assert inj.trip("j", "run") is True
+    with pytest.raises(ValueError, match="valid phases are"):
+        inj.trip("j", "bogus")
+
+
+def test_heartbeat_revive_resets_state():
+    t = [0.0]
+    mon = HeartbeatMonitor(["n0", "n1"], timeout_s=10.0, clock=lambda: t[0])
+    mon.beat("n0", step_time_s=5.0)
+    t[0] = 50.0
+    assert sorted(mon.dead_nodes()) == ["n0", "n1"]
+    mon.revive("n0")
+    assert mon.nodes["n0"].alive
+    assert mon.nodes["n0"].step_times == []           # stale latencies dropped
+    assert mon.dead_nodes() == ["n1"]
+
+
+def test_stragglers_exclude_timed_out_nodes():
+    t = [0.0]
+    nodes = [f"n{i}" for i in range(4)] + ["slow"]
+    mon = HeartbeatMonitor(nodes, timeout_s=10.0, clock=lambda: t[0])
+    for _ in range(6):
+        for n in nodes:
+            mon.beat(n, step_time_s=50.0 if n == "slow" else 1.0)
+    t[0] = 5.0
+    assert mon.stragglers(now=5.0) == ["slow"]        # alive and slow: flagged
+    for n in nodes:
+        if n != "slow":
+            mon.beat(n, now=95.0)
+    # "slow" stopped beating: it is dead, not a straggler, and its samples
+    # must not drag the fleet median
+    assert mon.stragglers(now=100.0) == []
+    assert mon.dead_nodes(100.0) == ["slow"]
+
+
+# -- orchestrator integration -------------------------------------------------
+
+def test_enable_chaos_rejects_unknown_nodes():
+    orch = Orchestrator(synthetic_cluster(4, 2))
+    model = NodeFaultModel(["sn00000", "ghost"], schedule=((1.0, "sn00000"),))
+    with pytest.raises(ValueError, match="unknown storage nodes"):
+        orch.enable_chaos(model)
+
+
+def _mini_campaign(*, mirror, chaos=True):
+    from repro.obs import TraceRecorder
+
+    rec = TraceRecorder()
+    orch = Orchestrator(synthetic_cluster(8, 4), policy=BackfillPolicy(),
+                        recorder=rec)
+    if chaos:
+        orch.enable_chaos(NodeFaultModel(
+            [n.node_id for n in orch.scheduler.cluster.storage_nodes],
+            mttr_s=300.0, schedule=((60.0, "sn00000"),),
+        ))
+    specs = [
+        WorkflowSpec(
+            f"j{i}", 1 + i % 2,
+            storage_spec=StorageSpec(
+                f"j{i}", nodes=2, managers=("ephemeralfs",),
+                placement=Placement(mirror=mirror),
+                stage_in_bytes=10 * GB, stage_out_bytes=1 * GB,
+            ),
+            run_time_s=100.0, max_retries=4,
+        )
+        for i in range(6)
+    ]
+    jobs = orch.run_campaign(specs, submit_times=[i * 1.0 for i in range(6)])
+    return jobs, rec, orch
+
+
+def test_kill_degrades_mirrored_jobs_in_place():
+    jobs, rec, orch = _mini_campaign(mirror=True)
+    assert all(j.state is JobState.DONE for j in jobs)
+    assert rec.counts.get("chaos.node_downs", 0) == 1
+    assert rec.counts.get("chaos.node_repairs", 0) == 1
+    assert rec.counts.get("chaos.degraded", 0) >= 1
+    assert rec.counts.get("fault.requeued", 0) == 0   # nobody restarted
+    assert orch.scheduler.healthy_capacity_fraction == 1.0
+    assert not orch.scheduler.down_storage_nodes
+
+
+def test_kill_requeues_unmirrored_jobs():
+    jobs, rec, orch = _mini_campaign(mirror=False)
+    assert all(j.state is JobState.DONE for j in jobs)
+    assert rec.counts.get("chaos.degraded", 0) == 0
+    assert rec.counts.get("fault.requeued", 0) >= 1   # the loss restarts them
+    assert orch.scheduler.healthy_capacity_fraction == 1.0
+
+
+# -- determinism regressions --------------------------------------------------
+
+def _chaos_specs(seed, n):
+    rng = random.Random(seed)
+    ds = [DatasetRef(f"d{k}", (8.0 + 3.0 * k) * GB) for k in range(3)]
+    specs = []
+    for i in range(n):
+        name = f"job{i:03d}"
+        r = rng.random()
+        if r < 0.35:
+            storage = StorageSpec(
+                name, nodes=2, managers=("ephemeralfs",),
+                placement=Placement(mirror=True),
+                stage_in_bytes=rng.uniform(4, 16) * GB,
+                stage_out_bytes=rng.uniform(0, 4) * GB,
+            )
+            spec = WorkflowSpec(name, rng.randint(1, 4), storage_spec=storage,
+                                run_time_s=rng.uniform(20, 90), max_retries=6)
+        elif r < 0.55:
+            storage = StorageSpec(
+                name, nodes=1, managers=("ephemeralfs",),
+                stage_in_bytes=rng.uniform(2, 10) * GB,
+            )
+            spec = WorkflowSpec(name, rng.randint(1, 3), storage_spec=storage,
+                                run_time_s=rng.uniform(10, 60), max_retries=6)
+        elif r < 0.75:
+            spec = WorkflowSpec(
+                name, rng.randint(1, 3), use_pool=True,
+                datasets=(ds[rng.randint(0, 2)],),
+                stage_in_bytes=rng.uniform(0, 4) * GB,
+                run_time_s=rng.uniform(10, 60), max_retries=6,
+            )
+        else:
+            spec = WorkflowSpec(name, rng.randint(1, 6),
+                                run_time_s=rng.uniform(10, 60))
+        specs.append(spec)
+    return specs
+
+
+def _chaos_fingerprint(incremental, seed=13, n_jobs=500, recorder=None):
+    orch = Orchestrator(synthetic_cluster(16, 6), policy=BackfillPolicy(),
+                        incremental=incremental, recorder=recorder)
+    mgr = orch.enable_pools(ttl_s=None)
+    mgr.create_pool(nodes=2, cap_bytes=80 * GB)
+    node_ids = [n.node_id for n in orch.scheduler.cluster.storage_nodes]
+    orch.enable_chaos(
+        NodeFaultModel(node_ids, mttf_s=4000.0, mttr_s=350.0,
+                       horizon_s=1200.0, seed=9,
+                       schedule=((150.0, "sn00001"),)),
+        retry=RetryPolicy(base_s=20.0, seed=2),
+    )
+    jobs = orch.run_campaign(
+        _chaos_specs(seed, n_jobs),
+        submit_times=[i * 1.5 for i in range(n_jobs)],
+    )
+    assert all(j.state is JobState.DONE for j in jobs)
+    return [
+        (j.spec.name, tuple(j.history), tuple(j.alloc_history), j.attempt,
+         j.failure_phase)
+        for j in jobs
+    ]
+
+
+def test_chaos_campaign_bit_identical_legacy_vs_indexed():
+    """The PR 4 determinism contract extends under chaos: 500 seeded jobs
+    with random MTTF outages, a scripted kill, mirrored degradation, pool
+    self-healing, and retry backoff replay identically through both
+    dispatchers — and run-to-run with tracing on."""
+    from repro.obs import TraceRecorder
+
+    legacy = _chaos_fingerprint(False)
+    rec_a, rec_b = TraceRecorder(), TraceRecorder()
+    indexed = _chaos_fingerprint(True, recorder=rec_a)
+    again = _chaos_fingerprint(True, recorder=rec_b)
+    assert legacy == indexed
+    assert indexed == again
+    assert rec_a.events == rec_b.events
+    assert rec_a.counts.get("chaos.node_downs", 0) >= 1
+
+
+def test_empty_fault_model_is_chaos_off():
+    """An armed model that can never fire schedules nothing: job histories
+    match a campaign that never called enable_chaos at all."""
+    def run(arm_empty):
+        orch = Orchestrator(synthetic_cluster(8, 4), policy=BackfillPolicy())
+        orch.enable_pools(ttl_s=None).create_pool(nodes=1, cap_bytes=60 * GB)
+        if arm_empty:
+            orch.enable_chaos(NodeFaultModel(
+                [n.node_id for n in orch.scheduler.cluster.storage_nodes]
+            ))
+        jobs = orch.run_campaign(
+            _chaos_specs(5, 100),
+            submit_times=[i * 2.0 for i in range(100)],
+        )
+        return [(j.spec.name, tuple(j.history), j.attempt) for j in jobs]
+
+    assert run(False) == run(True)

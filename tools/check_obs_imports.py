@@ -39,8 +39,9 @@ import sys
 
 #: packages whose modules run inside the campaign hot loop (``serving``
 #: joined in PR 8: its batch/replica/autoscale steps are heap events on
-#: the same virtual clock, so the same layering applies)
-HOT_PACKAGES = ("core", "orchestrator", "pool", "provision", "serving")
+#: the same virtual clock, so the same layering applies; ``chaos`` joined
+#: in PR 9: fault schedules and retry backoff fire as heap events too)
+HOT_PACKAGES = ("core", "orchestrator", "pool", "provision", "serving", "chaos")
 
 #: the one obs module import-time code may touch
 ALLOWED = "repro.obs.trace"
