@@ -25,6 +25,7 @@ def main() -> None:
         mdtest,
         obs_bench,
         orchestrator_bench,
+        pilot_bench,
         pool_bench,
         provision_bench,
         roofline,
@@ -47,6 +48,7 @@ def main() -> None:
         ("campaign_scale", campaign_scale_bench),  # 50k-job engine scaling
         ("fault_tolerance", fault_tolerance_bench),  # checkpoint resume + preemption
         ("chaos", chaos_bench),            # node failure domain + self-healing
+        ("pilot", pilot_bench),            # two-level many-task scheduling
         ("obs", obs_bench),                # tracing overhead gate
         ("serving", serving_bench),        # pool-backed serving + autoscaler
         ("kernels", kernels_bench),

@@ -407,12 +407,18 @@ class Scheduler:
         return self._grant(req, n_storage)
 
     # -- reservation ledger (EASY backfill substrate) ------------------------
-    def note_projected_release(self, alloc: Allocation, t: float) -> None:
+    def note_projected_release(self, alloc: Allocation, t: Optional[float]) -> None:
         """Record when ``alloc`` is expected to release (from the caller's
         duration model). Overwrites any earlier projection; dropped
-        automatically on :meth:`release`. No-op for unknown allocations."""
+        automatically on :meth:`release`. ``t=None`` clears the projection:
+        open-ended allocations (pilots accepting late task submissions)
+        promise no release, so EASY proofs must not book holes against
+        them, same as persistent pools. No-op for unknown allocations."""
         if alloc.job_id in self._live:
-            self._projected[alloc.job_id] = t
+            if t is None:
+                self._projected.pop(alloc.job_id, None)
+            else:
+                self._projected[alloc.job_id] = t
 
     def projected_release_of(self, alloc: Allocation) -> Optional[float]:
         return self._projected.get(alloc.job_id)

@@ -428,6 +428,46 @@ def _check_serving_queue_bound(trace, metrics) -> Optional[Advisory]:
     )
 
 
+def _check_pilot_underpacked(trace) -> Optional[Advisory]:
+    """Pilots holding a whole node-block grant while most slots idle: the
+    acquisition amortization the pilot exists for is not happening. Judged
+    from the ``task_batch`` events' occupancy samples (>= 3 batches per
+    pilot so a drain tail alone cannot trip it)."""
+    occ: dict[str, list] = {}
+    for kind, _t, label, args in trace.events:
+        if kind == "task_batch":
+            occ.setdefault(label, []).append(args.get("occupancy", 0.0))
+    means = {
+        name: sum(v) / len(v) for name, v in occ.items() if len(v) >= 3
+    }
+    under = sorted(
+        ((m, name) for name, m in means.items() if m < 0.5)
+    )
+    if not under:
+        return None
+    worst_m, worst = under[0]
+    return Advisory(
+        code="pilot_underpacked",
+        severity=min(1.0, 0.3 + 0.5 * (1.0 - worst_m)),
+        summary=(
+            f"pilot under-packed: {len(under)} of {len(means)} pilot(s) "
+            f"averaged under 50% slot occupancy (worst {worst!r} at "
+            f"{worst_m:.0%}) — the node-block grant is mostly idle"
+        ),
+        recommendation=(
+            "submit more tasks per pilot, shrink n_compute/slots_per_node "
+            "to match the backlog, or run the tail as plain jobs so the "
+            "grant releases sooner"
+        ),
+        evidence={
+            "worst_pilot": worst,
+            "worst_mean_occupancy": round(worst_m, 4),
+            "underpacked": [name for _m, name in under[:5]],
+            "pilots_sampled": len(means),
+        },
+    )
+
+
 def _check_slo_breach(slos) -> list[Advisory]:
     out = []
     for s in getattr(slos, "breached", ()):
@@ -496,6 +536,7 @@ def diagnose(trace, *, metrics=None, report=None, slos=None) -> tuple[Advisory, 
         _check_fault_churn(trace, n_jobs),
         _check_node_churn(trace, n_jobs),
         _check_negotiation_pressure(trace),
+        _check_pilot_underpacked(trace),
     ]
     advisories = [a for a in found if a is not None]
     if slos is not None:

@@ -105,6 +105,14 @@ class NullRecorder:
     def degraded(self, job, node_id, t) -> None: ...
     def rebuild(self, pool, node_id, *, via, t) -> None: ...
 
+    # pilots (two-level scheduling)
+    def pilot_started(self, name, job_id, t, *, n_tasks, n_slots, packed) -> None: ...
+    def task_batch(
+        self, name, job_id, t, *,
+        completed, failed, requeued, packed, queued, running, occupancy,
+    ) -> None: ...
+    def pilot_resized(self, name, job_id, t, *, n_slots, cause, packed) -> None: ...
+
     # scheduler
     def sched_grant(self, allocation) -> None: ...
     def sched_release(self, allocation) -> None: ...
@@ -251,6 +259,18 @@ class TraceRecorder:
 
         hub.add_probe("pool_occupancy", pool_occupancy)
         hub.add_probe("catalog_hit_rate", catalog_hit_rate)
+        hub.add_probe("tasks_done", lambda: counters.tasks_done)
+
+        def pilot_occupancy() -> float:
+            # mean slot occupancy over RUNNING pilots (0.0 when none)
+            total = n = 0.0
+            for job in orch._running.values():
+                if job.pilot is not None:
+                    total += job.pilot.tasks.occupancy
+                    n += 1
+            return total / n if n else 0.0
+
+        hub.add_probe("pilot_occupancy", pilot_occupancy)
 
     # -- internals ------------------------------------------------------------
     def now(self) -> float:
@@ -573,6 +593,65 @@ class TraceRecorder:
                 t,
                 f"pool {pool.pool_id}",
                 {"pool_id": pool.pool_id, "node_id": node_id, "via": via},
+            )
+        )
+
+    # -- pilots (two-level scheduling) -----------------------------------------
+    def pilot_started(self, name, job_id, t, *, n_tasks, n_slots, packed) -> None:
+        self.count("pilot.started")
+        self.events.append(
+            (
+                "pilot_started",
+                t,
+                name,
+                {
+                    "job_id": job_id, "n_tasks": n_tasks,
+                    "n_slots": n_slots, "packed": packed,
+                },
+            )
+        )
+
+    def task_batch(
+        self, name, job_id, t, *,
+        completed, failed, requeued, packed, queued, running, occupancy,
+    ) -> None:
+        """One coalesced completion batch inside a pilot — the O(1) event
+        the engine sees in place of per-task lifecycles. Also feeds the
+        per-pilot occupancy series (``pilot_occupancy/<name>``)."""
+        self.count("pilot.batches")
+        if completed:
+            self.count("pilot.tasks_done", completed)
+        if failed:
+            self.count("pilot.tasks_failed", failed)
+        if requeued:
+            self.count("pilot.task_retries", requeued)
+        self.events.append(
+            (
+                "task_batch",
+                t,
+                name,
+                {
+                    "job_id": job_id, "completed": completed, "failed": failed,
+                    "requeued": requeued, "packed": packed, "queued": queued,
+                    "running": running, "occupancy": occupancy,
+                },
+            )
+        )
+        hub = self.metrics
+        if hub is not None:
+            hub.record("pilot_occupancy/" + name, t, occupancy)
+
+    def pilot_resized(self, name, job_id, t, *, n_slots, cause, packed) -> None:
+        self.count("pilot.resized")
+        self.events.append(
+            (
+                "pilot_resized",
+                t,
+                name,
+                {
+                    "job_id": job_id, "n_slots": n_slots,
+                    "cause": cause, "packed": packed,
+                },
             )
         )
 

@@ -17,6 +17,7 @@ start no backfill may delay. `Orchestrator.live_report` serves O(1)
 mid-flight campaign snapshots.
 """
 
+from ..pilot import PilotSpec, TaskSpec
 from .arrivals import (
     burst_arrivals,
     diurnal_arrivals,
@@ -63,6 +64,7 @@ __all__ = [
     "SimEngine",
     "TERMINAL_STATES", "JobRecord", "JobState", "Orchestrator", "WorkflowSpec",
     "LiveCounters", "Reservation",
+    "PilotSpec", "TaskSpec",      # pilot (two-level scheduling) entry points
     "BREAKDOWN_STATES", "CampaignReport", "JobBreakdown", "LiveReport",
     "PoolReport", "format_report", "job_breakdown", "live_report",
     "pool_report", "storage_node_utilization", "summarize",

@@ -67,6 +67,7 @@ from ..chaos.retry import drive_retries
 from ..core.perfmodel import FSDeployment, dom_lustre
 from ..core.scheduler import Allocation, AllocationError, JobRequest, StorageRequest
 from ..obs.trace import NULL_RECORDER
+from ..pilot.run import PilotRun, PilotSpec
 from ..pool.catalog import DatasetRef, total_bytes
 from ..pool.manager import PoolManager
 from ..pool.pool import Lease
@@ -297,6 +298,13 @@ class JobRecord:
     #: checkpoints) from a completed stage-in — a resume landing entirely
     #: on them skips stage-in (the data-plane analogue of ``warm_nodes``)
     staged_nodes: frozenset = frozenset()
+    #: bottom-level pilot runtime (two-level scheduling) — None for plain
+    #: jobs; every pilot-only hot-path branch gates on this being set
+    pilot: Optional[PilotRun] = None
+    #: pool still holding this job's latest checkpoint commit (pool ids are
+    #: never reused): a pooled resume re-leasing this exact pool skips the
+    #: global-FS restore read; cleared when a node loss hits the pool
+    checkpoint_pool_id: Optional[int] = None
     run_token: int = 0                # invalidates in-flight run events
     #: invalidates in-flight provision/stage/teardown events — bumped on
     #: every release and on a mid-phase re-price (node-loss degradation)
@@ -364,6 +372,12 @@ class LiveCounters:
     staged_in_bytes: float = 0.0
     staged_out_bytes: float = 0.0
     stage_in_saved_bytes: float = 0.0
+    # pilot (two-level scheduling) rollups — task batches fold in O(1)
+    pilots: int = 0
+    tasks_submitted: int = 0
+    tasks_done: int = 0
+    tasks_failed: int = 0
+    task_retries: int = 0
     busy_node_s: float = 0.0      # closed storage-allocation intervals
     open_nodes: int = 0           # sum of n_storage over open allocations
     open_node_start_s: float = 0.0
@@ -587,6 +601,74 @@ class Orchestrator:
         """Enqueue a job at virtual time ``at`` (default: now)."""
         self._check_spec(spec)
         job = self._make_job(spec, at)
+        self.engine.at(job.submit_time, lambda: self._arrive(job))
+        return job
+
+    def submit_pilot(
+        self,
+        pspec: PilotSpec,
+        tasks: tuple = (),
+        at: Optional[float] = None,
+    ) -> JobRecord:
+        """Submit a pilot: ONE top-level job that acquires a block of
+        ``n_compute`` compute nodes plus ONE pooled storage session, then
+        multiplexes ``tasks`` (sub-node :class:`~repro.pilot.TaskSpec`
+        instances) into its ``n_compute * slots_per_node`` slots with the
+        in-pilot :class:`~repro.pilot.TaskScheduler`.
+
+        The pilot flows through the ordinary queue/dispatch/negotiation
+        path — exactly one negotiation and one ``open_session`` grant per
+        attempt, leases from the `PoolManager` so the pilot-wide datasets
+        stay warm across the whole task stream — but its RUNNING phase is
+        driven by the task scheduler instead of ``run_time_s``: the engine
+        sees one coalesced event per completion *batch*, and task-level
+        faults/checkpoints requeue inside the pilot without touching the
+        global scheduler. Requires :meth:`enable_pools` (the session is
+        POOLED). Pilots are not preemptible; the job-level ``run`` fault
+        still applies to the whole attempt. Task-level faults consult the
+        injector's ``"task"`` phase — arm them *before* submitting (a pilot
+        submitted while the injector is passive skips the per-task oracle
+        call entirely, the hot-path fast lane).
+        """
+        spec = WorkflowSpec(
+            name=pspec.name,
+            n_compute=pspec.n_compute,
+            run_time_s=0.0,
+            max_retries=pspec.max_retries,
+            preemptible=False,
+            storage_spec=StorageSpec(
+                name=pspec.name,
+                lifetime=LifetimeClass.POOLED,
+                managers=("ephemeralfs",),
+                datasets=tuple(pspec.datasets),
+                stage_in_bytes=pspec.stage_in_bytes,
+                stage_out_bytes=pspec.stage_out_bytes,
+                n_streams=pspec.n_streams,
+            ),
+        )
+        self._check_spec(spec)
+        job = self._make_job(spec, at)
+        if self._faults_passive:
+            trip = None
+        else:
+            def trip(name: str) -> bool:
+                return self.faults.trip(name, "task")
+        pilot = PilotRun(
+            pspec,
+            engine=self.engine,
+            recorder=self.recorder,
+            counters=self.counters,
+            trip=trip,
+            job_id=job.job_id,
+        )
+        job.pilot = pilot
+        self.counters.pilots += 1
+        for t in tasks:
+            if isinstance(t, tuple):
+                tspec, n = t
+                pilot.submit(tspec, n)
+            else:
+                pilot.submit(t)
         self.engine.at(job.submit_time, lambda: self._arrive(job))
         return job
 
@@ -967,6 +1049,7 @@ class Orchestrator:
                 if ft and job.committed_run_s > 0
                 else 0.0
             ),
+            restore_pool_id=job.checkpoint_pool_id if ft else None,
         )
 
     def _start(self, job: JobRecord, session: StorageSession) -> None:
@@ -999,10 +1082,16 @@ class Orchestrator:
             # feed the EASY reservation ledger: when this attempt should
             # release, from the session's modeled costs (advisory — faults
             # and preemptions release earlier, and the ledger self-corrects)
-            self.scheduler.note_projected_release(
-                session.allocation,
-                self.engine.now + self._session_span_s(job, session),
-            )
+            pilot = job.pilot
+            if pilot is not None and pilot.spec.open_ended:
+                # open-ended pilots accept late tasks: they promise no
+                # release, so EASY must not book backfill holes against them
+                self.scheduler.note_projected_release(session.allocation, None)
+            else:
+                self.scheduler.note_projected_release(
+                    session.allocation,
+                    self.engine.now + self._session_span_s(job, session),
+                )
         rec = self.recorder
         if rec.enabled:
             rec.grant(job, session)
@@ -1071,7 +1160,62 @@ class Orchestrator:
             counters.resumes += 1
             counters.run_s_saved += job.committed_run_s
         self._transition(job, JobState.RUNNING)
-        self._schedule_run(job)
+        if job.pilot is not None:
+            self._begin_pilot(job)
+        else:
+            self._schedule_run(job)
+
+    # -- pilots (two-level scheduling) -----------------------------------------
+    def _begin_pilot(self, job: JobRecord) -> None:
+        """Hand the RUNNING phase to the pilot's task scheduler. The pilot
+        calls back into :meth:`_run_done` (with this attempt's run token)
+        when its task stream drains, so STAGING_OUT/TEARDOWN/DONE — and the
+        job-level ``run`` fault check — proceed exactly like a plain job."""
+        pilot = job.pilot
+        session = job.session
+        token = job.run_token
+        pm = self.provision.pool_manager
+        pool_nodes = 0
+        if pm is not None and job.pool_id is not None:
+            pool_nodes = len(pm.get(job.pool_id).storage_node_ids)
+
+        def reproject() -> None:
+            # the pilot's drain estimate moved (late tasks, resize): refresh
+            # the EASY ledger so backfill proofs track the new horizon
+            s = job.session
+            if s is None or s.allocation is None:
+                return
+            if pilot.spec.open_ended:
+                self.scheduler.note_projected_release(s.allocation, None)
+                return
+            self.scheduler.note_projected_release(
+                s.allocation,
+                self.engine.now
+                + pilot.projected_run_s(s)
+                + s.stage_out_time_s
+                + s.teardown_time_s,
+            )
+
+        pilot.begin(
+            session,
+            self.engine.now,
+            on_complete=lambda: self._run_done(job, token),
+            reproject=reproject,
+            pool_nodes=pool_nodes,
+        )
+
+    def _degrade_pilot(self, job: JobRecord, node_id: str) -> None:
+        """A running pilot's pool lost a backing node: degrade through the
+        chaos path instead of killing the attempt. Resident tasks requeue
+        inside the pilot with their committed checkpoint progress, the slot
+        pool shrinks in proportion to the lost backing, and the EASY
+        projection stretches. The lease survives — the pilot-wide datasets
+        are re-read by requeued task waves, never re-negotiated."""
+        now = self.engine.now
+        rec = self.recorder
+        if rec.enabled:
+            rec.degraded(job, node_id, now)
+        job.pilot.on_node_down(node_id, now)
 
     # -- RUNNING phase (checkpoint segments) ----------------------------------
     def _checkpoint_cost(self, job: JobRecord, session=None) -> float:
@@ -1083,7 +1227,10 @@ class Orchestrator:
     def _run_wall_s(self, job: JobRecord, session=None) -> float:
         """Modeled wall time the rest of this job's RUNNING phase occupies:
         the uncommitted remainder plus one checkpoint write per full
-        ``checkpoint_every_s`` segment inside it."""
+        ``checkpoint_every_s`` segment inside it. For pilots: the task
+        backlog spread over the slot pool, waves' I/O included."""
+        if job.pilot is not None:
+            return job.pilot.projected_run_s(session or job.session)
         spec = job.spec
         remaining = max(0.0, spec.run_time_s - job.committed_run_s)
         every = spec.checkpoint_every_s
@@ -1133,6 +1280,10 @@ class Orchestrator:
             job.spec.run_time_s, job._run_base + job._run_seg_s
         )
         job.checkpoints_committed += 1
+        if job.pool_id is not None and job.spec.checkpoint_bytes > 0:
+            # the write landed in the leased pool's warm tree: a resume
+            # re-leasing this exact pool skips the global-FS restore read
+            job.checkpoint_pool_id = job.pool_id
         self.counters.checkpoints += 1
         rec = self.recorder
         if rec.enabled:
@@ -1218,6 +1369,10 @@ class Orchestrator:
         job.run_token += 1           # any in-flight run event is now stale
         job.phase_token += 1         # ...and any in-flight phase event too
         job._preempt_pending = False # a draining final write died with the attempt
+        if job.pilot is not None:
+            # requeue the pilot's resident tasks (committed progress kept);
+            # a later attempt re-packs the surviving backlog
+            job.pilot.suspend(self.engine.now)
         if job.allocation is not None:
             t0 = job.alloc_started if job.alloc_started is not None else self.engine.now
             job.storage_intervals.append(
@@ -1309,6 +1464,8 @@ class Orchestrator:
         if victim.spec.checkpoint_every_s is not None:
             victim.committed_run_s = self._run_progress(victim, now)
             victim.checkpoints_committed += 1
+            if victim.pool_id is not None and victim.spec.checkpoint_bytes > 0:
+                victim.checkpoint_pool_id = victim.pool_id
             self.counters.checkpoints += 1
             cost = self._checkpoint_cost(victim)
             if cost > 0:
@@ -1443,6 +1600,7 @@ class Orchestrator:
             pools=pm.live_pools if pm is not None else (),
         )
         hit = {id(s) for s in blast.sessions}
+        blast_pool_ids = {p.pool_id for p in blast.pools}
         for job in self.jobs:
             if job.done:
                 continue
@@ -1450,11 +1608,29 @@ class Orchestrator:
                 job.warm_nodes = job.warm_nodes - {node_id}
             if node_id in job.staged_nodes:
                 job.staged_nodes = job.staged_nodes - {node_id}
+            if (
+                job.checkpoint_pool_id is not None
+                and job.checkpoint_pool_id in blast_pool_ids
+            ):
+                # the loss took a stripe of the resident checkpoint with it:
+                # the next resume must restore from the global FS again
+                job.checkpoint_pool_id = None
             session = job.session
             if session is None or id(session) not in hit:
                 continue
             if session.lease is None and session.can_degrade:
                 self._degrade_job(job, node_id)
+            elif (
+                job.pilot is not None
+                and session.lease is not None
+                and job.state is JobState.RUNNING
+                and pm is not None
+                and len(pm.get(job.pool_id).storage_node_ids) >= 2
+            ):
+                # a RUNNING pilot on a pool that survives the loss degrades
+                # (shrunk slots, requeued resident tasks) instead of dying;
+                # a pool left with nothing falls through to _fail_attempt
+                self._degrade_pilot(job, node_id)
             else:
                 phase = self._PHASE_OF_STATE.get(job.state)
                 if phase is not None:
@@ -1483,6 +1659,10 @@ class Orchestrator:
         pm = self.provision.pool_manager
         if pm is not None:
             pm.on_node_repair(node_id, now)
+        for job in self._running.values():
+            if job.pilot is not None:
+                # a degraded pilot that lost this node widens back
+                job.pilot.on_node_repair(node_id, now)
         rec = self.recorder
         if rec.enabled:
             rec.node_repair(node_id, now)

@@ -78,6 +78,13 @@ class CampaignReport:
     preemptions: int = 0                 # checkpoint-and-release requeues
     resumes: int = 0                     # attempts started with committed work
     run_s_saved: float = 0.0             # run seconds resumes did not replay
+    # pilot (two-level scheduling) rollups — folded from each pilot job's
+    # in-pilot TaskScheduler stats
+    n_pilots: int = 0
+    tasks_submitted: int = 0
+    tasks_done: int = 0
+    tasks_failed: int = 0
+    task_retries: int = 0
     #: makespan attribution from the span DAG (a
     #: :class:`repro.obs.profile.CriticalPath`); populated when
     #: :func:`summarize` is handed the campaign's trace recorder
@@ -109,6 +116,12 @@ class LiveReport:
     stage_in_bytes_saved: float
     makespan_s: float
     storage_node_utilization: float
+    # pilot (two-level scheduling) rollups
+    n_pilots: int = 0
+    tasks_submitted: int = 0
+    tasks_done: int = 0
+    tasks_failed: int = 0
+    task_retries: int = 0
 
 
 def live_report(
@@ -130,6 +143,11 @@ def live_report(
         stage_in_bytes_saved=counters.stage_in_saved_bytes,
         makespan_s=counters.makespan_s(now),
         storage_node_utilization=counters.utilization(n_storage_nodes, now),
+        n_pilots=counters.pilots,
+        tasks_submitted=counters.tasks_submitted,
+        tasks_done=counters.tasks_done,
+        tasks_failed=counters.tasks_failed,
+        task_retries=counters.task_retries,
     )
 
 
@@ -234,6 +252,16 @@ def summarize(
             span = min(end, t_end) - max(p.created_at, t_start)
             busy += len(p.allocation.storage_nodes) * max(0.0, span)
         utilization += busy / (n_storage_nodes * makespan)
+    n_pilots = tasks_submitted = tasks_done = tasks_failed = task_retries = 0
+    for j in jobs:
+        if j.pilot is None:
+            continue
+        n_pilots += 1
+        st = j.pilot.stats
+        tasks_submitted += st.submitted
+        tasks_done += st.done
+        tasks_failed += st.failed
+        task_retries += st.retries
     waits = [b.queue_wait_s for b in breakdowns]
     mean_phase = {
         s: sum(b.phase_s[s] for b in breakdowns) / len(breakdowns)
@@ -258,6 +286,11 @@ def summarize(
         preemptions=sum(j.preemptions for j in jobs),
         resumes=sum(j.resume_attempts for j in jobs),
         run_s_saved=sum(j.run_s_saved for j in jobs),
+        n_pilots=n_pilots,
+        tasks_submitted=tasks_submitted,
+        tasks_done=tasks_done,
+        tasks_failed=tasks_failed,
+        task_retries=task_retries,
         critical_path=_critical_path(trace),
         slo=_slo_report(trace),
     )
@@ -305,6 +338,12 @@ def format_report(report: CampaignReport, *, top_n: int = 10) -> str:
             f"fault tolerance: {report.checkpoints_committed} checkpoints, "
             f"{report.resumes} resumes ({report.run_s_saved:,.1f} s of run "
             f"time not replayed), {report.preemptions} preemptions"
+        )
+    if report.n_pilots:
+        lines.append(
+            f"pilots: {report.n_pilots} ({report.tasks_done:,} of "
+            f"{report.tasks_submitted:,} tasks done, {report.tasks_failed} "
+            f"failed, {report.task_retries} in-pilot task retries)"
         )
     if report.pool is not None:
         p = report.pool

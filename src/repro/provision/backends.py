@@ -108,6 +108,7 @@ class DataManagerBackend(abc.ABC):
         now: float = 0.0,
         staged_nodes: frozenset = frozenset(),
         restore_bytes: float = 0.0,
+        restore_pool_id: Optional[int] = None,
     ) -> Optional[StorageSession]:
         """Grant against the free pool; None when merely busy right now.
 
@@ -117,9 +118,13 @@ class DataManagerBackend(abc.ABC):
         them skips stage-in (the data, checkpoints included, is still in the
         warm tree; the skipped traffic is reported as ``saved_bytes``).
         ``restore_bytes`` is checkpoint state to read back from the global
-        FS on a cold landing; it joins the stage-in bill. Neither affects
-        *admission* (grant/deny), only the session's modeled staging costs,
-        so same-signature jobs stay interchangeable to dispatch buckets."""
+        FS on a cold landing; it joins the stage-in bill. For POOLED specs,
+        ``restore_pool_id`` names the pool the checkpoint was committed into
+        — a lease landing on that exact pool (ids are never reused) finds
+        the checkpoint still RESIDENT in the warm tree and skips the restore
+        read entirely. None of these affect *admission* (grant/deny), only
+        the session's modeled staging costs, so same-signature jobs stay
+        interchangeable to dispatch buckets."""
 
     @staticmethod
     def _score(bandwidth: float, spec: StorageSpec, provision_s: float, n_nodes: int) -> float:
@@ -260,10 +265,12 @@ class EphemeralFSBackend(_NodeBackend):
 
     def try_open(self, spec, offer, svc, *, n_compute=0, warm_nodes=frozenset(),
                  materialize=False, base_dir=None, now=0.0,
-                 staged_nodes=frozenset(), restore_bytes=0.0):
+                 staged_nodes=frozenset(), restore_bytes=0.0,
+                 restore_pool_id=None):
         if spec.lifetime is LifetimeClass.POOLED:
             return self._try_lease(spec, offer, svc, n_compute=n_compute, now=now,
-                                   restore_bytes=restore_bytes)
+                                   restore_bytes=restore_bytes,
+                                   restore_pool_id=restore_pool_id)
         if spec.lifetime is LifetimeClass.PERSISTENT:
             return self._try_create_pool(spec, offer, svc, n_compute=n_compute, now=now)
         alloc = svc.scheduler.try_submit(
@@ -306,7 +313,8 @@ class EphemeralFSBackend(_NodeBackend):
                 raise
         return session
 
-    def _try_lease(self, spec, offer, svc, *, n_compute, now, restore_bytes=0.0):
+    def _try_lease(self, spec, offer, svc, *, n_compute, now, restore_bytes=0.0,
+                   restore_pool_id=None):
         creq = JobRequest(spec.name, n_compute)
         # compute first (side-effect free): a failed compute fit must not
         # evict pool datasets for nothing
@@ -323,6 +331,16 @@ class EphemeralFSBackend(_NodeBackend):
             return None
         from ..pool.catalog import total_bytes
 
+        restore = restore_bytes
+        saved = lease.resident_bytes
+        if restore and restore_pool_id is not None and lease.pool_id == restore_pool_id:
+            # checkpoint residency (the warm-tree story extended to
+            # checkpoints): the resume re-leased the very pool its last
+            # commit was written into, and that pool has lost no node since
+            # (a loss clears the caller's remembered pool id) — the restore
+            # is a warm read inside the pool, not global-FS traffic
+            saved += restore
+            restore = 0.0
         return StorageSession(
             spec=spec,
             offer=offer,
@@ -335,11 +353,11 @@ class EphemeralFSBackend(_NodeBackend):
             teardown_time_s=0.0,   # the pool outlives the session
             # resuming leases re-attach warm: only datasets the catalog says
             # were evicted are in `missing` (re-staged); checkpoint state is
-            # read back from the global FS on top
+            # read back from the global FS on top unless it is still resident
             stage_in_bytes=spec.stage_in_bytes + total_bytes(lease.missing)
-            + restore_bytes,
+            + restore,
             stage_out_bytes=spec.stage_out_bytes,
-            saved_bytes=lease.resident_bytes,
+            saved_bytes=saved,
         )
 
     def _try_create_pool(self, spec, offer, svc, *, n_compute=0, now):
@@ -460,7 +478,8 @@ class GlobalFSBackend(DataManagerBackend):
 
     def try_open(self, spec, offer, svc, *, n_compute=0, warm_nodes=frozenset(),
                  materialize=False, base_dir=None, now=0.0,
-                 staged_nodes=frozenset(), restore_bytes=0.0):
+                 staged_nodes=frozenset(), restore_bytes=0.0,
+                 restore_pool_id=None):
         alloc = None
         if n_compute:
             alloc = svc.scheduler.try_submit(JobRequest(spec.name, n_compute))
@@ -516,7 +535,8 @@ class KVStoreBackend(_NodeBackend):
 
     def try_open(self, spec, offer, svc, *, n_compute=0, warm_nodes=frozenset(),
                  materialize=False, base_dir=None, now=0.0,
-                 staged_nodes=frozenset(), restore_bytes=0.0):
+                 staged_nodes=frozenset(), restore_bytes=0.0,
+                 restore_pool_id=None):
         alloc = svc.scheduler.try_submit(
             JobRequest(spec.name, n_compute, storage=spec.to_request())
         )
@@ -583,7 +603,8 @@ class NullBackend(DataManagerBackend):
 
     def try_open(self, spec, offer, svc, *, n_compute=0, warm_nodes=frozenset(),
                  materialize=False, base_dir=None, now=0.0,
-                 staged_nodes=frozenset(), restore_bytes=0.0):
+                 staged_nodes=frozenset(), restore_bytes=0.0,
+                 restore_pool_id=None):
         alloc = None
         if n_compute:
             alloc = svc.scheduler.try_submit(JobRequest(spec.name, n_compute))

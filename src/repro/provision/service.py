@@ -232,6 +232,7 @@ class ProvisioningService:
         offer: Optional[Offer] = None,
         staged_nodes: frozenset = frozenset(),
         restore_bytes: float = 0.0,
+        restore_pool_id: Optional[int] = None,
     ) -> Optional[StorageSession]:
         """Negotiate and grant, or ``None`` when the cluster is merely busy.
 
@@ -248,8 +249,11 @@ class ProvisioningService:
         (storage nodes still holding the fully staged inputs of an earlier
         attempt: a grant landing entirely on them skips stage-in) and
         ``restore_bytes`` (checkpoint state read back from the global FS on
-        a cold landing) — admission answers are unchanged, only modeled
-        staging costs move (see :meth:`DataManagerBackend.try_open`).
+        a cold landing); POOLED resumes additionally pass
+        ``restore_pool_id`` so a lease landing back on the checkpoint's own
+        pool skips the restore read (residency) — admission answers are
+        unchanged, only modeled staging costs move (see
+        :meth:`DataManagerBackend.try_open`).
         """
         now = self._now(now)
         if offer is None:
@@ -266,6 +270,7 @@ class ProvisioningService:
             now=now,
             staged_nodes=staged_nodes,
             restore_bytes=restore_bytes,
+            restore_pool_id=restore_pool_id,
         )
         if session is not None:
             self.stats.record_open(offer.backend)

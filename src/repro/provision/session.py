@@ -192,6 +192,25 @@ class StorageSession:
             self.stage_out_bytes, self.fs_model, self.service.globalfs_model
         )
 
+    def stage_time_s(self, nbytes: float, direction: str = "in") -> float:
+        """Modeled wall time to move ``nbytes`` through this session in one
+        aggregate transfer (``"in"``: global FS feeding the data manager;
+        ``"out"``: the reverse). This is the batch-pricing surface for pilot
+        task waves — one call prices a whole wave's coalesced I/O through
+        the memoized, degraded-aware perfmodel path instead of one model
+        walk per task. Zero for storage-less sessions."""
+        if nbytes <= 0 or self.fs_model is None:
+            return 0.0
+        if direction == "in":
+            return self._staging_time(
+                nbytes, self.service.globalfs_model, self.fs_model
+            )
+        if direction == "out":
+            return self._staging_time(
+                nbytes, self.fs_model, self.service.globalfs_model
+            )
+        raise ValueError(f"direction must be 'in' or 'out', got {direction!r}")
+
     def checkpoint_write_s(self, nbytes: float) -> float:
         """Modeled wall time for one checkpoint commit: the compute side
         bursts ``nbytes`` into this session's data manager, so the cost is

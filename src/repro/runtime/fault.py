@@ -162,10 +162,15 @@ class FaultSpec:
     stage_in_fail_p: float = 0.0
     run_fail_p: float = 0.0
     stage_out_fail_p: float = 0.0
+    #: per-attempt trip probability for one *task* inside a pilot (the
+    #: in-pilot scheduler consults phase "task" once per completed attempt;
+    #: plain jobs never draw from it)
+    task_fail_p: float = 0.0
     seed: int = 0
 
     def __post_init__(self) -> None:
-        for f in ("provision_fail_p", "stage_in_fail_p", "run_fail_p", "stage_out_fail_p"):
+        for f in ("provision_fail_p", "stage_in_fail_p", "run_fail_p",
+                  "stage_out_fail_p", "task_fail_p"):
             p = getattr(self, f)
             if not 0.0 <= p <= 1.0:
                 raise ValueError(f"{f} must be in [0, 1], got {p}")
@@ -179,6 +184,7 @@ class FaultInjector:
         "stage_in": "stage_in_fail_p",
         "run": "run_fail_p",
         "stage_out": "stage_out_fail_p",
+        "task": "task_fail_p",
     }
 
     def __init__(self, spec: FaultSpec | None = None):
@@ -198,6 +204,7 @@ class FaultInjector:
             or s.stage_in_fail_p > 0.0
             or s.run_fail_p > 0.0
             or s.stage_out_fail_p > 0.0
+            or s.task_fail_p > 0.0
         )
 
     def trip(self, job_name: str, phase: str) -> bool:

@@ -1,0 +1,557 @@
+"""PR 10: pilot-style many-task execution (two-level scheduling).
+
+Four pillars:
+
+* unit coverage for the in-pilot `TaskScheduler` — wave packing with
+  head-blocking, batch pricing, quantum coalescing, task-level fault
+  retries, and checkpoint-committed interrupts;
+* orchestrator integration — `submit_pilot` pays exactly ONE negotiation
+  and ONE pooled session per pilot however many tasks run inside, report
+  and live counters agree, and the chaos path degrades a RUNNING pilot
+  in place (slots shrink, tasks requeue) instead of killing it;
+* the checkpoint-residency satellite — a pooled resume whose checkpoint
+  is still RESIDENT in its pool skips the global-FS restore read, with
+  the re-staged bytes pinned exactly;
+* determinism regressions — 500 pilots / 50k tasks replay bit-for-bit
+  through the legacy and indexed dispatchers, and a pilots-off campaign
+  (the PR 4 / PR 9 shape) is untouched by the refactor.
+"""
+
+import dataclasses
+import random
+
+import pytest
+
+from repro.chaos import NodeFaultModel
+from repro.core import dom_cluster, synthetic_cluster
+from repro.orchestrator import (
+    BackfillPolicy,
+    JobState,
+    Orchestrator,
+    PilotSpec,
+    TaskSpec,
+    WorkflowSpec,
+    summarize,
+)
+from repro.pilot import TaskScheduler
+from repro.pool import DatasetRef
+from repro.provision import LifetimeClass, ProvisioningService, StorageSpec
+from repro.runtime import FaultInjector, FaultSpec
+
+GB = 1e9
+
+
+# -- TaskScheduler units ------------------------------------------------------
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        TaskSpec("", run_time_s=1.0)
+    with pytest.raises(ValueError):
+        TaskSpec("t", run_time_s=-1.0)
+    with pytest.raises(ValueError):
+        TaskSpec("t", run_time_s=1.0, cores=0.0)
+    with pytest.raises(ValueError):
+        TaskSpec("t", run_time_s=1.0, checkpoint_every_s=0.0)
+    with pytest.raises(ValueError):
+        PilotSpec("p", n_compute=0)
+    with pytest.raises(ValueError):
+        PilotSpec("p", n_compute=1, slots_per_node=0)
+    with pytest.raises(ValueError):
+        TaskScheduler(slots=0)
+
+
+def test_pack_fills_slots_and_head_blocks():
+    ts = TaskScheduler(slots=4, slots_per_node=4)
+    ts.submit(TaskSpec("small", run_time_s=10.0, cores=0.25), n=2)  # 1 slot each
+    ts.submit(TaskSpec("big", run_time_s=10.0, cores=1.0))          # 4 slots
+    ts.submit(TaskSpec("tail", run_time_s=10.0, cores=0.25))
+    # the two smalls fit; "big" needs all 4 slots and blocks the tail
+    assert ts.pack(0.0) == 2
+    assert ts.busy_slots == 2 and ts.n_queued == 2
+    assert ts.pack(0.0) == 0                       # head-blocked, no starvation
+    ts.advance(10.0)
+    assert ts.pack(10.0) == 1                      # big runs alone
+    assert ts.busy_slots == 4
+    ts.advance(20.0)
+    assert ts.pack(20.0) == 1                      # then the tail
+    ts.advance(30.0)
+    assert ts.drained
+    assert ts.stats.done == 4 and ts.stats.waves == 3
+
+
+def test_task_needing_more_slots_than_pilot_rejected():
+    ts = TaskScheduler(slots=2, slots_per_node=2)
+    with pytest.raises(ValueError, match="needs"):
+        ts.submit(TaskSpec("huge", run_time_s=1.0, cores=2.0))
+
+
+def test_wave_io_priced_once_as_aggregate():
+    calls = []
+
+    def price(nbytes):
+        calls.append(nbytes)
+        return 1.0
+
+    ts = TaskScheduler(slots=8)
+    ts.price_in = price
+    ts.submit(TaskSpec("t", run_time_s=10.0, cores=1.0, stage_in_bytes=GB), n=8)
+    assert ts.pack(0.0) == 8
+    assert calls == [8 * GB]                       # one call for the whole wave
+    # all eight ends coalesce into one batch at 11.0 (1s wave I/O + 10s run)
+    assert ts.next_wake() == pytest.approx(11.0)
+    completed, failed, requeued = ts.advance(11.0)
+    assert (completed, failed, requeued) == (8, 0, 0)
+
+
+def test_quantum_rounds_heterogeneous_ends_onto_grid():
+    ts = TaskScheduler(slots=4, quantum_s=5.0)
+    ts.submit(TaskSpec("a", run_time_s=3.0, cores=1.0))
+    ts.submit(TaskSpec("b", run_time_s=4.2, cores=1.0))
+    ts.submit(TaskSpec("c", run_time_s=9.9, cores=1.0))
+    ts.pack(0.0)
+    assert ts.next_wake() == pytest.approx(5.0)
+    assert ts.advance(5.0)[0] == 2                 # a and b land on one grid point
+    assert ts.advance(10.0)[0] == 1
+
+
+def test_task_faults_retry_then_fail():
+    ts = TaskScheduler(slots=1, trip=lambda name: True)
+    ts.submit(TaskSpec("doomed", run_time_s=5.0, cores=1.0, max_retries=2))
+    t = 0.0
+    for _ in range(3):                             # attempts 0, 1, 2 all trip
+        assert ts.pack(t) == 1
+        t = ts.next_wake()
+        ts.advance(t)
+    assert ts.drained
+    assert ts.stats.failed == 1 and ts.stats.retries == 2
+    assert ts.pending_run_s == 0.0                 # aggregates fully unwound
+
+
+def test_faulted_task_resumes_from_last_checkpoint():
+    trips = iter([True, False])
+    ts = TaskScheduler(slots=1, trip=lambda name: next(trips))
+    ts.submit(TaskSpec("ckpt", run_time_s=30.0, cores=1.0, checkpoint_every_s=10.0))
+    ts.pack(0.0)
+    ts.advance(30.0)                               # trips; 20s committed
+    rec = ts._queue[0]
+    assert rec.committed_run_s == pytest.approx(20.0)
+    ts.pack(30.0)
+    assert ts.next_wake() == pytest.approx(40.0)   # only the last 10s replays
+    ts.advance(40.0)
+    assert ts.stats.done == 1 and ts.stats.resumes == 1
+    assert ts.stats.run_s_saved == pytest.approx(20.0)
+
+
+def test_interrupt_commits_checkpoint_progress_without_retry_cost():
+    ts = TaskScheduler(slots=2)
+    ts.submit(TaskSpec("t", run_time_s=50.0, cores=1.0, checkpoint_every_s=10.0,
+                       max_retries=0), n=2)
+    ts.pack(0.0)
+    assert ts.interrupt(25.0) == 2                 # mid-run sweep
+    assert ts.busy_slots == 0 and ts.n_queued == 2
+    assert all(r.committed_run_s == pytest.approx(20.0) for r in ts._queue)
+    ts.pack(25.0)
+    assert ts.next_wake() == pytest.approx(55.0)   # 30s remain, not 50
+    ts.advance(55.0)
+    assert ts.drained and ts.stats.failed == 0     # no max_retries consumed
+    assert ts.stats.interrupts == 1
+
+
+def test_lost_slots_shrink_but_never_deadlock():
+    ts = TaskScheduler(slots=4)
+    ts.set_lost_slots(99)
+    assert ts.effective_slots == 1                 # floor of one slot
+    ts.submit(TaskSpec("t", run_time_s=1.0, cores=1.0), n=3)
+    assert ts.pack(0.0) == 1                       # drains one at a time
+    ts.set_lost_slots(0)
+    assert ts.effective_slots == 4
+
+
+# -- orchestrator integration -------------------------------------------------
+
+def _pilot_orch(recorder=None, **kw):
+    orch = Orchestrator(dom_cluster(), recorder=recorder, **kw)
+    orch.enable_pools(ttl_s=None).create_pool(nodes=2)
+    return orch
+
+
+def test_pilot_pays_one_negotiation_and_one_session_for_many_tasks():
+    from repro.obs import TraceRecorder
+
+    rec = TraceRecorder()
+    orch = _pilot_orch(recorder=rec)
+    spec = PilotSpec("p0", n_compute=2, slots_per_node=4,
+                     datasets=(DatasetRef("train", 20 * GB),),
+                     stage_in_bytes=GB, stage_out_bytes=GB)
+    task = TaskSpec("t", run_time_s=10.0, cores=0.25,
+                    stage_in_bytes=0.1 * GB, stage_out_bytes=0.01 * GB)
+    job = orch.submit_pilot(spec, tasks=((task, 200),))
+    orch.engine.run()
+    assert job.state is JobState.DONE
+    assert job.pilot.stats.done == 200
+    # the acquisition amortizes: one negotiation, one session, 200 tasks
+    assert rec.counts["negotiation.scored"] == 1
+    assert rec.counts["sessions.opened.ephemeralfs"] == 1
+    assert rec.counts["pilot.started"] == 1
+    assert rec.counts["pilot.tasks_done"] == 200
+    # tasks packed beyond the slot pool: 200 tasks through 8 slots
+    assert job.pilot.tasks.base_slots == 8
+    assert rec.counts["pilot.batches"] < 200 / 2   # coalesced, not per-task
+    # the pilot rides the ordinary lifecycle: full phase history
+    states = [s for s, _ in job.history]
+    assert states == [
+        JobState.QUEUED, JobState.ALLOCATED, JobState.PROVISIONING,
+        JobState.STAGING_IN, JobState.RUNNING, JobState.STAGING_OUT,
+        JobState.TEARDOWN, JobState.DONE,
+    ]
+
+
+def test_report_and_live_counters_agree_on_task_totals():
+    orch = _pilot_orch()
+    task = TaskSpec("t", run_time_s=5.0, cores=0.5)
+    jobs = [
+        orch.submit_pilot(PilotSpec(f"p{i}", n_compute=1, slots_per_node=4),
+                          tasks=((task, 40),))
+        for i in range(3)
+    ]
+    orch.engine.run()
+    live = orch.live_report()
+    assert live.n_pilots == 3
+    assert live.tasks_submitted == live.tasks_done == 120
+    rep = summarize(jobs, n_storage_nodes=4, pools=orch.pools)
+    assert rep.n_pilots == 3
+    assert rep.tasks_done == 120 and rep.tasks_failed == 0
+    assert rep.tasks_submitted == orch.counters.tasks_submitted
+
+
+def test_empty_pilot_completes_immediately():
+    orch = _pilot_orch()
+    job = orch.submit_pilot(PilotSpec("empty", n_compute=1))
+    orch.engine.run()
+    assert job.state is JobState.DONE
+    assert job.pilot.stats.submitted == 0
+
+
+def test_late_submission_packs_into_running_pilot():
+    orch = _pilot_orch()
+    spec = PilotSpec("late", n_compute=1, slots_per_node=2, open_ended=False)
+    job = orch.submit_pilot(
+        spec, tasks=((TaskSpec("warm", run_time_s=50.0, cores=0.5), 2),))
+    orch.engine.at(10.0, lambda: job.pilot.submit(
+        TaskSpec("late", run_time_s=5.0, cores=0.5), 2))
+    orch.engine.run()
+    assert job.state is JobState.DONE
+    assert job.pilot.stats.done == 4
+
+
+def test_task_faults_consume_task_phase_not_run_phase():
+    faults = FaultInjector(FaultSpec(task_fail_p=0.3, seed=3))
+    orch = _pilot_orch(faults=faults)
+    task = TaskSpec("t", run_time_s=10.0, cores=0.25, max_retries=3,
+                    checkpoint_every_s=4.0)
+    job = orch.submit_pilot(PilotSpec("p", n_compute=2, slots_per_node=4),
+                            tasks=((task, 50),))
+    orch.engine.run()
+    assert job.state is JobState.DONE
+    assert job.attempt == 0                        # global scheduler untouched
+    st = job.pilot.stats
+    assert st.done == 50 and st.retries > 0
+    assert st.resumes == st.retries                # every retry resumed warm
+    assert st.run_s_saved > 0
+    assert all(phase == "task" for _n, phase in faults.trips)
+
+
+# -- chaos: degrade in place --------------------------------------------------
+
+def _chaos_pilot(schedule, mttr_s=300.0, pool_nodes=3, extra_pool=False):
+    from repro.obs import TraceRecorder
+
+    rec = TraceRecorder()
+    orch = Orchestrator(synthetic_cluster(8, 4), recorder=rec)
+    mgr = orch.enable_pools(ttl_s=None)
+    mgr.create_pool(nodes=pool_nodes)
+    if extra_pool:
+        mgr.create_pool(nodes=2)
+    orch.enable_chaos(NodeFaultModel(
+        [n.node_id for n in orch.scheduler.cluster.storage_nodes],
+        mttr_s=mttr_s, schedule=schedule,
+    ))
+    task = TaskSpec("t", run_time_s=30.0, cores=0.25, checkpoint_every_s=10.0)
+    job = orch.submit_pilot(
+        PilotSpec("p", n_compute=2, slots_per_node=4,
+                  datasets=(DatasetRef("d", 10 * GB),)),
+        tasks=((task, 64),))
+    orch.engine.run()
+    return job, rec, orch
+
+
+def test_node_loss_degrades_running_pilot_in_place():
+    job, rec, orch = _chaos_pilot(((50.0, "sn00000"),))
+    assert job.state is JobState.DONE
+    assert job.attempt == 0                        # never requeued globally
+    assert rec.counts["chaos.degraded"] == 1
+    assert rec.counts["pilot.resized"] == 2        # shrink + repair widen
+    resized = [e for e in rec.events if e[0] == "pilot_resized"]
+    shrink, widen = resized
+    assert shrink[3]["cause"] == "sn00000" and shrink[3]["n_slots"] < 8
+    assert widen[3]["cause"] == "repair" and widen[3]["n_slots"] == 8
+    st = job.pilot.stats
+    assert st.interrupts >= 1 and st.resumes > 0   # residents requeued warm
+    assert st.run_s_saved > 0
+    assert not orch.scheduler.down_storage_nodes
+
+
+def test_pool_collapse_requeues_pilot_through_global_path():
+    # the pilot's 2-node pool loses BOTH nodes and collapses (< 2
+    # survivors: no degraded mode): the attempt fails and the retry leases
+    # the second pool through the ordinary global path, backlog intact
+    job, rec, orch = _chaos_pilot(((50.0, "sn00000"), (50.0, "sn00001")),
+                                  pool_nodes=2, extra_pool=True)
+    assert job.state is JobState.DONE
+    assert job.attempt >= 1                        # global requeue this time
+    assert job.pilot.stats.done == 64              # backlog survived suspend
+    assert job.pilot.stats.interrupts >= 1
+
+
+# -- checkpoint residency (PR 5 satellite) ------------------------------------
+
+def test_pooled_resume_skips_restore_read_when_checkpoint_resident():
+    # seed 1: exactly one run fault -> one resume through the pool
+    faults = FaultInjector(FaultSpec(run_fail_p=0.6, seed=1))
+    orch = Orchestrator(dom_cluster(), faults=faults)
+    orch.enable_pools(ttl_s=None).create_pool(nodes=2)
+    job = orch.submit(WorkflowSpec(
+        "j", 1, use_pool=True, datasets=(DatasetRef("d", 5 * GB),),
+        run_time_s=100.0, checkpoint_every_s=10.0, checkpoint_bytes=2 * GB,
+        max_retries=6))
+    orch.engine.run()
+    assert job.state is JobState.DONE and job.attempt == 1
+    assert job.checkpoint_pool_id == job.pool_id
+    # the resume re-leased the checkpoint's own pool: the 5 GB dataset was
+    # a warm hit AND the 2 GB restore read never touched the global FS —
+    # total staged bytes stay pinned at the first attempt's dataset miss
+    assert job.staged_in_bytes == pytest.approx(5 * GB)
+    assert job.stage_in_saved_bytes == pytest.approx(7 * GB)
+
+
+def test_restore_read_paid_when_landing_on_a_different_pool():
+    svc = ProvisioningService(dom_cluster())
+    svc.ensure_pools(ttl_s=None)
+    pool = svc.pool_manager.create_pool(nodes=2)
+    spec = StorageSpec("resume", lifetime=LifetimeClass.POOLED,
+                       managers=("ephemeralfs",))
+    cold = svc.try_open_session(spec, n_compute=1, now=0.0,
+                                restore_bytes=2 * GB, restore_pool_id=None)
+    assert cold.stage_in_bytes == pytest.approx(2 * GB)   # global-FS read
+    assert cold.saved_bytes == 0.0
+    cold.release(0.5)
+    warm = svc.try_open_session(spec, n_compute=1, now=1.0,
+                                restore_bytes=2 * GB,
+                                restore_pool_id=pool.pool_id)
+    assert warm.stage_in_bytes == 0.0                     # resident: skipped
+    assert warm.saved_bytes == pytest.approx(2 * GB)
+    warm.release(1.5)
+    # a stale pool id (pool retired, id never reused) pays the full read
+    stale = svc.try_open_session(spec, n_compute=1, now=2.0,
+                                 restore_bytes=2 * GB,
+                                 restore_pool_id=pool.pool_id + 999)
+    assert stale.stage_in_bytes == pytest.approx(2 * GB)
+    stale.release(2.5)
+
+
+def test_node_loss_invalidates_checkpoint_residency():
+    faults = FaultInjector(FaultSpec(run_fail_p=0.6, seed=1))
+    orch = Orchestrator(synthetic_cluster(8, 4), faults=faults)
+    orch.enable_pools(ttl_s=None).create_pool(nodes=2)
+    orch.enable_chaos(NodeFaultModel(
+        [n.node_id for n in orch.scheduler.cluster.storage_nodes],
+        mttr_s=5000.0, schedule=((30.0, "sn00000"),),
+    ))
+    job = orch.submit(WorkflowSpec(
+        "j", 1, use_pool=True, run_time_s=100.0,
+        checkpoint_every_s=10.0, checkpoint_bytes=2 * GB, max_retries=8))
+    orch.engine.run()
+    assert job.state is JobState.DONE
+    # the blast hit the checkpoint's pool mid-run: residency was cleared,
+    # so whatever resumes happened re-read their restore bytes
+    assert job.checkpoint_pool_id is None or job.staged_in_bytes > 0
+
+
+# -- determinism --------------------------------------------------------------
+
+def _mixed_pilot_specs(seed, n_pilots, tasks_per_pilot):
+    rng = random.Random(seed)
+    ds = [DatasetRef(f"d{k}", (6.0 + 2.0 * k) * GB) for k in range(3)]
+    out = []
+    for i in range(n_pilots):
+        pspec = PilotSpec(
+            f"pilot{i:03d}", n_compute=rng.randint(1, 3),
+            slots_per_node=rng.choice((2, 4, 8)),
+            datasets=(ds[rng.randint(0, 2)],),
+            stage_in_bytes=rng.uniform(0, 2) * GB,
+            completion_quantum_s=rng.choice((0.0, 5.0)),
+        )
+        task = TaskSpec(
+            f"t{i:03d}", run_time_s=rng.uniform(5, 40),
+            cores=rng.choice((0.125, 0.25, 0.5)),
+            stage_in_bytes=rng.uniform(0, 0.2) * GB,
+            checkpoint_every_s=rng.choice((None, 5.0)),
+        )
+        out.append((pspec, task, tasks_per_pilot))
+    return out
+
+
+def _pilot_fingerprint(incremental, *, seed=11, n_pilots=500,
+                       tasks_per_pilot=100, chaos=False):
+    orch = Orchestrator(synthetic_cluster(16, 6), policy=BackfillPolicy(),
+                        incremental=incremental,
+                        faults=FaultInjector(FaultSpec(task_fail_p=0.02,
+                                                       seed=7)))
+    orch.enable_pools(ttl_s=None).create_pool(nodes=3, cap_bytes=200 * GB)
+    if chaos:
+        orch.enable_chaos(NodeFaultModel(
+            [n.node_id for n in orch.scheduler.cluster.storage_nodes],
+            mttf_s=6000.0, mttr_s=400.0, horizon_s=2000.0, seed=9,
+        ))
+    jobs = [
+        orch.submit_pilot(pspec, tasks=((task, n),), at=i * 1.0)
+        for i, (pspec, task, n) in enumerate(
+            _mixed_pilot_specs(seed, n_pilots, tasks_per_pilot))
+    ]
+    orch.engine.run()
+    assert all(j.state is JobState.DONE for j in jobs)
+    # a task may exhaust its retries under task_fail_p; every task must
+    # still reach a terminal state
+    assert sum(j.pilot.stats.terminal for j in jobs) == n_pilots * tasks_per_pilot
+    return [
+        (j.spec.name, tuple(j.history), tuple(j.alloc_history), j.attempt,
+         dataclasses.astuple(j.pilot.stats))
+        for j in jobs
+    ]
+
+
+@pytest.mark.slow
+def test_50k_tasks_bit_identical_legacy_vs_indexed():
+    """500 pilots x 100 tasks: histories, granted nodes, attempts, and the
+    full per-pilot task statistics replay identically through the legacy
+    and indexed dispatchers, and run-to-run."""
+    legacy = _pilot_fingerprint(False)
+    indexed = _pilot_fingerprint(True)
+    again = _pilot_fingerprint(True)
+    assert legacy == indexed
+    assert indexed == again
+
+
+def test_pilot_campaign_deterministic_under_chaos():
+    legacy = _pilot_fingerprint(False, n_pilots=60, tasks_per_pilot=40,
+                                chaos=True)
+    indexed = _pilot_fingerprint(True, n_pilots=60, tasks_per_pilot=40,
+                                 chaos=True)
+    assert legacy == indexed
+
+
+def _plain_fingerprint(incremental, seed=13, n_jobs=200):
+    """A pilots-off campaign in the PR 4 / PR 9 shape: the pilot refactor
+    must leave it bit-for-bit untouched."""
+    rng = random.Random(seed)
+    orch = Orchestrator(synthetic_cluster(16, 6), policy=BackfillPolicy(),
+                        incremental=incremental)
+    orch.enable_pools(ttl_s=None).create_pool(nodes=2, cap_bytes=80 * GB)
+    orch.enable_chaos(NodeFaultModel(
+        [n.node_id for n in orch.scheduler.cluster.storage_nodes],
+        mttf_s=4000.0, mttr_s=350.0, horizon_s=1200.0, seed=9,
+    ))
+    ds = [DatasetRef(f"d{k}", (8.0 + 3.0 * k) * GB) for k in range(3)]
+    specs = []
+    for i in range(n_jobs):
+        if rng.random() < 0.4:
+            specs.append(WorkflowSpec(
+                f"j{i:03d}", rng.randint(1, 3), use_pool=True,
+                datasets=(ds[rng.randint(0, 2)],),
+                run_time_s=rng.uniform(10, 60), max_retries=6))
+        else:
+            specs.append(WorkflowSpec(
+                f"j{i:03d}", rng.randint(1, 4),
+                run_time_s=rng.uniform(10, 60), max_retries=6))
+    jobs = orch.run_campaign(specs,
+                             submit_times=[i * 1.5 for i in range(n_jobs)])
+    assert all(j.state is JobState.DONE for j in jobs)
+    return [(j.spec.name, tuple(j.history), tuple(j.alloc_history), j.attempt)
+            for j in jobs]
+
+
+def test_pilots_off_replay_is_bit_for_bit_unchanged():
+    assert _plain_fingerprint(False) == _plain_fingerprint(True)
+
+
+# -- obs ----------------------------------------------------------------------
+
+def test_doctor_flags_underpacked_pilot():
+    from repro.obs import TraceRecorder, diagnose
+
+    rec = TraceRecorder()
+    orch = _pilot_orch(recorder=rec)
+    # 32 slots, a trickle of staggered 1-slot tasks: occupancy ~3%
+    job = orch.submit_pilot(
+        PilotSpec("lazy", n_compute=4, slots_per_node=8),
+        tasks=tuple((TaskSpec(f"drip{i}", run_time_s=10.0 + i, cores=0.125), 1)
+                    for i in range(6)))
+    orch.engine.run()
+    assert job.state is JobState.DONE
+    advisories = diagnose(rec)
+    adv = next((a for a in advisories if a.code == "pilot_underpacked"), None)
+    assert adv is not None
+    assert adv.evidence["worst_pilot"] == "lazy"
+    assert adv.evidence["worst_mean_occupancy"] < 0.5
+
+
+def test_well_packed_pilot_not_flagged():
+    from repro.obs import TraceRecorder, diagnose
+
+    rec = TraceRecorder()
+    orch = _pilot_orch(recorder=rec)
+    job = orch.submit_pilot(
+        PilotSpec("busy", n_compute=1, slots_per_node=4),
+        tasks=((TaskSpec("t", run_time_s=10.0, cores=0.25), 100),))
+    orch.engine.run()
+    assert job.state is JobState.DONE
+    assert not any(a.code == "pilot_underpacked" for a in diagnose(rec))
+
+
+def test_pilot_occupancy_series_recorded():
+    from repro.obs import MetricsHub, TraceRecorder
+
+    hub = MetricsHub()
+    rec = TraceRecorder(metrics=hub)
+    orch = _pilot_orch(recorder=rec)
+    orch.submit_pilot(PilotSpec("p", n_compute=1, slots_per_node=4),
+                      tasks=((TaskSpec("t", run_time_s=10.0, cores=0.25), 60),))
+    orch.engine.run()
+    series = hub.series["pilot_occupancy/p"]
+    assert len(series.items()) > 0
+    assert all(0.0 <= v <= 1.0 for _t, v in series.items())
+
+
+def test_open_ended_pilot_makes_no_release_promise():
+    # an open-ended pilot must never enter the EASY projection ledger
+    # (late submissions would break the promise); a closed pilot does
+    seen = {}
+
+    def check(orch, job):
+        def probe():
+            if job.allocation is not None:
+                seen[job.spec.name] = orch.scheduler.projected_release_of(
+                    job.allocation)
+        orch.engine.at(5.0, probe)
+
+    for open_ended in (False, True):
+        orch = _pilot_orch()
+        job = orch.submit_pilot(
+            PilotSpec("open" if open_ended else "closed", n_compute=1,
+                      open_ended=open_ended),
+            tasks=((TaskSpec("t", run_time_s=10.0, cores=1.0), 4),))
+        check(orch, job)
+        orch.engine.run()
+        assert job.state is JobState.DONE
+    assert seen["closed"] is not None
+    assert seen["open"] is None

@@ -40,8 +40,12 @@ import sys
 #: packages whose modules run inside the campaign hot loop (``serving``
 #: joined in PR 8: its batch/replica/autoscale steps are heap events on
 #: the same virtual clock, so the same layering applies; ``chaos`` joined
-#: in PR 9: fault schedules and retry backoff fire as heap events too)
-HOT_PACKAGES = ("core", "orchestrator", "pool", "provision", "serving", "chaos")
+#: in PR 9: fault schedules and retry backoff fire as heap events too;
+#: ``pilot`` joined in PR 10: task waves pack/complete on the heap at
+#: up-to-millions-of-tasks scale, the hottest loop in the repo)
+HOT_PACKAGES = (
+    "core", "orchestrator", "pilot", "pool", "provision", "serving", "chaos",
+)
 
 #: the one obs module import-time code may touch
 ALLOWED = "repro.obs.trace"
